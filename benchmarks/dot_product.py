@@ -1,0 +1,82 @@
+"""Paper §III.B / Fig. 4: the 64-length dot-product compute flow.
+
+(a) Exactness: the pure-integer flow (absorbed micro-exponent shifts, one
+    final float multiply) equals the dequantized-float dot BIT-EXACTLY —
+    the property that lets hardware drop the per-group float multipliers.
+(b) Multiplier accounting (Fig. 4, analytic — no RTL here): per 64-length
+    PE dot, HiF4 needs 1 small FP + 1 large INT multiplier at the tree
+    root; NVFP4 (4 groups of 16) needs 4 + 4. The paper's area claim
+    (~1/3 incremental area, ~-10% power) follows from this 6-multiplier
+    elimination; we reproduce the count, not the synthesis.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hif4, nvfp4
+from repro.core.qlinear import hif4_dot_fixed_point
+
+
+def run(n_trials: int = 64, seed: int = 0) -> dict:
+    key = jax.random.PRNGKey(seed)
+    exact = 0
+    for t in range(n_trials):
+        k1, k2 = jax.random.split(jax.random.fold_in(key, t))
+        scale = 2.0 ** ((t % 13) - 6)
+        a = jax.random.normal(k1, (64,), jnp.float32) * scale
+        b = jax.random.normal(k2, (64,), jnp.float32) * scale
+        fp = float(hif4_dot_fixed_point(a, b))
+        ga, gb = hif4.quantize_groups(a[None]), hif4.quantize_groups(b[None])
+        deq = float(
+            jnp.sum(hif4.dequantize_groups(ga) * hif4.dequantize_groups(gb))
+        )
+        exact += int(fp == deq)
+
+    # NVFP4 absorbed-int flow for comparison (4 groups of 16, S3P1 halves)
+    k1, k2 = jax.random.split(jax.random.fold_in(key, 999))
+    a = jax.random.normal(k1, (64,), jnp.float32)
+    b = jax.random.normal(k2, (64,), jnp.float32)
+    ga = nvfp4.quantize_groups(a.reshape(4, 16))
+    gb = nvfp4.quantize_groups(b.reshape(4, 16))
+    ia, sa = nvfp4.to_absorbed_int(ga)
+    ib, sb = nvfp4.to_absorbed_int(gb)
+    acc = jnp.sum(ia.astype(jnp.int32) * ib.astype(jnp.int32), axis=-1)
+    nv_fp = float(jnp.sum(sa * sb * acc.astype(jnp.float32)))
+    nv_deq = float(
+        jnp.sum(nvfp4.dequantize_groups(ga) * nvfp4.dequantize_groups(gb))
+    )
+
+    counts = {
+        # per 64-length PE dot, beyond the shared int adder tree
+        "hif4": {"fp_multipliers": 1, "int_multipliers_large": 1,
+                 "groups_per_pe": 1, "element_int_width": "S2P2 (5b)"},
+        "nvfp4": {"fp_multipliers": 4, "int_multipliers_large": 4,
+                  "groups_per_pe": 4, "element_int_width": "S3P1 (5b)"},
+    }
+    return {
+        "hif4_exact_fraction": exact / n_trials,
+        "nvfp4_flow_matches_dequant": abs(nv_fp - nv_deq) < 1e-5 * max(abs(nv_deq), 1e-9),
+        "multiplier_counts": counts,
+        "multipliers_eliminated_vs_nvfp4": 6,
+    }
+
+
+def main():
+    out = run()
+    print("== §III.B: 64-length dot-product compute flow ==")
+    print(f"  HiF4 integer flow == dequant dot (bit-exact): "
+          f"{out['hif4_exact_fraction'] * 100:.0f}% of trials")
+    print(f"  NVFP4 4-group flow matches dequant: "
+          f"{out['nvfp4_flow_matches_dequant']}")
+    print("  multiplier accounting per 64-length PE (Fig. 4):")
+    for f, c in out["multiplier_counts"].items():
+        print(f"    {f:6} fp x{c['fp_multipliers']}  large-int x"
+              f"{c['int_multipliers_large']}  ({c['groups_per_pe']} group(s))")
+    print(f"  -> HiF4 eliminates {out['multipliers_eliminated_vs_nvfp4']} "
+          f"multipliers per PE vs NVFP4")
+    assert out["hif4_exact_fraction"] == 1.0
+    assert out["nvfp4_flow_matches_dequant"]
+
+
+if __name__ == "__main__":
+    main()

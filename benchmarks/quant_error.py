@@ -1,0 +1,72 @@
+"""Paper Fig. 3: Gaussian quantization-error sweep.
+
+18 matrices 1024x1024, sigma = 0.01 * 2^x for x in [0, 17]; MSE of each
+4-bit BFP format normalized to HiF4. Expected (paper §III.A):
+  * stable plateau HiF4 : NVFP4 : MXFP4 = 1 : 1.32 : 1.89,
+  * NVFP4 direct-cast error blows up when sigma approaches its numeric
+    bounds (fixed by PTS), HiF4/MXFP4 never blow up.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.formats import get_format
+from repro.core.metrics import mse
+
+FORMATS = ("hif4", "nvfp4", "nvfp4_pts", "mxfp4")
+
+
+N_PAPER = 18          # paper sweep: x in [0, 17]
+N_EXT = 20            # +2 beyond-paper points to expose the full overflow
+
+
+def run(n: int = 1024, seed: int = 0) -> dict:
+    key = jax.random.PRNGKey(seed)
+    table = {f: [] for f in FORMATS}
+    sigmas = [0.01 * 2.0 ** x for x in range(N_EXT)]
+    for x, sigma in enumerate(sigmas):
+        m = jax.random.normal(jax.random.fold_in(key, x), (n, n), jnp.float32)
+        m = m * sigma
+        for f in FORMATS:
+            table[f].append(float(mse(m, get_format(f).qdq(m))))
+    # plateau = paper-range points where NVFP4 is within 15% of its median
+    # ("excluding NVFP4's fluctuation", §III.A)
+    nv = [table["nvfp4"][i] / table["hif4"][i] for i in range(N_PAPER)]
+    med = float(np.median(nv))
+    stable = [i for i in range(N_PAPER) if abs(nv[i] - med) < 0.15 * med]
+    ratios = {
+        f: float(np.mean([table[f][i] / table["hif4"][i] for i in stable]))
+        for f in FORMATS
+    }
+    return {"sigmas": sigmas, "mse": table, "stable_ratio_vs_hif4": ratios,
+            "stable_idx": stable}
+
+
+def main():
+    out = run()
+    print("== Fig. 3: Gaussian MSE sweep (normalized to HiF4) ==")
+    print(f"{'x':>3} {'sigma':>12} " + " ".join(f"{f:>11}" for f in FORMATS))
+    for i, s in enumerate(out["sigmas"]):
+        row = " ".join(
+            f"{out['mse'][f][i] / out['mse']['hif4'][i]:11.2f}" for f in FORMATS
+        )
+        tag = "  (beyond paper)" if i >= N_PAPER else ""
+        print(f"{i:3d} {s:12.4g} {row}{tag}")
+    r = out["stable_ratio_vs_hif4"]
+    print(f"\nstable-region MSE ratio  HiF4 : NVFP4 : MXFP4 = "
+          f"1 : {r['nvfp4']:.2f} : {r['mxfp4']:.2f}   (paper: 1 : 1.32 : 1.89)")
+    assert 1.15 < r["nvfp4"] < 1.5, r
+    assert 1.6 < r["mxfp4"] < 2.2, r
+    # NVFP4 fluctuates at BOTH range ends without PTS; PTS flattens it
+    under = out["mse"]["nvfp4"][0] / out["mse"]["hif4"][0]
+    over17 = out["mse"]["nvfp4"][17] / out["mse"]["hif4"][17]
+    over19 = out["mse"]["nvfp4"][19] / out["mse"]["hif4"][19]
+    pts19 = out["mse"]["nvfp4_pts"][19] / out["mse"]["hif4"][19]
+    print(f"NVFP4 fluctuation: x=0 underflow x{under:.2f}; x=17 x{over17:.2f}; "
+          f"x=19 x{over19:.1f}  (PTS at x=19: x{pts19:.2f})")
+    assert under > 1.6 and over17 > 1.8, (under, over17)
+    assert over19 > 10 and pts19 < 3, (over19, pts19)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Roofline aggregation: experiments/dryrun/*.json -> §Roofline table.
+
+Reads the per-cell records the dry-run wrote (loop-aware FLOPs / HBM bytes
+/ modeled ICI wire bytes per device) and emits the markdown table for
+EXPERIMENTS.md, including the dominant term and MODEL_FLOPS/HLO ratio.
+"""
+import glob
+import json
+import os
+
+DEFAULT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def load_records(directory: str = DEFAULT_DIR):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(directory, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if "error" not in r:
+            recs.append(r)
+    return recs
+
+
+def table(recs, mesh: str = "16x16", quant: str = "hif4"):
+    rows = []
+    for r in recs:
+        if r["mesh"] != mesh or r.get("quant") != quant:
+            continue
+        if r.get("fsdp") is False or r.get("seq_shard") not in (True, False):
+            pass
+        ro = r["roofline"]
+        step = max(ro["t_compute_s"], ro["t_memory_s"], ro["t_collective_s"])
+        rows.append({
+            "arch": r["arch"],
+            "shape": r["shape"],
+            "t_compute_ms": ro["t_compute_s"] * 1e3,
+            "t_memory_ms": ro["t_memory_s"] * 1e3,
+            "t_collective_ms": ro["t_collective_s"] * 1e3,
+            "dominant": ro["dominant"],
+            "roofline_fraction": ro["t_compute_s"] / step if step else 0.0,
+            "useful_flops_ratio": r["useful_flops_ratio"],
+            "peak_gib": r["memory"]["peak_bytes_est"] / 2 ** 30,
+        })
+    rows.sort(key=lambda x: (x["arch"], x["shape"]))
+    return rows
+
+
+def markdown(rows, title: str) -> str:
+    out = [f"### {title}", "",
+           "| arch | shape | t_comp (ms) | t_mem (ms) | t_coll (ms) | dominant "
+           "| comp/roofline | useful FLOPs |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_ms']:.2f} | "
+            f"{r['t_memory_ms']:.2f} | {r['t_collective_ms']:.2f} | "
+            f"{r['dominant']} | {r['roofline_fraction']:.2f} | "
+            f"{r['useful_flops_ratio']:.2f} |"
+        )
+    return "\n".join(out)
+
+
+def main():
+    recs = load_records()
+    if not recs:
+        print("no dry-run records found; run: "
+              "PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both")
+        return
+    for mesh in ("16x16", "2x16x16"):
+        rows = table(recs, mesh=mesh)
+        if rows:
+            print(markdown(rows, f"Roofline terms per (arch x shape), mesh {mesh}"))
+            print()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,179 @@
+"""Fault-tolerant checkpointing: atomic, hashed, async, reshard-on-restore.
+
+Layout (one directory per step):
+
+    <dir>/step_000120/
+        manifest.json    # tree structure, shapes, dtypes, sha256 per array
+        arr_00000.npy ... arr_NNNNN.npy
+        extra.json       # non-array state (data-iterator state, step, ...)
+
+Atomicity: written into ``step_XXX.tmp`` then os.rename'd — a crash mid-
+write never leaves a directory the loader would accept (``latest_step``
+only considers directories with a valid manifest).
+
+Reshard-on-restore / elastic scaling: arrays are saved UNSHARDED (gathered
+to host); ``load_checkpoint(..., shardings=)`` device_puts each leaf with
+the target sharding, so a checkpoint written on a 256-chip mesh restores
+onto 512 chips (or 1 CPU) without conversion — the elastic-scaling path.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _tree_paths(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def _resolve_dtype(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def save_checkpoint(directory: str, step: int, tree: Any,
+                    extra: Optional[dict] = None, *, verify: bool = True) -> str:
+    """Atomically write ``tree`` (a pytree of arrays) + ``extra`` state."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    leaves, treedef = _tree_paths(tree)
+    manifest = {
+        "step": step,
+        "treedef": str(treedef),
+        "n_leaves": len(leaves),
+        "arrays": [],
+    }
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(leaf)                      # gathers sharded arrays
+        fn = f"arr_{i:05d}.npy"
+        # raw-byte container: numpy can't serialize bf16/f8 natively
+        np.save(os.path.join(tmp, fn),
+                np.frombuffer(arr.tobytes(), dtype=np.uint8))
+        entry = {"file": fn, "shape": list(arr.shape), "dtype": str(arr.dtype)}
+        if verify:
+            with open(os.path.join(tmp, fn), "rb") as f:
+                entry["sha256"] = hashlib.sha256(f.read()).hexdigest()
+        manifest["arrays"].append(entry)
+
+    with open(os.path.join(tmp, "extra.json"), "w") as f:
+        json.dump(extra or {}, f)
+    # manifest LAST: its presence marks the payload complete
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    """Largest step with a complete (manifest-bearing) checkpoint."""
+    if not os.path.isdir(directory):
+        return None
+    best = None
+    for name in os.listdir(directory):
+        m = re.fullmatch(r"step_(\d+)", name)
+        if not m:
+            continue
+        if not os.path.exists(os.path.join(directory, name, "manifest.json")):
+            continue
+        s = int(m.group(1))
+        best = s if best is None or s > best else best
+    return best
+
+
+def load_checkpoint(directory: str, step: int, target_tree: Any,
+                    *, shardings: Any = None, verify: bool = False):
+    """Restore into the structure of ``target_tree``.
+
+    ``shardings``: optional pytree of NamedShardings (same structure); each
+    leaf is device_put with its target sharding — reshard-on-restore.
+    Returns (tree, extra).
+    """
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    leaves, treedef = _tree_paths(target_tree)
+    assert manifest["n_leaves"] == len(leaves), (
+        f"checkpoint has {manifest['n_leaves']} leaves, target {len(leaves)}"
+    )
+    shard_leaves = (
+        jax.tree_util.tree_flatten(shardings)[0] if shardings is not None
+        else [None] * len(leaves)
+    )
+
+    out = []
+    for entry, ref, shd in zip(manifest["arrays"], leaves, shard_leaves):
+        fp = os.path.join(path, entry["file"])
+        if verify and "sha256" in entry:
+            with open(fp, "rb") as f:
+                h = hashlib.sha256(f.read()).hexdigest()
+            assert h == entry["sha256"], f"corrupt checkpoint array {fp}"
+        raw = np.load(fp)
+        arr = np.frombuffer(raw.tobytes(), dtype=_resolve_dtype(entry["dtype"]))
+        arr = arr.reshape(entry["shape"])
+        want = tuple(ref.shape)
+        assert tuple(arr.shape) == want, (entry["file"], arr.shape, want)
+        if shd is not None:
+            out.append(jax.device_put(arr, shd))
+        else:
+            out.append(jax.numpy.asarray(arr, dtype=ref.dtype))
+    with open(os.path.join(path, "extra.json")) as f:
+        extra = json.load(f)
+    return jax.tree_util.tree_unflatten(treedef, out), extra
+
+
+class CheckpointManager:
+    """Async wrapper: overlaps serialization with the next train steps."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def save_async(self, step: int, tree: Any, extra: Optional[dict] = None):
+        self.wait()
+        # materialize on host NOW (so the train loop can donate buffers)
+        host_tree = jax.tree_util.tree_map(lambda x: np.asarray(x), tree)
+
+        def work():
+            save_checkpoint(self.directory, step, host_tree, extra)
+            self._gc()
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def _gc(self):
+        steps = sorted(
+            int(m.group(1))
+            for name in os.listdir(self.directory)
+            if (m := re.fullmatch(r"step_(\d+)", name))
+            and os.path.exists(os.path.join(self.directory, name, "manifest.json"))
+        )
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)

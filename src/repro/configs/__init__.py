@@ -1,0 +1,10 @@
+# One module per assigned architecture; registration happens on import via
+# repro.configs.base.register_arch. Use get_arch("<id>") / all_archs().
+from repro.configs.base import (  # noqa: F401
+    ArchConfig,
+    ShapeConfig,
+    all_archs,
+    applicable_shapes,
+    get_arch,
+    get_shape,
+)

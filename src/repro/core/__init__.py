@@ -1,0 +1,4 @@
+# The paper's primary contribution: the HiF4 block floating-point format,
+# its conversion algorithm (Alg. 1), baseline formats (NVFP4/MXFP4),
+# quantized matmul, and HiGPTQ. Pure JAX; Pallas kernels in repro.kernels.
+from repro.core.formats import available_formats, get_format  # noqa: F401

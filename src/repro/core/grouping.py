@@ -1,0 +1,48 @@
+"""Axis<->group reshaping shared by every BFP format.
+
+All formats quantize along one tensor axis in fixed-size groups. This module
+centralizes the move-axis / pad / reshape bookkeeping so format code only
+ever sees (..., group_size) blocks.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+
+
+def pad_to_multiple(x: jnp.ndarray, multiple: int, axis: int) -> tuple[jnp.ndarray, int]:
+    n = x.shape[axis]
+    rem = (-n) % multiple
+    if rem == 0:
+        return x, n
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad), n
+
+
+def to_groups(x: jnp.ndarray, axis: int, group: int) -> tuple[jnp.ndarray, int]:
+    """Return (y, orig_len): y has shape (..., n_groups, group) with the
+    grouped axis moved last; pads with zeros if needed."""
+    x = jnp.moveaxis(x, axis, -1)
+    x, orig = pad_to_multiple(x, group, -1)
+    y = x.reshape(x.shape[:-1] + (x.shape[-1] // group, group))
+    return y, orig
+
+
+def from_groups(y: jnp.ndarray, axis: int, orig_len: int) -> jnp.ndarray:
+    x = y.reshape(y.shape[:-2] + (y.shape[-2] * y.shape[-1],))
+    x = x[..., :orig_len]
+    return jnp.moveaxis(x, -1, axis)
+
+
+def apply_grouped(
+    fn: Callable[[jnp.ndarray], jnp.ndarray],
+    x: jnp.ndarray,
+    axis: int,
+    group: int,
+) -> jnp.ndarray:
+    """Apply ``fn`` on (..., group) blocks of ``x`` along ``axis``."""
+    y, orig = to_groups(x, axis, group)
+    out = fn(y)
+    return from_groups(out, axis, orig).astype(x.dtype)

@@ -1,0 +1,206 @@
+"""HiFloat4 (HiF4) block floating-point format — the paper's contribution.
+
+A HiF4 unit = 64 S1P2 elements + 32-bit metadata:
+    [ E6M2 scale : 8b | E1_8 micro-exps : 8b | E1_16 micro-exps : 16b ]
+Value of element i (1-based):
+    V_i = E6M2 * 2^(E1_8[ceil(i/8)] + E1_16[ceil(i/4)]) * S1P2_i
+
+This module implements Algorithm 1 (BF16 -> HiF4) with explicit bf16
+emulation of every step the paper executes in bf16 hardware, plus
+dequantization, bit-packing (4.5 bits/value storage), and the integer
+"absorbed shift" representation used by the fixed-point dot product
+(paper SS III.B).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core import rounding as R
+
+GROUP_SIZE = 64
+N_E1_8 = 8    # level-2 micro-exponents: one per 8 elements
+N_E1_16 = 16  # level-3 micro-exponents: one per 4 elements
+BITS_PER_VALUE = 4.5
+MAX_POS = (2.0 ** 15 * 1.5) * 4.0 * 1.75   # = 2^18 * 1.3125  (Table II)
+MIN_POS = 2.0 ** -48 * 0.25                # = 2^-50           (Table II)
+INTRA_MAX = 7.0                            # 2^(1+1) * 1.75 (Alg. 1 line 8)
+
+_RECIP7_BF16 = float(jnp.asarray(1.0 / 7.0, jnp.bfloat16))  # (1/7)_BF16
+
+
+class HiF4Groups(NamedTuple):
+    """Value-level (unpacked) HiF4 representation of shape (..., 64) data."""
+
+    e6m2: jnp.ndarray    # (...,)     f32, value on the E6M2 grid
+    e1_8: jnp.ndarray    # (..., 8)   int32 in {0, 1}
+    e1_16: jnp.ndarray   # (..., 16)  int32 in {0, 1}
+    s1p2: jnp.ndarray    # (..., 64)  f32, value on the S1P2 grid
+
+
+class HiF4Packed(NamedTuple):
+    """Bit-packed HiF4: 4.5 bits/value storage (deployment artifact)."""
+
+    codes: jnp.ndarray   # (..., 32) uint8 — two 4-bit S1P2 codes per byte
+    meta: jnp.ndarray    # (...,)    uint32 — e6m2<<24 | e1_8<<16 | e1_16
+
+
+def quantize_groups(v: jnp.ndarray) -> HiF4Groups:
+    """Algorithm 1: convert (..., 64) bf16/f32 values to HiF4 components.
+
+    f32 inputs use the explicitly bf16-emulated path (every bf16 hardware
+    rounding simulated with round_bf16). bf16 inputs take the NATIVE path:
+    arithmetic runs in bf16 directly — bf16 multiplies round exactly like
+    the simulated round_bf16(product), and every intermediate value on the
+    S1P2/E6M2 grids is exactly bf16-representable, so the two paths agree
+    BITWISE (property-tested) while the native one halves the HBM traffic
+    of in-graph activation quantization.
+    """
+    if v.dtype == jnp.bfloat16:
+        return _quantize_groups_bf16(v)
+    v = v.astype(jnp.float32)
+    av = jnp.abs(v)
+    lead = v.shape[:-1]
+
+    # Stage 1: three-level tree max reduction (lines 1-7).
+    v16 = jnp.max(av.reshape(lead + (16, 4)), axis=-1)          # (..., 16)
+    v8 = jnp.max(v16.reshape(lead + (8, 2)), axis=-1)           # (..., 8)
+    vmax = jnp.max(v8, axis=-1)                                 # (...,)
+
+    # Stage 2: hierarchical scaling metadata (lines 8-14).
+    sf = R.round_bf16(R.round_bf16(vmax) * _RECIP7_BF16)        # line 8
+    e6m2 = R.round_e6m2(sf)                                     # line 9
+    rec = R.e6m2_reciprocal_bf16(e6m2)                          # line 10
+    e1_8 = (R.round_bf16(v8 * rec[..., None]) > 4.0)            # line 11
+    e1_8 = e1_8.astype(jnp.int32)
+    shift2 = jnp.repeat(e1_8, 2, axis=-1)                       # (..., 16)
+    t16 = R.round_bf16(v16 * rec[..., None]) * jnp.ldexp(jnp.float32(1.0), -shift2)
+    e1_16 = (t16 >= 2.0).astype(jnp.int32)                      # line 13
+
+    # Stage 3: scale and round the 64 elements (lines 15-18).
+    shift8 = jnp.repeat(e1_8, 8, axis=-1)                       # (..., 64)
+    shift4 = jnp.repeat(e1_16, 4, axis=-1)                      # (..., 64)
+    scaled = R.round_bf16(v * rec[..., None]) * jnp.ldexp(
+        jnp.float32(1.0), -(shift8 + shift4)
+    )
+    s1p2 = R.quantize_s1p2(scaled)                              # line 18
+    return HiF4Groups(e6m2=e6m2, e1_8=e1_8, e1_16=e1_16, s1p2=s1p2)
+
+
+def _quantize_groups_bf16(v: jnp.ndarray) -> HiF4Groups:
+    """Native-bf16 Algorithm 1 (the big (..., 64) buffers never touch f32).
+
+    Per-group metadata (1/64 of the data) still routes through f32 for the
+    E6M2 grid arithmetic — that part is cheap.
+    """
+    bf = jnp.bfloat16
+    av = jnp.abs(v)
+    lead = v.shape[:-1]
+    v16 = jnp.max(av.reshape(lead + (16, 4)), axis=-1)          # bf16, exact
+    v8 = jnp.max(v16.reshape(lead + (8, 2)), axis=-1)
+    vmax = jnp.max(v8, axis=-1)
+
+    sf = vmax * bf(_RECIP7_BF16)                                # bf16 RNE = line 8
+    e6m2 = R.round_e6m2(sf.astype(jnp.float32))                 # small, f32
+    rec_f32 = R.e6m2_reciprocal_bf16(e6m2)
+    rec = rec_f32.astype(bf)                                    # exactly bf16
+
+    e1_8 = ((v8 * rec[..., None]) > bf(4.0)).astype(jnp.int32)  # line 11
+    shift2 = jnp.repeat(e1_8, 2, axis=-1)
+    t16 = (v16 * rec[..., None]) * jnp.exp2(-shift2).astype(bf)
+    e1_16 = (t16 >= bf(2.0)).astype(jnp.int32)                  # line 13
+
+    shift8 = jnp.repeat(e1_8, 8, axis=-1)
+    shift4 = jnp.repeat(e1_16, 4, axis=-1)
+    scaled = (v * rec[..., None]) * jnp.exp2(-(shift8 + shift4)).astype(bf)
+    # S1P2 rounding: x4, RNE to int in [-7, 7], /4 — all exact in bf16
+    q = jnp.clip(jnp.round(scaled * bf(4.0)), -7.0, 7.0)
+    s1p2 = q * bf(0.25)                                         # stays bf16
+    return HiF4Groups(e6m2=e6m2, e1_8=e1_8, e1_16=e1_16, s1p2=s1p2)
+
+
+def dequantize_groups(g: HiF4Groups) -> jnp.ndarray:
+    """Equation 2: reconstruct (..., 64) values.
+
+    Computes in the s1p2 dtype: the product E6M2 * 2^shift * S1P2 carries
+    at most 2+3 significant bits, so it is EXACT in bf16 as well as f32 —
+    the native-bf16 path keeps the big buffers bf16 end to end.
+    """
+    dt = g.s1p2.dtype
+    shift = jnp.repeat(g.e1_8, 8, axis=-1) + jnp.repeat(g.e1_16, 4, axis=-1)
+    scale = g.e6m2.astype(dt)[..., None] * jnp.exp2(shift).astype(dt)
+    return scale * g.s1p2
+
+
+# ---------------------------------------------------------------------------
+# Fixed-point ("absorbed shift") view — paper SS III.B
+# ---------------------------------------------------------------------------
+
+
+def to_absorbed_int(g: HiF4Groups) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Absorb micro-exponents into integer elements (S2P2-and-wider view).
+
+    Returns ``(ints, scale)`` where ``ints`` is (..., 64) int8 holding
+    S1P2-quarters shifted left by (E1_8 + E1_16) — |q| <= 7*4 = 28 — and
+    ``scale`` is (...,) f32 = E6M2 / 4 (the 1/4 is the quarter-LSB of
+    S1P2). Reconstruction ``scale * ints`` and the dot product
+    ``scale_A*scale_B*sum(intA*intB)`` are *exact* (verified in tests).
+    """
+    quarters = R.s1p2_to_int(g.s1p2).astype(jnp.int32)
+    shift = jnp.repeat(g.e1_8, 8, axis=-1) + jnp.repeat(g.e1_16, 4, axis=-1)
+    ints = (quarters << shift).astype(jnp.int8)
+    scale = g.e6m2 * 0.25  # each operand contributes sqrt(1/16) = 1/4
+    return ints, scale
+
+
+# ---------------------------------------------------------------------------
+# Bit packing (storage at 4.5 bits/value)
+# ---------------------------------------------------------------------------
+
+
+def pack_groups(g: HiF4Groups) -> HiF4Packed:
+    codes4 = R.encode_s1p2(g.s1p2)                               # (..., 64) uint8
+    lo = codes4[..., 0::2]
+    hi = codes4[..., 1::2]
+    codes = (lo | (hi << 4)).astype(jnp.uint8)                   # (..., 32)
+
+    e6_bits = R.encode_e6m2(g.e6m2).astype(jnp.uint32)           # (...,)
+    w8 = jnp.sum(
+        g.e1_8.astype(jnp.uint32) << jnp.arange(N_E1_8, dtype=jnp.uint32), axis=-1
+    )
+    w16 = jnp.sum(
+        g.e1_16.astype(jnp.uint32) << jnp.arange(N_E1_16, dtype=jnp.uint32), axis=-1
+    )
+    meta = (e6_bits << 24) | (w8 << 16) | w16
+    return HiF4Packed(codes=codes, meta=meta)
+
+
+def unpack_groups(p: HiF4Packed) -> HiF4Groups:
+    lo = p.codes & 0xF
+    hi = p.codes >> 4
+    codes4 = jnp.stack([lo, hi], axis=-1).reshape(p.codes.shape[:-1] + (GROUP_SIZE,))
+    s1p2 = R.decode_s1p2(codes4)
+
+    e6m2 = R.decode_e6m2((p.meta >> 24).astype(jnp.uint8))
+    w8 = (p.meta >> 16) & 0xFF
+    w16 = p.meta & 0xFFFF
+    e1_8 = ((w8[..., None] >> jnp.arange(N_E1_8, dtype=jnp.uint32)) & 1).astype(jnp.int32)
+    e1_16 = ((w16[..., None] >> jnp.arange(N_E1_16, dtype=jnp.uint32)) & 1).astype(
+        jnp.int32
+    )
+    return HiF4Groups(e6m2=e6m2, e1_8=e1_8, e1_16=e1_16, s1p2=s1p2)
+
+
+# ---------------------------------------------------------------------------
+# Tensor-level QDQ entry point (axis -> groups of 64)
+# ---------------------------------------------------------------------------
+
+
+def qdq(x: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
+    """Quantize-dequantize ("fake quant") along ``axis`` in groups of 64."""
+    from repro.core.grouping import apply_grouped  # local import, no cycle
+
+    return apply_grouped(
+        lambda v: dequantize_groups(quantize_groups(v)), x, axis, GROUP_SIZE
+    )

@@ -1,0 +1,100 @@
+"""HiGPTQ: GPTQ tailored to the HiF4 block floating-point structure (§IV-A).
+
+Vanilla GPTQ quantizes a weight matrix one contraction-index at a time,
+compensating the not-yet-quantized rows through the inverse Hessian of the
+layer's calibration activations. The HiF4 adaptations ("minor changes" per
+the paper):
+
+  * the quantization grid is HiF4's: at each 64-row group boundary the
+    three-level scaling metadata (E6M2 + micro-exponents) is derived from
+    the CURRENT error-compensated weights of that group, then frozen;
+  * within the group, each row is rounded onto its element's effective
+    grid quantum = E6M2 * 2^(E1_8 + E1_16) * 0.25, clamped at +-7 quanta
+    (the S1P2 bound), with the rounding error propagated GPTQ-style.
+
+Orientation: W is (K, N) with K the contraction dim (HiF4 groups along K,
+matching how a 64-length PE dot consumes the data); X is (n_samples, K).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hif4
+from repro.core import rounding as R
+
+GROUP = hif4.GROUP_SIZE
+
+
+def hessian_from_activations(x: jnp.ndarray, damp: float = 0.01) -> jnp.ndarray:
+    """H = X^T X / n + damp * mean(diag) * I  (f64-free, f32)."""
+    x = x.astype(jnp.float32)
+    h = x.T @ x / x.shape[0]
+    d = jnp.mean(jnp.diag(h))
+    return h + damp * jnp.maximum(d, 1e-8) * jnp.eye(h.shape[0], dtype=jnp.float32)
+
+
+def _group_grid(wg: jnp.ndarray):
+    """HiF4 metadata for one group. wg (64, N) -> quantum (64, N) f32.
+
+    Reuses Algorithm 1's scale derivation (stages 1-2) on the transposed
+    group so the grid is bit-identical to direct-cast HiF4.
+    """
+    g = hif4.quantize_groups(wg.T.astype(jnp.float32))   # (N, 64) groups
+    shift = jnp.repeat(g.e1_8, 8, axis=-1) + jnp.repeat(g.e1_16, 4, axis=-1)
+    quantum = g.e6m2[:, None] * jnp.exp2(shift.astype(jnp.float32)) * R.S1P2_STEP
+    return quantum.T                                      # (64, N)
+
+
+def _quantize_row(w_row: jnp.ndarray, quantum: jnp.ndarray) -> jnp.ndarray:
+    q = jnp.round(w_row / quantum)
+    return jnp.clip(q, -7.0, 7.0) * quantum
+
+
+def higptq_quantize(
+    w: jnp.ndarray,           # (K, N) weight, contraction-major
+    x_calib: jnp.ndarray,     # (n_samples, K) calibration activations
+    *,
+    damp: float = 0.01,
+) -> jnp.ndarray:
+    """GPTQ-compensated HiF4 weights (same dtype/shape as ``w``)."""
+    K, N = w.shape
+    assert K % GROUP == 0, f"contraction dim {K} not a multiple of {GROUP}"
+    wq = w.astype(jnp.float32)
+
+    h = hessian_from_activations(x_calib, damp)
+    # GPTQ uses the upper Cholesky factor of H^-1
+    hinv = jnp.linalg.inv(h)
+    u = jnp.linalg.cholesky(hinv, upper=True)             # (K, K), upper
+
+    out = jnp.zeros_like(wq)
+    for k0 in range(0, K, GROUP):
+        grid = _group_grid(jax.lax.dynamic_slice_in_dim(wq, k0, GROUP, 0))
+
+        def row_step(i, carry):
+            wq_c, out_c = carry
+            k = k0 + i
+            w_row = jax.lax.dynamic_slice_in_dim(wq_c, k, 1, 0)[0]
+            quant = jax.lax.dynamic_slice_in_dim(grid, i, 1, 0)[0]
+            q_row = _quantize_row(w_row, quant)
+            d = u[k, k]
+            err = (w_row - q_row) / d
+            # compensate all later rows: w[j] -= U[k, j] * err  (j > k)
+            col = jnp.where(jnp.arange(K) > k, u[k, :], 0.0)
+            wq_c = wq_c - col[:, None] * err[None, :]
+            out_c = jax.lax.dynamic_update_slice_in_dim(
+                out_c, q_row[None, :], k, 0
+            )
+            return wq_c, out_c
+
+        wq, out = jax.lax.fori_loop(0, GROUP, row_step, (wq, out))
+    return out.astype(w.dtype)
+
+
+def layer_output_error(w_ref: jnp.ndarray, w_q: jnp.ndarray,
+                       x: jnp.ndarray) -> float:
+    """||X (W - W_q)||_F / ||X W||_F — the metric GPTQ minimizes."""
+    x = x.astype(jnp.float32)
+    num = jnp.linalg.norm(x @ (w_ref.astype(jnp.float32) - w_q.astype(jnp.float32)))
+    den = jnp.linalg.norm(x @ w_ref.astype(jnp.float32))
+    return float(num / jnp.maximum(den, 1e-30))

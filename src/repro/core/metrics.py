@@ -1,0 +1,21 @@
+"""Error metrics used across the experiment suite."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def mse(x: jnp.ndarray, x_hat: jnp.ndarray) -> jnp.ndarray:
+    d = x.astype(jnp.float32) - x_hat.astype(jnp.float32)
+    return jnp.mean(d * d)
+
+
+def rel_mse(x: jnp.ndarray, x_hat: jnp.ndarray) -> jnp.ndarray:
+    return mse(x, x_hat) / jnp.maximum(jnp.mean(jnp.square(x.astype(jnp.float32))), 1e-30)
+
+
+def sqnr_db(x: jnp.ndarray, x_hat: jnp.ndarray) -> jnp.ndarray:
+    return 10.0 * jnp.log10(1.0 / jnp.maximum(rel_mse(x, x_hat), 1e-30))
+
+
+def max_abs_err(x: jnp.ndarray, x_hat: jnp.ndarray) -> jnp.ndarray:
+    return jnp.max(jnp.abs(x.astype(jnp.float32) - x_hat.astype(jnp.float32)))

@@ -1,0 +1,39 @@
+"""OCP-MXFP4 baseline format (paper SS I; OCP MX spec / arXiv:2310.10537).
+
+Group of 32 E2M1 elements + one shared power-of-two E8M0 scale
+= 4.25 bits/value. Shared exponent = floor(log2(amax)) - emax(E2M1).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core import rounding as R
+from repro.core.grouping import apply_grouped
+
+GROUP_SIZE = 32
+BITS_PER_VALUE = 4.25
+
+
+class MXFP4Groups(NamedTuple):
+    scale: jnp.ndarray   # (...,)    f32, power of two
+    e2m1: jnp.ndarray    # (..., 32) f32 on E2M1 grid
+
+
+def quantize_groups(v: jnp.ndarray) -> MXFP4Groups:
+    v = v.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(v), axis=-1)
+    scale = R.e8m0_scale_from_amax(amax, element_emax=2)
+    e2m1 = R.quantize_e2m1(v / scale[..., None])
+    return MXFP4Groups(scale=scale, e2m1=e2m1)
+
+
+def dequantize_groups(g: MXFP4Groups) -> jnp.ndarray:
+    return g.scale[..., None] * g.e2m1
+
+
+def qdq(x: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
+    return apply_grouped(
+        lambda v: dequantize_groups(quantize_groups(v)), x, axis, GROUP_SIZE
+    )

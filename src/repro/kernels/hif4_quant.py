@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: tiled BF16 -> HiF4 conversion (paper Algorithm 1).
+
+Hardware adaptation (DESIGN.md §3): the paper's bespoke scalar instructions
+(BF16->E6M2, E6M2 reciprocal LUT, multiply-compare) become VPU vector ops on
+VMEM tiles. Each grid step loads a (block_m, block_k) tile of the source
+into VMEM, runs the three-stage conversion (tree max -> hierarchical scales
+-> scale+round), and writes the deployment layout:
+
+  ints   (block_m, block_k)      int8  — S1P2 quarters shifted by the two
+                                          micro-exponent levels (|q| <= 28)
+  scales (block_m, block_k//64)  f32   — E6M2 / 4 per 64-group
+
+``scales[m, g] * ints[m, 64g:64g+64]`` reconstructs Eq. 2 exactly (tested
+against repro.core.hif4). block_k must be a multiple of 64 so every VMEM
+tile holds whole HiF4 groups; MXU-friendly multiples of 128 recommended.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import rounding as R
+
+GROUP = 64
+_RECIP7_BF16 = float(jnp.asarray(1.0 / 7.0, jnp.bfloat16))
+
+
+def _fit(dim: int, want: int, quantum: int) -> int:
+    """Largest block <= want that divides dim and is a multiple of quantum."""
+    b = (want // quantum) * quantum
+    while b > quantum and dim % b != 0:
+        b -= quantum
+    b = max(b, quantum)
+    assert dim % b == 0, (dim, want, quantum)
+    return b
+
+
+def _quant_kernel(x_ref, ints_ref, scale_ref):
+    x = x_ref[...].astype(jnp.float32)                 # (bm, bk)
+    bm, bk = x.shape
+    g = bk // GROUP
+    v = x.reshape(bm, g, GROUP)
+    av = jnp.abs(v)
+
+    # Stage 1: three-level tree max (Alg. 1 lines 1-7)
+    v16 = jnp.max(av.reshape(bm, g, 16, 4), axis=-1)
+    v8 = jnp.max(v16.reshape(bm, g, 8, 2), axis=-1)
+    vmax = jnp.max(v8, axis=-1)                        # (bm, g)
+
+    # Stage 2: hierarchical scaling metadata (lines 8-14)
+    sf = R.round_bf16(R.round_bf16(vmax) * _RECIP7_BF16)
+    e6m2 = R.round_e6m2(sf)
+    rec = R.e6m2_reciprocal_bf16(e6m2)
+    e1_8 = (R.round_bf16(v8 * rec[..., None]) > 4.0).astype(jnp.int32)
+    shift2 = jnp.repeat(e1_8, 2, axis=-1)
+    t16 = R.round_bf16(v16 * rec[..., None]) * jnp.exp2(-shift2.astype(jnp.float32))
+    e1_16 = (t16 >= 2.0).astype(jnp.int32)
+
+    # Stage 3: scale, round to S1P2 quarters, absorb shifts (lines 15-18)
+    shift8 = jnp.repeat(e1_8, 8, axis=-1)
+    shift4 = jnp.repeat(e1_16, 4, axis=-1)
+    shift = shift8 + shift4                            # (bm, g, 64)
+    scaled = R.round_bf16(v * rec[..., None]) * jnp.exp2(-shift.astype(jnp.float32))
+    q = jnp.clip(jnp.round(scaled / 0.25), -7, 7).astype(jnp.int32)
+    ints = (q << shift).astype(jnp.int8)               # |q| <= 28
+
+    ints_ref[...] = ints.reshape(bm, bk)
+    scale_ref[...] = e6m2 * 0.25
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_k", "interpret"))
+def hif4_quantize(
+    x: jax.Array,
+    *,
+    block_m: int = 256,
+    block_k: int = 512,
+    interpret: bool = False,
+):
+    """x (M, K) bf16/f32 -> (ints (M, K) int8, scales (M, K/64) f32)."""
+    M, K = x.shape
+    assert K % GROUP == 0, f"K={K} must be a multiple of {GROUP}"
+    bm = _fit(M, min(block_m, M), 1)
+    bk = _fit(K, min(block_k, K), GROUP)
+    grid = (M // bm, K // bk)
+
+    return pl.pallas_call(
+        _quant_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bk), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bk // GROUP), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((M, K), jnp.int8),
+            jax.ShapeDtypeStruct((M, K // GROUP), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)

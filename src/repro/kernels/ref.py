@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Anchored to ``repro.core.hif4`` (the bit-exact Algorithm 1 implementation)
+so kernel == ref == paper. The kernels use the "absorbed integer" layout of
+paper §III.B: micro-exponents folded into int8 elements (|q| <= 28), one
+f32 scale per 64-group (= E6M2/16 for a dot of two operands, E6M2/4 each).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import hif4
+
+
+def hif4_quantize_ref(x: jnp.ndarray):
+    """x (M, K) float -> (ints (M, K) int8, scales (M, K/64) f32).
+
+    K must be a multiple of 64. ``scales[m, g] * ints[m, 64g:64(g+1)]``
+    reconstructs the dequantized values exactly.
+    """
+    M, K = x.shape
+    assert K % hif4.GROUP_SIZE == 0, K
+    g = hif4.quantize_groups(x.reshape(M, K // hif4.GROUP_SIZE, hif4.GROUP_SIZE))
+    ints, scale = hif4.to_absorbed_int(g)
+    return ints.reshape(M, K), scale
+
+
+def hif4_dequantize_ref(ints: jnp.ndarray, scales: jnp.ndarray) -> jnp.ndarray:
+    M, K = ints.shape
+    G = scales.shape[-1]
+    vals = ints.reshape(M, G, K // G).astype(jnp.float32) * scales[..., None]
+    return vals.reshape(M, K)
+
+
+def bfp_matmul_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """HiF4 A-W quantized matmul oracle: x (M, K) @ w (K, N) -> (M, N) f32.
+
+    Both operands quantized along K in 64-groups; per-group integer dot then
+    one float multiply by the two group scales (paper Eq. 3 compute flow).
+    """
+    M, K = x.shape
+    K2, N = w.shape
+    assert K == K2 and K % hif4.GROUP_SIZE == 0
+    G = K // hif4.GROUP_SIZE
+
+    ai, ascale = hif4_quantize_ref(x)                      # (M,K), (M,G)
+    bi, bscale = hif4_quantize_ref(w.T)                    # (N,K), (N,G)
+
+    a = ai.reshape(M, G, hif4.GROUP_SIZE).astype(jnp.int32)
+    b = bi.reshape(N, G, hif4.GROUP_SIZE).astype(jnp.int32)
+    # integer 64-length dots per group: (M, N, G)
+    acc = jnp.einsum("mgk,ngk->mng", a, b)
+    out = jnp.einsum(
+        "mng,mg,ng->mn", acc.astype(jnp.float32), ascale, bscale
+    )
+    return out
+
+
+def bfp_matmul_from_quantized_ref(ai, ascale, bi, bscale) -> jnp.ndarray:
+    """Same contraction, operands already in absorbed-int layout.
+
+    ai (M, K) int8 with ascale (M, G); bi (K, N) int8 with bscale (G, N).
+    """
+    M, K = ai.shape
+    _, N = bi.shape
+    G = ascale.shape[-1]
+    a = ai.reshape(M, G, K // G).astype(jnp.int32)
+    b = bi.reshape(G, K // G, N).astype(jnp.int32)
+    acc = jnp.einsum("mgk,gkn->mgn", a, b).astype(jnp.float32)
+    return jnp.einsum("mgn,mg,gn->mn", acc, ascale, bscale)

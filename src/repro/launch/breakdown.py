@@ -1,0 +1,91 @@
+import os
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Per-computation / per-instruction cost breakdown of a dry-run cell.
+
+The §Perf hillclimb tool: shows where the bytes, FLOPs and collective wire
+traffic of a lowered cell actually live (computation x loop-multiplicity,
+then the top instructions inside).
+
+  PYTHONPATH=src python -m repro.launch.breakdown --arch qwen3-4b --shape train_4k [--multi-pod] ...
+"""
+import argparse
+
+import repro.launch.hlo_analysis as H
+
+
+def computation_table(mod: H.HloModule):
+    mults: dict = {}
+
+    def visit(comp, mult):
+        if comp not in mod.comps:
+            return
+        mults[comp] = mults.get(comp, 0) + mult
+        for callee, m in mod._edges[comp]:
+            visit(callee, mult * m)
+
+    visit(mod.entry, 1.0)
+    rows = []
+    for comp, mult in mults.items():
+        c = mod._local[comp]
+        rows.append((c.bytes * mult, c.wire_bytes * mult, c.flops * mult, mult, comp))
+    rows.sort(reverse=True)
+    return rows
+
+
+def instruction_table(mod: H.HloModule, comp: str):
+    types = {i.name: i.type_str for i in mod.comps[comp]}
+    rows = []
+    for i in mod.comps[comp]:
+        if i.op in H.FREE:
+            continue
+        b = mod.instr_bytes(i, types)   # the BILLED bytes (slice/DUS-aware)
+        rows.append((b, i.op, i.line.split(", metadata")[0].strip()))
+    rows.sort(reverse=True)
+    return rows
+
+
+def print_breakdown(compiled, n_comps=8, n_instrs=6):
+    mod = H.HloModule(compiled.as_text())
+    rows = computation_table(mod)
+    print(f"{'GiB':>9} {'wireGiB':>9} {'GFLOP':>10} {'mult':>6}  computation")
+    for b, w, f, m, comp in rows[:n_comps]:
+        print(f"{b/2**30:9.2f} {w/2**30:9.2f} {f/1e9:10.1f} {m:6.0f}  {comp[:64]}")
+    for b, w, f, m, comp in rows[:3]:
+        print(f"\n--- {comp[:70]} (mult={m:.0f})")
+        for ib, op, line in instruction_table(mod, comp)[:n_instrs]:
+            print(f"  {ib/2**20:9.1f}MiB {op:20} {line[:120]}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--quant", default="hif4")
+    ap.add_argument("--fsdp", choices=["on", "off"], default="on")
+    ap.add_argument("--no-seq-shard", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=0)
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import lower_cell
+
+    rec, compiled = lower_cell(
+        args.arch, args.shape, multi_pod=args.multi_pod, quant=args.quant,
+        fsdp=args.fsdp != "off",
+        seq_shard=False if args.no_seq_shard else None,
+        microbatches=args.microbatches,
+    )
+    r = rec["roofline"]
+    print(
+        f"{args.arch} x {args.shape}: t_comp={r['t_compute_s']*1e3:.1f}ms "
+        f"t_mem={r['t_memory_s']*1e3:.1f}ms t_coll={r['t_collective_s']*1e3:.1f}ms "
+        f"dom={r['dominant']} useful={rec['useful_flops_ratio']:.2f} "
+        f"peak={rec['memory']['peak_bytes_est']/2**30:.2f}GiB\n"
+    )
+    print_breakdown(compiled)
+
+
+if __name__ == "__main__":
+    main()

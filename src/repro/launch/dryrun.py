@@ -1,0 +1,303 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production mesh and extract memory/cost/collective analysis.
+
+This is how the distribution config is proven coherent without hardware:
+``.lower().compile()`` must succeed for the 16x16 single-pod mesh AND the
+2x16x16 multi-pod mesh for EVERY cell; failures (sharding mismatch, OOM at
+compile, unsupported collective) are bugs in the system.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both --out experiments/dryrun
+
+Results are written one JSON per cell under --out (default
+experiments/dryrun/) and summarized on stdout.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import all_archs, applicable_shapes, get_arch, get_shape
+from repro.core.qlinear import QuantConfig
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import batch_specs, decode_specs
+from repro.launch.steps import make_prefill_step, make_serve_step, make_train_step
+from repro.models import lm
+from repro.models.params import (
+    is_pspec,
+    pspecs_from_specs,
+    shape_structs,
+    shardings_from_specs,
+)
+from repro.models.common import ModelCtx
+from repro.optim.adamw import AdamWConfig, adamw_init_specs
+from repro.sharding.rules import ShardCtx
+
+# Gradient-accumulation microbatches for the biggest train cells: bounds the
+# remat-saved activation footprint per microbatch (see DESIGN.md §4).
+# §Perf iteration: nearly all train wire (FSDP weight regathers + TP
+# partial sums) scales with the microbatch count; with sequence-parallel
+# saved activations the memory allows far fewer microbatches than the
+# conservative initial pick (340B: mb 8->4->2 drove t_coll 302->232->197s).
+# mb=4 chosen for 340B (activation headroom on 16 GiB HBM).
+TRAIN_MICROBATCHES = {
+    "nemotron-4-340b": 4,
+    "llava-next-34b": 2,
+    "phi3.5-moe-42b-a6.6b": 2,
+    "qwen3-4b": 2,
+    "qwen1.5-4b": 2,
+    "zamba2-2.7b": 2,
+    "mamba2-1.3b": 2,
+}
+
+
+# Sequence-parallel residual streams (act_seq over the TP axis) are a
+# memory lever for the big models (340B cannot save 96 full layer inputs);
+# for small models they cost a per-layer reshard in backward for no benefit.
+SEQ_SHARD_MIN_PARAMS = 8e9
+
+
+def resident_bytes_per_device(spec_tree, shard) -> int:
+    """Analytic per-device residency of a PSpec tree under its shardings.
+
+    Computed from shard shapes — unlike ``memory_analysis()`` this is not
+    polluted by XLA-CPU's bf16->f32 while-carry widening (a CPU-only
+    emulation artifact; TPU holds these buffers natively in bf16)."""
+    import numpy as np
+    import jax
+
+    total = 0
+    for p in jax.tree_util.tree_leaves(spec_tree, is_leaf=is_pspec):
+        if not is_pspec(p):
+            continue   # packed-overlay markers carry non-PSpec aux leaves
+        s = shard.sharding(p.axes, p.shape)
+        shape = s.shard_shape(tuple(p.shape)) if s is not None else tuple(p.shape)
+        total += int(np.prod(shape)) * jnp_dtype_bytes(p.dtype)
+    return total
+
+
+def jnp_dtype_bytes(dt) -> int:
+    import numpy as np
+    import jax.numpy as jnp
+
+    return jnp.dtype(dt).itemsize
+
+
+def make_ctx(mesh, quant: str, *, fsdp: bool, seq_shard: bool = True,
+             attn_impl: str = "scan_q") -> ModelCtx:
+    shard = ShardCtx(mesh=mesh)
+    overrides = {}
+    if not fsdp:
+        overrides["fsdp"] = ()
+    if not seq_shard:
+        overrides["act_seq"] = ()
+    if overrides:
+        shard = shard.with_rules(**overrides)
+    return ModelCtx(quant=QuantConfig(fmt=quant), shard=shard,
+                    attn_impl=attn_impl)
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool, quant: str = "hif4",
+               fsdp: bool = True, seq_shard=None, microbatches: int = 0,
+               attn_mode: str = "auto", packed: bool = False):
+    """Lower+compile one cell; returns (record, compiled)."""
+    cfg = get_arch(arch)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    if seq_shard is None:  # auto: SP only where activation memory demands it
+        seq_shard = cfg.n_params() >= SEQ_SHARD_MIN_PARAMS
+    # vec_q flash when heads can't shard over the TP axis (§Perf iteration 1)
+    tp = mesh.shape["model"]
+    attn_impl = (
+        "vec_q" if attn_mode == "auto" and cfg.attn is not None
+        and cfg.attn.n_heads % tp != 0 else
+        ("vec_q" if attn_mode == "vec_q" else "scan_q")
+    )
+    ctx = make_ctx(mesh, quant, fsdp=fsdp, seq_shard=seq_shard,
+                   attn_impl=attn_impl)
+
+    pspecs = lm.abstract_params(cfg)
+    if packed and shape.kind != "train":
+        # HiF4 packed serving weights: 4.5 bits/value residency + transport
+        from repro.core import qlinear as _ql
+        _ql._PACKED_SHARD[0] = ctx.shard
+        pspecs = lm.packed_overlay(pspecs)
+
+        def leaf(p):
+            return jax.ShapeDtypeStruct(
+                p.shape, p.dtype, sharding=ctx.shard.sharding(p.axes, p.shape)
+            )
+
+        p_structs = lm.realize_packed(pspecs, leaf)
+    else:
+        packed = False
+        p_structs = shape_structs(pspecs, shardings_from_specs(pspecs, ctx.shard))
+    resident = {"params": resident_bytes_per_device(pspecs, ctx.shard)}
+
+    t0 = time.time()
+    if shape.kind == "train":
+        mb = microbatches or TRAIN_MICROBATCHES.get(arch, 1)
+        ospecs = adamw_init_specs(pspecs)
+        o_structs = shape_structs(ospecs, shardings_from_specs(ospecs, ctx.shard))
+        resident["opt_state"] = resident_bytes_per_device(ospecs, ctx.shard)
+        bspecs = batch_specs(cfg, shape)
+        b_structs = shape_structs(bspecs, shardings_from_specs(bspecs, ctx.shard))
+        step = make_train_step(cfg, ctx, AdamWConfig(), num_microbatches=mb,
+                               param_pspecs=pspecs_from_specs(pspecs, ctx.shard))
+        with mesh:
+            lowered = jax.jit(step, donate_argnums=(0, 1)).lower(
+                p_structs, o_structs, b_structs
+            )
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 6.0 * cfg.n_active_params() * tokens
+    elif shape.kind == "prefill":
+        mb = 1
+        bspecs = batch_specs(cfg, shape)
+        b_structs = shape_structs(bspecs, shardings_from_specs(bspecs, ctx.shard))
+        # inference: weights are PTQ'd once offline, not re-cast per step
+        qcfg = dataclasses.replace(ctx.quant, offline_weights=True)
+        ctx = dataclasses.replace(ctx, quant=qcfg, remat=False)
+        step = make_prefill_step(cfg, ctx)
+        with mesh:
+            lowered = jax.jit(step).lower(p_structs, b_structs)
+        model_flops = 2.0 * cfg.n_active_params() * shape.global_batch * shape.seq_len
+    else:  # decode
+        mb = 1
+        dspecs = decode_specs(cfg, shape)
+        d_structs = shape_structs(dspecs, shardings_from_specs(dspecs, ctx.shard))
+        resident["kv_cache"] = resident_bytes_per_device(dspecs["cache"], ctx.shard)
+        qcfg = dataclasses.replace(ctx.quant, offline_weights=True)
+        ctx = dataclasses.replace(ctx, quant=qcfg, remat=False)
+        step = make_serve_step(cfg, ctx)
+        with mesh:
+            lowered = jax.jit(step, donate_argnums=(1,)).lower(
+                p_structs, d_structs["cache"], d_structs["token"]
+            )
+        model_flops = 2.0 * cfg.n_active_params() * shape.global_batch
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    roof = hlo_analysis.roofline_terms(compiled)
+    mem = hlo_analysis.memory_stats(compiled)
+    hlo_global_flops = roof["flops_per_device"] * n_dev
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": shape.kind,
+        "quant": quant,
+        "fsdp": fsdp,
+        "seq_shard": seq_shard,
+        "attn_impl": attn_impl,
+        "packed_weights": packed,
+        "microbatches": mb,
+        "n_devices": n_dev,
+        "n_params": cfg.n_params(),
+        "n_active_params": cfg.n_active_params(),
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "resident_bytes_per_device": resident,
+        "memory": mem,
+        "roofline": roof,
+        "model_flops": model_flops,
+        "useful_flops_ratio": model_flops / max(hlo_global_flops, 1.0),
+    }
+    return record, compiled
+
+
+def run_cell(arch, shape_name, args):
+    key = f"{arch} x {shape_name} [{'2x16x16' if args.multi_pod else '16x16'}]"
+    try:
+        rec, _ = lower_cell(
+            arch, shape_name, multi_pod=args.multi_pod, quant=args.quant,
+            fsdp=args.fsdp != "off",
+            seq_shard=False if args.no_seq_shard else None,
+            microbatches=args.microbatches, attn_mode=args.attn,
+        )
+    except Exception as e:
+        traceback.print_exc()
+        rec = {
+            "arch": arch, "shape": shape_name,
+            "mesh": "2x16x16" if args.multi_pod else "16x16",
+            "quant": args.quant, "error": f"{type(e).__name__}: {e}",
+        }
+    if args.out:
+        os.makedirs(args.out, exist_ok=True)
+        mesh_tag = "mp" if args.multi_pod else "sp"
+        tag = f"{arch}_{shape_name}_{mesh_tag}_{args.quant}"
+        if args.fsdp == "off":
+            tag += "_nofsdp"
+        if args.no_seq_shard:
+            tag += "_nosp"
+        if args.attn != "auto":
+            tag += f"_{args.attn}"
+        path = os.path.join(args.out, tag.replace("/", "-") + ".json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+    if "error" in rec:
+        print(f"FAIL {key}: {rec['error']}")
+        return False
+    r = rec["roofline"]
+    print(
+        f"OK   {key}: compile={rec['compile_s']}s "
+        f"peak={rec['memory']['peak_bytes_est']/2**30:.2f}GiB/dev "
+        f"t_comp={r['t_compute_s']*1e3:.2f}ms t_mem={r['t_memory_s']*1e3:.2f}ms "
+        f"t_coll={r['t_collective_s']*1e3:.2f}ms dom={r['dominant']} "
+        f"useful={rec['useful_flops_ratio']:.2f}"
+    )
+    return True
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default=None)
+    ap.add_argument("--quant", default="hif4")
+    ap.add_argument("--fsdp", choices=["on", "off"], default="on")
+    ap.add_argument("--no-seq-shard", action="store_true")
+    ap.add_argument("--attn", choices=["auto", "scan_q", "vec_q"], default="auto")
+    ap.add_argument("--microbatches", type=int, default=0)
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    if args.all:
+        cells = [
+            (a, s) for a in all_archs() for s in applicable_shapes(get_arch(a))
+        ]
+    else:
+        assert args.arch, "--arch required without --all"
+        shapes = [args.shape] if args.shape else applicable_shapes(get_arch(args.arch))
+        cells = [(args.arch, s) for s in shapes]
+
+    meshes = {None: [args.multi_pod], "single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    ok = fail = 0
+    for mp in meshes:
+        args.multi_pod = mp
+        for arch, shape in cells:
+            if run_cell(arch, shape, args):
+                ok += 1
+            else:
+                fail += 1
+    print(f"\n{ok} cells passed, {fail} failed")
+    raise SystemExit(1 if fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,526 @@
+"""Loop-aware roofline-term extraction from a compiled (dry-run) executable.
+
+``compiled.cost_analysis()`` counts each ``while`` body ONCE, but our models
+scan over layers / microbatches / attention chunks — so FLOPs, HBM bytes and
+collective bytes would all be undercounted by ~n_layers. This module parses
+``compiled.as_text()`` (post-SPMD, per-device shapes, is_scheduled HLO) and
+walks the call graph, multiplying every computation's cost by its loop
+multiplicity (the ``known_trip_count`` backend_config XLA attaches to while
+ops).
+
+Per-instruction cost model (mirrors XLA's HloCostAnalysis):
+  dot           flops = 2 * prod(result dims) * prod(lhs contracting dims)
+                bytes = operands + result
+  fusion        bytes = operands + result; flops = elementwise walk of callee
+  elementwise   flops = prod(result dims)
+  reduce        flops = prod(operand dims)
+  collectives   ring model:
+                  all-reduce      2F(g-1)/g   F = buffer bytes, g = group
+                  all-gather       F(g-1)/g   F = gathered result
+                  reduce-scatter  gF(g-1)/g   F = scattered result
+                  all-to-all       F(g-1)/g
+                  collective-permute  F
+  data movers   (copy/slice/dus/gather/...) bytes = operands + result
+
+Roofline terms (seconds, per device; v5e constants in launch/mesh.py):
+  compute    = flops / peak_FLOP/s
+  memory     = bytes / HBM_bw
+  collective = wire_bytes / link_bw
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Optional
+
+from repro.launch import mesh as hw
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+    "s4": 0.5, "u4": 0.5,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z]\d*[a-z0-9]*)\[([0-9,]*)\]")
+# NOTE: tuple types can contain `/*index=N*/` comments (with '='), so the
+# tuple alternative must be `\(.*?\)` (with backtracking), not `[^=]*`.
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*((?:\(.*?\)|[a-z]\d*[a-z0-9]*\[[0-9,]*\]\S*))\s+([\w\-]+)\("
+)
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%([\w\.\-]+)\s*\([^)]*.*\{\s*$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_CALLS_RE = re.compile(r"calls=%([\w\.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%([\w\.\-]+)")
+_BODY_RE = re.compile(r"body=%([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%([\w\.\-]+)")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "power", "exponential",
+    "exponential-minus-one", "log", "log-plus-one", "tanh", "sqrt", "rsqrt",
+    "cbrt", "negate", "abs", "maximum", "minimum", "compare", "select",
+    "and", "or", "xor", "not", "floor", "ceil", "round-nearest-even",
+    "round-nearest-afz", "sign", "cosine", "sine", "tan", "atan2",
+    "remainder", "clamp", "shift-left", "shift-right-logical",
+    "shift-right-arithmetic", "is-finite", "popcnt", "clz", "erf",
+    "logistic", "stochastic-convert",
+}
+DATA_MOVERS = {
+    "copy", "copy-start", "transpose", "dynamic-slice", "dynamic-update-slice",
+    "broadcast", "convert", "slice", "concatenate", "pad", "gather",
+    "scatter", "reduce", "reduce-window", "sort", "reverse", "select-and-scatter",
+    "iota", "rng", "rng-bit-generator", "custom-call", "cholesky",
+    "triangular-solve", "fft", "convolution", "dot", "fusion",
+}
+COLLECTIVES = {
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "ragged-all-to-all", "collective-broadcast",
+}
+FREE = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "add-dependency",
+    "opt-barrier", "domain", "call", "while", "conditional", "copy-done",
+    "all-reduce-done", "all-gather-done", "collective-permute-done",
+    "async-done", "send", "send-done", "recv", "recv-done",
+}
+
+
+def _shape_bytes(type_str: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(type_str: str) -> float:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    operands: list
+    line: str
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    wire_bytes: float = 0.0
+    coll_ops: dict = dataclasses.field(default_factory=dict)
+    coll_bytes: dict = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.wire_bytes += other.wire_bytes * mult
+        for k, v in other.coll_ops.items():
+            self.coll_ops[k] = self.coll_ops.get(k, 0) + v * mult
+        for k, v in other.coll_bytes.items():
+            self.coll_bytes[k] = self.coll_bytes.get(k, 0.0) + v * mult
+
+
+class HloModule:
+    """Parsed scheduled-HLO text: computations, call graph, loop trips."""
+
+    def __init__(self, text: str):
+        self.comps: dict[str, list[Instr]] = {}
+        self._parse(text)
+        self.entry = self._entry_name
+        self._local: dict[str, Cost] = {}
+        self._edges: dict[str, list] = {}
+        for name in self.comps:
+            self._local[name], self._edges[name] = self._cost_one(name)
+
+    # -- parsing ------------------------------------------------------------
+
+    def _parse(self, text: str):
+        cur: Optional[str] = None
+        self._entry_name = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            if cur is None:
+                m = _COMP_HDR_RE.match(line)
+                if m and ("->" in line):
+                    cur = m.group(2)
+                    self.comps[cur] = []
+                    if m.group(1):
+                        self._entry_name = cur
+                continue
+            if line == "}":
+                cur = None
+                continue
+            m = _INSTR_RE.match(line)
+            if m is None:
+                continue
+            name, type_str, op = m.group(1), m.group(2), m.group(3)
+            rest = line[m.end():]
+            paren = rest.split(")", 1)[0]
+            operands = _OPERAND_RE.findall(paren)
+            self.comps[cur].append(Instr(name, type_str, op, operands, line))
+
+    # -- per-computation local cost + call edges -----------------------------
+
+    def _types(self, comp: str) -> dict:
+        return {i.name: i.type_str for i in self.comps[comp]}
+
+    def _fusion_flops(self, comp: str, seen=None) -> float:
+        """Elementwise+dot flops of a fused computation (recursive)."""
+        if seen is None:
+            seen = set()
+        if comp in seen or comp not in self.comps:
+            return 0.0
+        seen.add(comp)
+        types = self._types(comp)
+        flops = 0.0
+        for i in self.comps[comp]:
+            if i.op in ELEMENTWISE:
+                flops += _shape_elems(i.type_str)
+            elif i.op == "dot":
+                flops += self._dot_flops(i, types)
+            elif i.op in ("reduce", "reduce-window"):
+                if i.operands and i.operands[0] in types:
+                    flops += _shape_elems(types[i.operands[0]])
+                else:
+                    flops += _shape_elems(i.type_str)
+            elif i.op == "fusion":
+                m = _CALLS_RE.search(i.line)
+                if m:
+                    flops += self._fusion_flops(m.group(1), seen)
+        return flops
+
+    def _dot_flops(self, i: Instr, types: dict) -> float:
+        out_elems = _shape_elems(i.type_str)
+        k = 1.0
+        m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", i.line)
+        if m and i.operands and i.operands[0] in types:
+            lhs_dims_m = _SHAPE_RE.search(types[i.operands[0]])
+            if lhs_dims_m and lhs_dims_m.group(2):
+                lhs_dims = [int(d) for d in lhs_dims_m.group(2).split(",")]
+                for idx in (m.group(1) or "").split(","):
+                    if idx != "" and int(idx) < len(lhs_dims):
+                        k *= lhs_dims[int(idx)]
+        return 2.0 * out_elems * k
+
+    def _operand_bytes(self, i: Instr, types: dict) -> float:
+        return sum(_shape_bytes(types[o]) for o in i.operands if o in types)
+
+    def _root_op(self, comp: str) -> str:
+        if comp not in self.comps or not self.comps[comp]:
+            return ""
+        return self.comps[comp][-1].op
+
+    def _dus_bytes(self, i: Instr, types: dict) -> float:
+        """True traffic of an in-place dynamic-update-slice (fusion).
+
+        XLA aliases the buffer operand with the result: only the updated
+        slice is read+written. Counting operands+result would bill the full
+        stacked KV cache per decode layer (observed 9 GiB/layer vs the real
+        ~100 MiB slice). bytes = 2 * (sum(operands) - result), i.e. twice
+        the non-buffer operands (update slice + indices + fused inputs).
+        """
+        r = _shape_bytes(i.type_str)
+        ops = self._operand_bytes(i, types)
+        return max(2.0 * (ops - r), r * 0.01)
+
+    def _is_pure_convert(self, callee: str) -> bool:
+        """True if the fused computation only converts/bitcasts a parameter.
+
+        XLA CPU's float-normalization widens bf16 while-carries to f32 via
+        whole-buffer convert fusions; these don't exist on TPU (native
+        bf16), so we bill only the read side.
+        """
+        if callee not in self.comps:
+            return False
+        allowed = {"parameter", "convert", "bitcast", "copy", "broadcast",
+                   "reshape", "transpose"}
+        saw_convert = False
+        for instr in self.comps[callee]:
+            if instr.op == "convert":
+                saw_convert = True
+            elif instr.op not in allowed:
+                return False
+        return saw_convert
+
+    def _fusion_io_bytes(self, i: Instr, callee: str, types: dict) -> float:
+        """Fusion traffic with slice-aware operand accounting.
+
+        A fusion operand that the fused computation only reads through
+        dynamic-slice / slice ops (possibly behind bitcast/convert/copy
+        chains) moves slice-sized bytes, not the whole buffer — this is how
+        every lax.scan reads its per-layer xs slice; billing the full
+        stacked weights per layer would overcount HBM traffic ~n_layers x.
+        """
+        if callee not in self.comps:
+            return _shape_bytes(i.type_str) + self._operand_bytes(i, types)
+        ctypes = self._types(callee)
+        # map parameter name -> operand index
+        params: dict[str, int] = {}
+        for instr in self.comps[callee]:
+            if instr.op == "parameter":
+                m = re.search(r"parameter\((\d+)\)", instr.line)
+                if m:
+                    params[instr.name] = int(m.group(1))
+        # alias group: names that are pass-through views of a parameter
+        alias_of: dict[str, str] = {p: p for p in params}
+        passthrough = {"bitcast", "convert", "copy", "reshape", "transpose"}
+        for instr in self.comps[callee]:
+            if instr.op in passthrough and instr.operands:
+                src = instr.operands[0]
+                if src in alias_of:
+                    alias_of[instr.name] = alias_of[src]
+        # classify consumption per root parameter
+        sliced_bytes: dict[str, float] = {}
+        dus_buffer: set = set()
+        full_use: set = set()
+        for instr in self.comps[callee]:
+            if instr.op == "parameter" or instr.op in passthrough:
+                continue
+            for j, o in enumerate(instr.operands):
+                root = alias_of.get(o)
+                if root is None:
+                    continue
+                if instr.op in ("dynamic-slice", "slice") and j == 0:
+                    sliced_bytes[root] = sliced_bytes.get(root, 0.0) + _shape_bytes(
+                        instr.type_str
+                    )
+                elif instr.op == "dynamic-update-slice" and j == 0:
+                    # in-place buffer alias: bill read+write of the update
+                    upd = instr.operands[1] if len(instr.operands) > 1 else None
+                    ub = _shape_bytes(ctypes.get(upd, "")) if upd else 0.0
+                    sliced_bytes[root] = sliced_bytes.get(root, 0.0) + 2.0 * ub
+                    dus_buffer.add(root)
+                else:
+                    full_use.add(root)
+        total = 0.0
+        result_b = _shape_bytes(i.type_str)
+        dus_inplace = 0.0
+        for pname, idx in params.items():
+            if idx >= len(i.operands):
+                continue
+            oname = i.operands[idx]
+            full = _shape_bytes(types.get(oname, ""))
+            if pname in full_use or pname not in sliced_bytes:
+                total += full
+            else:
+                total += min(sliced_bytes[pname], full)
+                if pname in dus_buffer:
+                    dus_inplace = max(dus_inplace, full)
+        # a DUS-rooted fusion writes in place: don't bill the full result
+        if dus_inplace > 0 and result_b >= 0.5 * dus_inplace:
+            pass  # write already billed as 2x update above
+        else:
+            total += result_b
+        return total
+
+    def instr_bytes(self, i: Instr, types: dict) -> float:
+        """The billed HBM bytes of one instruction (shared with breakdown)."""
+        op = i.op
+        if op in FREE or op == "while" or op == "conditional" or op == "call":
+            return 0.0
+        base = op.replace("-start", "")
+        if base in COLLECTIVES:
+            f = _shape_bytes(i.type_str)
+            if "-start" in op and (op.startswith("all-reduce") or op.startswith("all-gather")):
+                f = f / 2.0
+            return f + self._operand_bytes(i, types)
+        if op == "dynamic-update-slice":
+            return self._dus_bytes(i, types)
+        if op == "dynamic-slice":
+            return 2.0 * _shape_bytes(i.type_str)
+        if op == "fusion":
+            m = _CALLS_RE.search(i.line)
+            if m and self._is_pure_convert(m.group(1)):
+                return self._operand_bytes(i, types)
+            if m:
+                return self._fusion_io_bytes(i, m.group(1), types)
+        return _shape_bytes(i.type_str) + self._operand_bytes(i, types)
+
+    def _cost_one(self, comp: str):
+        cost = Cost()
+        edges: list = []
+        types = self._types(comp)
+        for i in self.comps[comp]:
+            op = i.op
+            if op == "while":
+                trips = 1
+                m = _TRIP_RE.search(i.line)
+                if m:
+                    trips = int(m.group(1))
+                b = _BODY_RE.search(i.line)
+                c = _COND_RE.search(i.line)
+                if b:
+                    edges.append((b.group(1), trips))
+                if c:
+                    edges.append((c.group(1), trips))
+                continue
+            if op == "conditional":
+                for m in re.finditer(r"(?:true_computation|false_computation|branch_computations=\{)[^,}]*%([\w\.\-]+)", i.line):
+                    edges.append((m.group(1), 1))
+                continue
+            if op == "call":
+                m = _TO_APPLY_RE.search(i.line)
+                if m:
+                    edges.append((m.group(1), 1))
+                continue
+
+            base = op.replace("-start", "")
+            if base in COLLECTIVES:
+                g = _group_size(i.line)
+                if g <= 1:
+                    continue
+                f = _shape_bytes(i.type_str)
+                if op.startswith("all-reduce") or op.startswith("all-gather"):
+                    # -start result repeats the operand: halve (operand, result)
+                    if "-start" in op:
+                        f = f / 2.0
+                ring = (g - 1) / g
+                if base == "all-reduce":
+                    wire = 2.0 * f * ring
+                elif base == "all-gather":
+                    wire = f * ring
+                elif base == "reduce-scatter":
+                    wire = f * g * ring
+                elif base == "collective-permute":
+                    wire = f
+                else:
+                    wire = f * ring
+                cost.wire_bytes += wire
+                cost.bytes += f + self._operand_bytes(i, types)
+                cost.coll_ops[base] = cost.coll_ops.get(base, 0) + 1
+                cost.coll_bytes[base] = cost.coll_bytes.get(base, 0.0) + f
+                continue
+
+            if op == "dot":
+                cost.flops += self._dot_flops(i, types)
+                cost.bytes += _shape_bytes(i.type_str) + self._operand_bytes(i, types)
+            elif op == "dynamic-update-slice":
+                cost.bytes += self._dus_bytes(i, types)
+            elif op == "dynamic-slice":
+                cost.bytes += 2.0 * _shape_bytes(i.type_str)
+            elif op == "fusion":
+                m = _CALLS_RE.search(i.line)
+                if m:
+                    cost.flops += self._fusion_flops(m.group(1))
+                if m and self._is_pure_convert(m.group(1)):
+                    cost.bytes += self._operand_bytes(i, types)   # read only
+                elif m:
+                    cost.bytes += self._fusion_io_bytes(i, m.group(1), types)
+                else:
+                    cost.bytes += _shape_bytes(i.type_str) + self._operand_bytes(i, types)
+            elif op in ELEMENTWISE:
+                cost.flops += _shape_elems(i.type_str)
+                cost.bytes += _shape_bytes(i.type_str) + self._operand_bytes(i, types)
+            elif op in ("reduce", "reduce-window"):
+                cost.flops += (
+                    _shape_elems(types[i.operands[0]])
+                    if i.operands and i.operands[0] in types
+                    else _shape_elems(i.type_str)
+                )
+                cost.bytes += _shape_bytes(i.type_str) + self._operand_bytes(i, types)
+            elif op in DATA_MOVERS:
+                cost.bytes += _shape_bytes(i.type_str) + self._operand_bytes(i, types)
+            # FREE ops: no cost
+        return cost, edges
+
+    # -- aggregation ----------------------------------------------------------
+
+    def total_cost(self) -> Cost:
+        total = Cost()
+        seen_stack = set()
+
+        def visit(comp: str, mult: float):
+            if comp not in self.comps or comp in seen_stack:
+                return
+            seen_stack.add(comp)
+            total.add(self._local[comp], mult)
+            for callee, m in self._edges[comp]:
+                visit(callee, mult * m)
+            seen_stack.discard(comp)
+
+        visit(self.entry, 1.0)
+        return total
+
+
+def analyze(compiled, *, peak_flops: float = hw.PEAK_FLOPS_BF16) -> dict:
+    """Loop-aware roofline terms (per device, seconds) + raw counters."""
+    mod = HloModule(compiled.as_text())
+    c = mod.total_cost()
+
+    # cross-check: XLA's own (loop-unaware) analysis
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+
+    t_compute = c.flops / peak_flops
+    t_memory = c.bytes / hw.HBM_BW
+    t_coll = c.wire_bytes / hw.ICI_BW
+    dominant = max(
+        ("compute", t_compute), ("memory", t_memory), ("collective", t_coll),
+        key=lambda kv: kv[1],
+    )[0]
+    return {
+        "flops_per_device": c.flops,
+        "bytes_per_device": c.bytes,
+        "wire_bytes_per_device": c.wire_bytes,
+        "collective_ops": c.coll_ops,
+        "collective_buffer_bytes": c.coll_bytes,
+        "xla_flops_noloop": float(ca.get("flops", 0.0)),
+        "xla_bytes_noloop": float(ca.get("bytes accessed", 0.0)),
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+    }
+
+
+# kept for callers that want the legacy name
+roofline_terms = analyze
+
+
+def memory_stats(compiled) -> dict:
+    ms = compiled.memory_analysis()
+    return {
+        "argument_bytes": int(ms.argument_size_in_bytes),
+        "output_bytes": int(ms.output_size_in_bytes),
+        "temp_bytes": int(ms.temp_size_in_bytes),
+        "alias_bytes": int(ms.alias_size_in_bytes),
+        "peak_bytes_est": int(
+            ms.argument_size_in_bytes
+            + ms.temp_size_in_bytes
+            + ms.output_size_in_bytes
+            - ms.alias_size_in_bytes
+        ),
+    }

@@ -1,0 +1,113 @@
+"""Step functions: the units the dry-run lowers and the runtime executes.
+
+  train_step   — loss + grads (optionally microbatched) + AdamW update
+  prefill_step — prompt -> (first sampled token, decode cache)
+  serve_step   — (cache, token) -> (next token, cache); the decode unit
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import lm
+from repro.models.common import ModelCtx
+from repro.optim.adamw import AdamWConfig, adamw_update
+
+
+def _constrain_batch(batch: dict, ctx: ModelCtx) -> dict:
+    out = {}
+    for k, v in batch.items():
+        if v.ndim == 2:
+            out[k] = ctx.shard.constrain(v, "batch", "act_seq")
+        elif v.ndim == 3:
+            out[k] = ctx.shard.constrain(v, "batch", "act_seq", None)
+        else:
+            out[k] = ctx.shard.constrain(v, "batch")
+    return out
+
+
+def make_train_step(cfg: ArchConfig, ctx: ModelCtx, opt_cfg: AdamWConfig,
+                    num_microbatches: int = 1, param_pspecs=None):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, stats).
+
+    ``param_pspecs`` (tree of PartitionSpecs matching params): when given,
+    gradients and the microbatch accumulator are sharding-constrained to
+    the parameters' layout. Without it, XLA's propagation leaves the f32
+    accumulator ambiguous and materializes full-size per-layer gradient
+    all-reduces inside the microbatch scan (measured: 2 GiB x 96 layers x
+    8 microbatches of wire on the 340B train cell); with it, the backward
+    reduce-scatters straight into the ZeRO/FSDP shard.
+    """
+
+    def loss_fn(params, mb):
+        return lm.train_loss(params, _constrain_batch(mb, ctx), cfg, ctx)
+
+    def constrain_grads(grads):
+        if param_pspecs is None or ctx.shard.mesh is None:
+            return grads
+        return jax.tree_util.tree_map(
+            lambda g, s: jax.lax.with_sharding_constraint(g, s),
+            grads, param_pspecs,
+        )
+
+    def train_step(params, opt_state, batch):
+        if num_microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            grads = constrain_grads(grads)
+        else:
+            m = num_microbatches
+
+            def split(x):
+                assert x.shape[0] % m == 0, (x.shape, m)
+                return x.reshape((m, x.shape[0] // m) + x.shape[1:])
+
+            mbs = jax.tree_util.tree_map(split, batch)
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            g0 = constrain_grads(g0)
+
+            def acc(carry, mb):
+                loss_acc, grad_acc = carry
+                loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+                grads = constrain_grads(grads)
+                grad_acc = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(jnp.float32), grad_acc, grads
+                )
+                return (loss_acc + loss, constrain_grads(grad_acc)), None
+
+            (loss, grads), _ = jax.lax.scan(acc, (jnp.float32(0.0), g0), mbs)
+            loss = loss / m
+            grads = jax.tree_util.tree_map(lambda g: g / m, grads)
+
+        new_params, new_opt, stats = adamw_update(params, grads, opt_state, opt_cfg)
+        stats = dict(stats, loss=loss)
+        return new_params, new_opt, stats
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, ctx: ModelCtx):
+    def prefill_step(params, batch):
+        logits, cache = lm.prefill(params, _constrain_batch(batch, ctx), cfg, ctx)
+        token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return token, cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig, ctx: ModelCtx):
+    """One greedy decode step. Cache is functionally updated; the runtime
+    donates it so XLA updates in place."""
+
+    def serve_step(params, cache, token):
+        logits, new_cache = lm.decode_step(params, token, cache, cfg, ctx)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_token, new_cache
+
+    return serve_step

@@ -1,0 +1,426 @@
+"""Memory-efficient attention (flash-style chunked online softmax) + GQA.
+
+Never materializes the S x S score matrix: queries are processed in chunks
+(outer scan) and keys/values in chunks (inner scan) with running
+(max, denominator, accumulator) state — the standard FlashAttention
+recurrence expressed in pure jnp so it lowers on any backend and lets XLA
+overlap the KV-chunk loop with TP collectives.
+
+The BACKWARD is a custom VJP (:func:`flash_mha`) that recomputes
+probabilities chunk-by-chunk from the saved log-sum-exp — differentiating
+the naive scan instead makes JAX stack per-chunk probabilities into full
+S x S buffers (observed: 2+ GiB per layer at 4k context on the dry-run),
+which is exactly the failure FlashAttention exists to avoid.
+
+GQA is computed without materializing repeated KV: q is reshaped to
+(B, S, Hkv, rep, D) and contracted against (B, S, Hkv, D).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+class AttnChunking(NamedTuple):
+    q_chunk: int = 512
+    k_chunk: int = 1024
+
+
+def _chunks(n: int, c: int) -> int:
+    c = min(c, n)
+    assert n % c == 0, f"seq {n} not divisible by chunk {c}"
+    return n // c
+
+
+def _flash_fwd_impl(q, k, v, causal, q_offset, kv_valid_len, chunking):
+    """Chunked online-softmax forward. Returns (out, lse).
+
+    out (B, Sq, H, D) in q.dtype; lse (B, Hkv, rep, Sq) f32 log-sum-exp of the
+    scaled scores (the residual the flash backward needs).
+    """
+    B, Sq, H, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    rep = H // Hkv
+    scale = 1.0 / (D ** 0.5)
+
+    nq = _chunks(Sq, chunking.q_chunk)
+    nk = _chunks(Sk, chunking.k_chunk)
+    cq, ck = Sq // nq, Sk // nk
+
+    # Inputs stay bf16 (never materialize f32 copies of K/V — XLA hoists
+    # such converts out of the KV loop into a full-cache f32 copy);
+    # accumulation is f32 via preferred_element_type.
+    qc = q.reshape(B, nq, cq, Hkv, rep, D)
+    kc = k.reshape(B, nk, ck, Hkv, D)
+    vc = v.reshape(B, nk, ck, Hkv, D)
+
+    q_pos = q_offset + jnp.arange(Sq).reshape(nq, cq)
+    k_pos = jnp.arange(Sk).reshape(nk, ck)
+
+    def q_body(_, qi):
+        qblk = qc[:, qi]                       # (B, cq, Hkv, rep, D)
+        qp = q_pos[qi]                         # (cq,)
+
+        def kv_body(carry, ki):
+            m, l, acc = carry
+            kblk, vblk, kp = kc[:, ki], vc[:, ki], k_pos[ki]
+            s = jnp.einsum("bqgrd,bkgd->bgrqk", qblk, kblk,
+                           preferred_element_type=jnp.float32) * scale
+            mask = jnp.ones((cq, ck), bool)
+            if causal:
+                mask &= qp[:, None] >= kp[None, :]
+            if kv_valid_len is not None:
+                valid = kp[None, :] < kv_valid_len[:, None]   # (B, ck)
+                s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            correction = jnp.exp(m - m_new)
+            l_new = l * correction + jnp.sum(p, axis=-1)
+            acc_new = acc * correction[..., None] + jnp.einsum(
+                "bgrqk,bkgd->bgrqd", p.astype(vblk.dtype), vblk,
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l_new, acc_new), None
+
+        init = (
+            jnp.full((B, Hkv, rep, cq), NEG_INF, jnp.float32),
+            jnp.zeros((B, Hkv, rep, cq), jnp.float32),
+            jnp.zeros((B, Hkv, rep, cq, D), jnp.float32),
+        )
+        if causal and kv_valid_len is None:
+            # skip fully-masked KV chunks: only scan ki with any kp <= max qp
+            max_qp = q_offset + (qi + 1) * cq - 1
+            n_live = jnp.minimum((max_qp // ck) + 1, nk)
+        else:
+            n_live = nk
+
+        def guarded(carry, ki):
+            new, _ = kv_body(carry, ki)
+            keep = ki < n_live
+            out = jax.tree_util.tree_map(
+                lambda a, b: jnp.where(keep, a, b), new, carry
+            )
+            return out, None
+
+        (m, l, acc), _ = jax.lax.scan(guarded, init, jnp.arange(nk))
+        l = jnp.maximum(l, 1e-30)
+        out = acc / l[..., None]                               # (B,Hkv,rep,cq,D)
+        out = jnp.moveaxis(out, 3, 1).reshape(B, cq, Hkv * rep, D)
+        lse = m + jnp.log(l)                                   # (B,Hkv,rep,cq)
+        return None, (out, lse)
+
+    _, (outs, lses) = jax.lax.scan(q_body, None, jnp.arange(nq))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, Sq, H, D)        # (B,Sq,H,D)
+    lse = jnp.moveaxis(lses, 0, 3).reshape(B, Hkv, rep, Sq)    # (B,Hkv,rep,Sq)
+    return out.astype(q.dtype), lse
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_mha(q, k, v, causal: bool, q_offset: int, chunking: AttnChunking):
+    """Differentiable flash attention (training path; no kv_valid_len)."""
+    out, _ = _flash_fwd_impl(q, k, v, causal, q_offset, None, chunking)
+    return out
+
+
+def _flash_mha_fwd(q, k, v, causal, q_offset, chunking):
+    out, lse = _flash_fwd_impl(q, k, v, causal, q_offset, None, chunking)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_mha_bwd(causal, q_offset, chunking, res, dout):
+    """Two-pass chunked backward: dq over q-chunks, dk/dv over kv-chunks.
+
+    Probabilities are recomputed per (q-chunk, kv-chunk) tile from the saved
+    lse — O(S * D) residual memory, never an S x S buffer.
+    """
+    q, k, v, out, lse = res
+    B, Sq, H, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    rep = H // Hkv
+    scale = 1.0 / (D ** 0.5)
+    nq = _chunks(Sq, chunking.q_chunk)
+    nk = _chunks(Sk, chunking.k_chunk)
+    cq, ck = Sq // nq, Sk // nk
+
+    # keep all big operands bf16; accumulate in f32 (preferred_element_type)
+    qc = q.reshape(B, nq, cq, Hkv, rep, D)
+    kc = k.reshape(B, nk, ck, Hkv, D)
+    vc = v.reshape(B, nk, ck, Hkv, D)
+    doc = dout.reshape(B, nq, cq, Hkv, rep, D)
+    lsec = lse.reshape(B, Hkv, rep, nq, cq)
+    # delta = rowsum(dout * out): (B, Hkv, rep, nq, cq)
+    delta = jnp.einsum(
+        "bsgrd,bsgrd->bgrs",
+        dout.reshape(B, Sq, Hkv, rep, D),
+        out.reshape(B, Sq, Hkv, rep, D),
+        preferred_element_type=jnp.float32,
+    ).reshape(B, Hkv, rep, nq, cq)
+
+    q_pos = q_offset + jnp.arange(Sq).reshape(nq, cq)
+    k_pos = jnp.arange(Sk).reshape(nk, ck)
+
+    def tile(qi, ki):
+        """Recompute p and ds for one (qi, ki) tile (f32, tile-sized)."""
+        qblk = qc[:, qi]                                   # (B,cq,Hkv,rep,D)
+        kblk = kc[:, ki]                                   # (B,ck,Hkv,D)
+        s = jnp.einsum("bqgrd,bkgd->bgrqk", qblk, kblk,
+                       preferred_element_type=jnp.float32) * scale
+        if causal:
+            mask = q_pos[qi][:, None] >= k_pos[ki][None, :]
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+        p = jnp.exp(s - lsec[:, :, :, qi, :, None])        # (B,Hkv,rep,cq,ck)
+        doblk = doc[:, qi]                                 # (B,cq,Hkv,rep,D)
+        dp = jnp.einsum("bqgrd,bkgd->bgrqk", doblk, vc[:, ki],
+                        preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[:, :, :, qi, :, None])        # (B,Hkv,rep,cq,ck)
+        return p, ds, doblk
+
+    dt16 = q.dtype
+
+    # ---- pass 1: dq (scan q chunks; inner over kv chunks) ----
+    def dq_body(_, qi):
+        if causal:
+            n_live = jnp.minimum(((q_offset + (qi + 1) * cq - 1) // ck) + 1, nk)
+        else:
+            n_live = nk
+
+        def inner(dq_blk, ki):
+            _, ds, _ = tile(qi, ki)
+            contrib = jnp.einsum("bgrqk,bkgd->bqgrd", ds.astype(dt16), kc[:, ki],
+                                 preferred_element_type=jnp.float32) * scale
+            keep = ki < n_live
+            return dq_blk + jnp.where(keep, contrib, 0.0), None
+
+        dq0 = jnp.zeros((B, cq, Hkv, rep, D), jnp.float32)
+        dq_blk, _ = jax.lax.scan(inner, dq0, jnp.arange(nk))
+        return None, dq_blk
+
+    _, dqs = jax.lax.scan(dq_body, None, jnp.arange(nq))       # (nq,B,cq,...)
+    dq = jnp.moveaxis(dqs, 0, 1).reshape(B, Sq, H, D)
+
+    # ---- pass 2: dk, dv (scan kv chunks; inner over q chunks) ----
+    def dkv_body(_, ki):
+        if causal:
+            # only q chunks whose max position reaches this kv chunk
+            first_live = (k_pos[ki][0] - q_offset) // cq
+            first_live = jnp.maximum(first_live, 0)
+        else:
+            first_live = 0
+
+        def inner(carry, qi):
+            dk_blk, dv_blk = carry
+            p, ds, doblk = tile(qi, ki)
+            dvc = jnp.einsum("bgrqk,bqgrd->bkgd", p.astype(dt16), doblk,
+                             preferred_element_type=jnp.float32)
+            dkc = jnp.einsum("bgrqk,bqgrd->bkgd", ds.astype(dt16), qc[:, qi],
+                             preferred_element_type=jnp.float32) * scale
+            keep = qi >= first_live
+            dk_blk = dk_blk + jnp.where(keep, dkc, 0.0)
+            dv_blk = dv_blk + jnp.where(keep, dvc, 0.0)
+            return (dk_blk, dv_blk), None
+
+        z = jnp.zeros((B, ck, Hkv, D), jnp.float32)
+        (dk_blk, dv_blk), _ = jax.lax.scan(inner, (z, z), jnp.arange(nq))
+        return None, (dk_blk, dv_blk)
+
+    _, (dks, dvs) = jax.lax.scan(dkv_body, None, jnp.arange(nk))
+    dk = jnp.moveaxis(dks, 0, 1).reshape(B, Sk, Hkv, D)
+    dv = jnp.moveaxis(dvs, 0, 1).reshape(B, Sk, Hkv, D)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flash_mha.defvjp(_flash_mha_fwd, _flash_mha_bwd)
+
+
+def flash_attention(
+    q: jax.Array,                     # (B, Sq, H, D)
+    k: jax.Array,                     # (B, Sk, Hkv, D)
+    v: jax.Array,                     # (B, Sk, Hkv, D)
+    *,
+    causal: bool = True,
+    q_offset: int = 0,                # absolute position of q[0] (decode)
+    kv_valid_len: Optional[jax.Array] = None,   # (B,) valid KV prefix length
+    chunking: AttnChunking = AttnChunking(),
+) -> jax.Array:
+    if kv_valid_len is None:
+        return flash_mha(q, k, v, causal, q_offset, chunking)
+    out, _ = _flash_fwd_impl(q, k, v, causal, q_offset, kv_valid_len, chunking)
+    return out
+
+
+def decode_attention(
+    q: jax.Array,                    # (B, H, D) single query token
+    k_cache: jax.Array,              # (B, S, Hkv, D)
+    v_cache: jax.Array,              # (B, S, Hkv, D)
+    length: jax.Array,               # (B,) number of valid cache entries
+) -> jax.Array:
+    """One-token attention against the KV cache (length-masked softmax).
+
+    The cache is consumed in its own dtype (bf16) with f32 accumulation —
+    an .astype(f32) here would make XLA hoist a full f32 copy of the whole
+    multi-layer cache out of the layer loop (observed: +27 GiB/device on
+    the 340B decode dry-run).
+    """
+    B, S, Hkv, D = k_cache.shape
+    H = q.shape[1]
+    rep = H // Hkv
+    qf = q.reshape(B, Hkv, rep, D)
+    s = jnp.einsum("bgrd,bsgd->bgrs", qf, k_cache,
+                   preferred_element_type=jnp.float32) / (D ** 0.5)
+    valid = jnp.arange(S)[None, :] < length[:, None]           # (B, S)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgrs,bsgd->bgrd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Vectorized-q flash attention ("vec_q"): the q-chunk axis is a DATA axis
+# ---------------------------------------------------------------------------
+#
+# The scan-over-q-chunks formulation above cannot be parallelized across
+# devices (scan is sequential), so when an arch's head count does not divide
+# the TP axis (qwen1.5-4b H=20, llava H=56, whisper H=6 on 16-way TP) the
+# whole attention replicates — a 16x FLOP/byte waste measured in the
+# baseline roofline. Here all q chunks advance together through the online-
+# softmax KV scan, so the nq axis can carry a sharding constraint over the
+# TP axis: sequence-parallel attention without ring communication (KV is
+# small after GQA; it stays replicated on the TP axis).
+#
+# Trade-off vs scan_q: no causal early-exit (every (q,k) tile is computed,
+# ~2x for causal) — but it unlocks 16x parallelism where heads can't shard.
+
+
+def _flash_fwd_vec(q, k, v, causal, q_offset, chunking, constrain_nq=None):
+    """Returns (out (B,Sq,H,D), lse (B,nq,Hkv,rep,cq))."""
+    B, Sq, H, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    rep = H // Hkv
+    scale = 1.0 / (D ** 0.5)
+    nq = _chunks(Sq, chunking.q_chunk)
+    nk = _chunks(Sk, chunking.k_chunk)
+    cq, ck = Sq // nq, Sk // nk
+
+    qc = q.reshape(B, nq, cq, Hkv, rep, D)
+    if constrain_nq is not None:
+        qc = constrain_nq(qc)
+    kc = k.reshape(B, nk, ck, Hkv, D)
+    vc = v.reshape(B, nk, ck, Hkv, D)
+    q_pos = q_offset + jnp.arange(Sq).reshape(nq, cq)
+    k_pos = jnp.arange(Sk).reshape(nk, ck)
+
+    def kv_body(carry, ki):
+        m, l, acc = carry
+        kblk, vblk = kc[:, ki], vc[:, ki]
+        s = jnp.einsum("bnqgrd,bkgd->bngrqk", qc, kblk,
+                       preferred_element_type=jnp.float32) * scale
+        if causal:
+            mask = q_pos[:, :, None] >= k_pos[ki][None, None, :]  # (nq,cq,ck)
+            s = jnp.where(mask[None, :, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bngrqk,bkgd->bngrqd", p.astype(vblk.dtype), vblk,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    init = (
+        jnp.full((B, nq, Hkv, rep, cq), NEG_INF, jnp.float32),
+        jnp.zeros((B, nq, Hkv, rep, cq), jnp.float32),
+        jnp.zeros((B, nq, Hkv, rep, cq, D), jnp.float32),
+    )
+    (m, l, acc), _ = jax.lax.scan(kv_body, init, jnp.arange(nk))
+    l = jnp.maximum(l, 1e-30)
+    out = acc / l[..., None]                        # (B,nq,Hkv,rep,cq,D)
+    out = jnp.moveaxis(out, 4, 2).reshape(B, Sq, H, D).astype(q.dtype)
+    lse = m + jnp.log(l)
+    return out, lse
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_mha_vec(q, k, v, causal: bool, q_offset: int, chunking: AttnChunking):
+    out, _ = _flash_fwd_vec(q, k, v, causal, q_offset, chunking,
+                            _VEC_CONSTRAIN[0])
+    return out
+
+
+# module-level hook so the sharding constraint reaches inside custom_vjp
+# without being a differentiable argument (set by attn_full per call)
+_VEC_CONSTRAIN = [None]
+
+
+def _flash_vec_fwd(q, k, v, causal, q_offset, chunking):
+    out, lse = _flash_fwd_vec(q, k, v, causal, q_offset, chunking,
+                              _VEC_CONSTRAIN[0])
+    return out, (q, k, v, out, lse)
+
+
+def _flash_vec_bwd(causal, q_offset, chunking, res, dout):
+    q, k, v, out, lse = res
+    B, Sq, H, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    rep = H // Hkv
+    scale = 1.0 / (D ** 0.5)
+    nq = _chunks(Sq, chunking.q_chunk)
+    nk = _chunks(Sk, chunking.k_chunk)
+    cq, ck = Sq // nq, Sk // nk
+    constrain = _VEC_CONSTRAIN[0]
+
+    qc = q.reshape(B, nq, cq, Hkv, rep, D)
+    doc = dout.reshape(B, nq, cq, Hkv, rep, D)
+    if constrain is not None:
+        qc = constrain(qc)
+        doc = constrain(doc)
+    kc = k.reshape(B, nk, ck, Hkv, D)
+    vc = v.reshape(B, nk, ck, Hkv, D)
+    delta = jnp.einsum(
+        "bsgrd,bsgrd->bgrs",
+        dout.reshape(B, Sq, Hkv, rep, D), out.reshape(B, Sq, Hkv, rep, D),
+        preferred_element_type=jnp.float32,
+    ).reshape(B, Hkv, rep, nq, cq).transpose(0, 3, 1, 2, 4)  # (B,nq,Hkv,rep,cq)
+    q_pos = q_offset + jnp.arange(Sq).reshape(nq, cq)
+    k_pos = jnp.arange(Sk).reshape(nk, ck)
+    dt16 = q.dtype
+
+    def tile(ki):
+        """All q chunks vs kv chunk ki: p, ds (B,nq,Hkv,rep,cq,ck) f32."""
+        s = jnp.einsum("bnqgrd,bkgd->bngrqk", qc, kc[:, ki],
+                       preferred_element_type=jnp.float32) * scale
+        if causal:
+            mask = q_pos[:, :, None] >= k_pos[ki][None, None, :]
+            s = jnp.where(mask[None, :, None, None], s, NEG_INF)
+        p = jnp.exp(s - lse[..., None])
+        dp = jnp.einsum("bnqgrd,bkgd->bngrqk", doc, vc[:, ki],
+                        preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[..., None])
+        return p, ds
+
+    def body(dq_acc, ki):
+        p, ds = tile(ki)
+        dq_acc = dq_acc + jnp.einsum(
+            "bngrqk,bkgd->bnqgrd", ds.astype(dt16), kc[:, ki],
+            preferred_element_type=jnp.float32) * scale
+        dk_blk = jnp.einsum("bngrqk,bnqgrd->bkgd", ds.astype(dt16), qc,
+                            preferred_element_type=jnp.float32) * scale
+        dv_blk = jnp.einsum("bngrqk,bnqgrd->bkgd", p.astype(dt16), doc,
+                            preferred_element_type=jnp.float32)
+        return dq_acc, (dk_blk, dv_blk)
+
+    dq0 = jnp.zeros((B, nq, cq, Hkv, rep, D), jnp.float32)
+    dq, (dks, dvs) = jax.lax.scan(body, dq0, jnp.arange(nk))
+    dq = dq.reshape(B, Sq, H, D).astype(q.dtype)
+    dk = jnp.moveaxis(dks, 0, 1).reshape(B, Sk, Hkv, D).astype(k.dtype)
+    dv = jnp.moveaxis(dvs, 0, 1).reshape(B, Sk, Hkv, D).astype(v.dtype)
+    return dq, dk, dv
+
+
+flash_mha_vec.defvjp(_flash_vec_fwd, _flash_vec_bwd)

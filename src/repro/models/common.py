@@ -1,0 +1,155 @@
+"""Shared model building blocks: norms, RoPE, initializers, activations."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qlinear import NO_QUANT, QuantConfig, qmatmul
+from repro.sharding.rules import NO_SHARD, ShardCtx
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelCtx:
+    """Everything a model forward needs besides params and inputs."""
+
+    quant: QuantConfig = NO_QUANT
+    shard: ShardCtx = dataclasses.field(default_factory=lambda: NO_SHARD)
+    param_dtype: jnp.dtype = jnp.bfloat16
+    compute_dtype: jnp.dtype = jnp.bfloat16
+    remat: bool = True
+    attn_q_chunk: int = 512
+    attn_k_chunk: int = 1024
+    # "scan_q": sequential q-chunk loop with causal early-exit (default).
+    # "vec_q" : q-chunk axis is a shardable data axis — use when the head
+    #           count does not divide the TP axis (see attention.py §vec_q).
+    attn_impl: str = "scan_q"
+
+
+DEFAULT_CTX = ModelCtx()
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def trunc_normal(key, shape, std=0.02, dtype=jnp.bfloat16):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(
+        dtype
+    )
+
+
+def zeros(shape, dtype=jnp.bfloat16):
+    return jnp.zeros(shape, dtype)
+
+
+def ones(shape, dtype=jnp.bfloat16):
+    return jnp.ones(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms (computed in f32, cast back)
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(
+    x: jax.Array, weight: jax.Array, bias: Optional[jax.Array], eps: float = 1e-5
+) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * weight.astype(jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(d_head: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, d_head); positions: (..., seq) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                                  # (d/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs     # (..., seq, d/2)
+    cos = jnp.cos(angles)[..., None, :]                           # (..., seq, 1, d/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+
+
+def activation_fn(name: str):
+    if name == "swiglu":  # handled in mlp (two matmuls); gate act is silu
+        return jax.nn.silu
+    if name == "squared_relu":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    if name == "gelu":
+        return jax.nn.gelu
+    raise ValueError(f"unknown activation {name!r}")
+
+
+# ---------------------------------------------------------------------------
+# Quantized dense helper
+# ---------------------------------------------------------------------------
+
+
+def dense(
+    x: jax.Array,
+    w: jax.Array,
+    b: Optional[jax.Array] = None,
+    *,
+    quant: QuantConfig = NO_QUANT,
+    accum_dtype=None,
+) -> jax.Array:
+    """y = x @ w (+ b), with A-W quantization along the contraction dim.
+
+    ``w`` is (d_in, ...) dense, or a :class:`PackedW` (HiF4 bit-packed
+    serving weight, dequantized in-graph — 4.5 bits/value of residency and
+    FSDP-gather wire). Callers that must NOT be quantized (embedding, LM
+    head, router — paper SS IV) pass quant=NO_QUANT explicitly.
+    """
+    from repro.core.qlinear import PackedW
+
+    if isinstance(w, PackedW):
+        w = w.dequantize()
+    y = qmatmul(x, w, quant, contract_x=-1, contract_w=0,
+                accum_dtype=accum_dtype)
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+def cross_entropy(
+    logits: jax.Array, labels: jax.Array, mask: Optional[jax.Array] = None
+) -> jax.Array:
+    """Mean CE over tokens; logits (..., V) f32-upcast, labels (...) int32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

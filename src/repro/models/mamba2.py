@@ -1,0 +1,263 @@
+"""Mamba2 block: SSD (state-space duality) chunked scan + recurrent decode.
+
+Follows arXiv:2405.21060. The selective SSM recurrence
+    h_t = exp(dt_t * A) h_{t-1} + dt_t B_t x_t,   y_t = C_t . h_t + D x_t
+is evaluated in chunks: an intra-chunk quadratic ("attention-like") term and
+an inter-chunk state recurrence (lax.scan over chunks). Heads are sharded
+over the TP axis; the FLOP-dominant in/out projections are quantized (HiF4
+applies to matmul-layer tensors per the paper's placement); the SSD scan
+itself stays high-precision — noted in DESIGN.md §Arch-applicability.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import ModelCtx, dense, rms_norm
+from repro.models.params import PSpec
+
+
+def dims(cfg: ArchConfig):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    H = di // s.head_dim
+    return di, H, s.n_groups, s.d_state, s.head_dim, s.conv_kernel
+
+
+def mamba_specs(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    di, H, G, N, P, K = dims(cfg)
+    return {
+        "pre_norm": PSpec((d,), (None,), init="ones"),
+        "w_z": PSpec((d, di), ("fsdp", "ssm_inner")),
+        "w_x": PSpec((d, di), ("fsdp", "ssm_inner")),
+        "w_b": PSpec((d, G * N), ("fsdp", None)),
+        "w_c": PSpec((d, G * N), ("fsdp", None)),
+        "w_dt": PSpec((d, H), ("fsdp", "heads")),
+        "conv_w_x": PSpec((K, di), (None, "ssm_inner"), std=0.2),
+        "conv_b_x": PSpec((di,), ("ssm_inner",), init="zeros"),
+        "conv_w_bc": PSpec((K, 2 * G * N), (None, None), std=0.2),
+        "conv_b_bc": PSpec((2 * G * N,), (None,), init="zeros"),
+        "a_log": PSpec((H,), ("heads",), dtype=jnp.float32, init="zeros"),
+        "dt_bias": PSpec((H,), ("heads",), dtype=jnp.float32, init="zeros"),
+        "d_skip": PSpec((H,), ("heads",), dtype=jnp.float32, init="ones"),
+        "gate_norm": PSpec((di,), ("ssm_inner",), init="ones"),
+        "w_out": PSpec((di, d), ("ssm_inner", "fsdp")),
+    }
+
+
+def mamba_cache_specs(cfg: ArchConfig, batch: int) -> dict:
+    di, H, G, N, P, K = dims(cfg)
+    return {
+        "conv_x": PSpec((batch, K - 1, di), ("batch", None, "ssm_inner"),
+                        dtype=jnp.bfloat16, init="zeros"),
+        "conv_bc": PSpec((batch, K - 1, 2 * G * N), ("batch", None, None),
+                         dtype=jnp.bfloat16, init="zeros"),
+        "ssd": PSpec((batch, H, P, N), ("batch", "heads", None, None),
+                     dtype=jnp.float32, init="zeros"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv1d
+# ---------------------------------------------------------------------------
+
+
+def conv_full(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """x (B,S,C), w (K,C): causal depthwise conv, returns (B,S,C)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    S = x.shape[1]
+    y = sum(xp[:, k : k + S] * w[k].astype(x.dtype) for k in range(K))
+    return jax.nn.silu((y + b.astype(x.dtype)).astype(jnp.float32)).astype(x.dtype)
+
+
+def conv_step(x1: jax.Array, state: jax.Array, w: jax.Array, b: jax.Array):
+    """x1 (B,C) one step, state (B,K-1,C) past inputs -> (y1, new_state)."""
+    window = jnp.concatenate([state, x1[:, None]], axis=1)          # (B,K,C)
+    y = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32), w.astype(jnp.float32))
+    y = jax.nn.silu(y + b.astype(jnp.float32))
+    return y.astype(x1.dtype), window[:, 1:].astype(state.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+
+def ssd_scan(
+    xh: jax.Array,        # (B, S, H, P) bf16
+    dt: jax.Array,        # (B, S, H) f32 (softplus'd, > 0)
+    a: jax.Array,         # (H,) f32, negative
+    bv: jax.Array,        # (B, S, N) f32  (n_groups=1 path; B matrix)
+    cv: jax.Array,        # (B, S, N) f32
+    d_skip: jax.Array,    # (H,) f32
+    chunk: int,
+    init_state=None,      # (B, H, P, N) f32 or None
+):
+    """Chunked SSD. Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    B, S, H, P = xh.shape
+    N = bv.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0, f"seq {S} not divisible by ssd chunk {chunk}"
+    nc = S // chunk
+
+    x_ = xh.reshape(B, nc, chunk, H, P).astype(jnp.float32)
+    dt_ = dt.reshape(B, nc, chunk, H)
+    b_ = bv.reshape(B, nc, chunk, N)
+    c_ = cv.reshape(B, nc, chunk, N)
+
+    dA = dt_ * a                                          # (B,nc,l,H), <= 0
+    dA_cs = jnp.cumsum(dA, axis=2)                        # inclusive cumsum
+
+    # ---- intra-chunk (quadratic in chunk length) ----
+    # L[t, j] = exp(sum_{j < t' <= t} dA_{t'}) for t >= j
+    diff = dA_cs[:, :, :, None, :] - dA_cs[:, :, None, :, :]   # (B,nc,t,j,H)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    L = jnp.exp(jnp.where(tri[None, None, :, :, None], jnp.minimum(diff, 0.0), -jnp.inf))
+    scores = jnp.einsum("bctn,bcjn->bctj", c_, b_)             # (B,nc,t,j)
+    m = scores[..., None] * L                                   # (B,nc,t,j,H)
+    y_intra = jnp.einsum("bctjh,bcjh,bcjhp->bcthp", m, dt_, x_)
+
+    # ---- chunk states ----
+    decay_to_end = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)         # (B,nc,l,H)
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchpn", b_, decay_to_end * dt_, x_)
+
+    # ---- inter-chunk recurrence ----
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])                   # (B,nc,H)
+    s0 = (
+        jnp.zeros((B, H, P, N), jnp.float32) if init_state is None
+        else init_state.astype(jnp.float32)
+    )
+
+    def body(s_prev, inp):
+        st, dec = inp                                           # (B,H,P,N), (B,H)
+        s_new = s_prev * dec[:, :, None, None] + st
+        return s_new, s_prev
+
+    states_t = jnp.moveaxis(states, 1, 0)                       # (nc,B,H,P,N)
+    decay_t = jnp.moveaxis(chunk_decay, 1, 0)                   # (nc,B,H)
+    final_state, s_prevs = jax.lax.scan(body, s0, (states_t, decay_t))
+    s_prevs = jnp.moveaxis(s_prevs, 0, 1)                       # (B,nc,H,P,N)
+
+    # ---- inter-chunk contribution ----
+    decay_in = jnp.exp(dA_cs)                                   # (B,nc,l,H)
+    y_inter = jnp.einsum("bctn,bchpn,bcth->bcthp", c_, s_prevs, decay_in)
+
+    y = y_intra + y_inter + d_skip[None, None, None, :, None] * x_
+    return y.reshape(B, S, H, P).astype(xh.dtype), final_state
+
+
+def ssd_step(
+    x1: jax.Array,       # (B, H, P)
+    dt1: jax.Array,      # (B, H) f32
+    a: jax.Array,        # (H,) f32
+    b1: jax.Array,       # (B, N) f32
+    c1: jax.Array,       # (B, N) f32
+    d_skip: jax.Array,   # (H,) f32
+    state: jax.Array,    # (B, H, P, N) f32
+):
+    """One recurrent SSD step (decode)."""
+    xf = x1.astype(jnp.float32)
+    da = jnp.exp(dt1 * a)                                       # (B,H)
+    state = state * da[:, :, None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt1, xf, b1
+    )
+    y = jnp.einsum("bhpn,bn->bhp", state, c1) + d_skip[None, :, None] * xf
+    return y.astype(x1.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# Full Mamba2 block
+# ---------------------------------------------------------------------------
+
+
+def _in_proj(p, h, cfg: ArchConfig, ctx: ModelCtx):
+    """Shared by full/step: project residual h -> z, x, B, C, dt."""
+    di, H, G, N, P, K = dims(cfg)
+    z = dense(h, p["w_z"], quant=ctx.quant)
+    xin = dense(h, p["w_x"], quant=ctx.quant)
+    bc = jnp.concatenate(
+        [dense(h, p["w_b"], quant=ctx.quant), dense(h, p["w_c"], quant=ctx.quant)],
+        axis=-1,
+    )
+    dt = dense(h, p["w_dt"], quant=ctx.quant).astype(jnp.float32)
+    dt = jax.nn.softplus(dt + p["dt_bias"])
+    return z, xin, bc, dt
+
+
+def mamba_full(
+    p: dict,
+    x: jax.Array,                  # (B, S, d) residual stream
+    cfg: ArchConfig,
+    ctx: ModelCtx,
+    *,
+    return_cache: bool = False,
+):
+    """Full-sequence Mamba2 block (train / prefill)."""
+    di, H, G, N, P, K = dims(cfg)
+    B, S, _ = x.shape
+    h = rms_norm(x, p["pre_norm"], eps=cfg.norm_eps)
+    z, xin, bc, dt = _in_proj(p, h, cfg, ctx)
+
+    xc = conv_full(xin, p["conv_w_x"], p["conv_b_x"])
+    bcc = conv_full(bc, p["conv_w_bc"], p["conv_b_bc"])
+    bv = bcc[..., :N].astype(jnp.float32)
+    cv = bcc[..., N:].astype(jnp.float32)
+
+    xh = xc.reshape(B, S, H, P)
+    xh = ctx.shard.constrain(xh, "batch", None, "heads", None)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    y, final_state = ssd_scan(xh, dt, a, bv, cv, p["d_skip"], cfg.ssm.chunk)
+
+    y = y.reshape(B, S, di)
+    y = rms_norm((y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype),
+                 p["gate_norm"], eps=cfg.norm_eps)
+    out = dense(y, p["w_out"], quant=ctx.quant)
+    if return_cache:
+        cache = {
+            "conv_x": _tail(xin, K - 1),
+            "conv_bc": _tail(bc, K - 1),
+            "ssd": final_state,
+        }
+        return out, cache
+    return out, None
+
+
+def _tail(x: jax.Array, n: int) -> jax.Array:
+    """Last n steps of (B, S, C), left-padded with zeros if S < n."""
+    B, S, C = x.shape
+    if S >= n:
+        return x[:, S - n :]
+    return jnp.pad(x, ((0, 0), (n - S, 0), (0, 0)))
+
+
+def mamba_step(
+    p: dict,
+    x: jax.Array,                  # (B, 1, d)
+    cache: dict,
+    cfg: ArchConfig,
+    ctx: ModelCtx,
+):
+    """One-token recurrent Mamba2 step (decode)."""
+    di, H, G, N, P, K = dims(cfg)
+    B = x.shape[0]
+    h = rms_norm(x[:, 0], p["pre_norm"], eps=cfg.norm_eps)      # (B, d)
+    z, xin, bc, dt = _in_proj(p, h, cfg, ctx)                   # (B, ·)
+
+    xc, conv_x = conv_step(xin, cache["conv_x"], p["conv_w_x"], p["conv_b_x"])
+    bcc, conv_bc = conv_step(bc, cache["conv_bc"], p["conv_w_bc"], p["conv_b_bc"])
+    b1 = bcc[..., :N].astype(jnp.float32)
+    c1 = bcc[..., N:].astype(jnp.float32)
+
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    y, ssd_state = ssd_step(
+        xc.reshape(B, H, P), dt, a, b1, c1, p["d_skip"], cache["ssd"]
+    )
+    y = y.reshape(B, di)
+    y = rms_norm((y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype),
+                 p["gate_norm"], eps=cfg.norm_eps)
+    out = dense(y, p["w_out"], quant=ctx.quant)[:, None]        # (B, 1, d)
+    new_cache = {"conv_x": conv_x, "conv_bc": conv_bc, "ssd": ssd_state}
+    return out, new_cache

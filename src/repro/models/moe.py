@@ -1,0 +1,118 @@
+"""Mixture-of-Experts FFN: top-k token-choice routing, capacity dispatch, EP.
+
+GShard-style dispatch: tokens are grouped per batch element, each group
+dispatches into an (experts, capacity) buffer via one-hot einsums — the
+TPU-native formulation (no scatter). Expert weights are sharded over the
+"model" mesh axis (expert parallelism); the dispatched activations carry an
+"experts" sharding constraint so XLA inserts the all-to-all.
+
+The router (gating network) is NEVER quantized — paper §IV-C excludes it.
+Expert matmuls are quantized along the contraction dim like every other
+linear layer.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import ModelCtx, dense
+from repro.models.params import PSpec
+from repro.core.qlinear import quantize_activation, quantize_weight
+
+
+def moe_specs(cfg: ArchConfig) -> dict:
+    m = cfg.moe
+    d, fe, E = cfg.d_model, m.d_expert, m.n_experts
+    specs = {
+        # router in f32: small, excluded from quantization, numerically touchy
+        "router": PSpec((d, E), ("fsdp", None), dtype=jnp.float32),
+    }
+    if cfg.activation == "swiglu":
+        specs["wg"] = PSpec((E, d, fe), ("experts", "fsdp", None))
+        specs["wu"] = PSpec((E, d, fe), ("experts", "fsdp", None))
+    else:
+        specs["wi"] = PSpec((E, d, fe), ("experts", "fsdp", None))
+    specs["wo"] = PSpec((E, fe, d), ("experts", None, "fsdp"))
+    return specs
+
+
+def capacity(cfg: ArchConfig, tokens_per_group: int) -> int:
+    m = cfg.moe
+    c = math.ceil(tokens_per_group * m.top_k * m.capacity_factor / m.n_experts)
+    return max(4, -(-c // 4) * 4)  # round up to a multiple of 4, floor 4
+
+
+def _dispatch_combine(idx: jax.Array, gates: jax.Array, E: int, C: int):
+    """Build the (B, S, E, C) combine tensor (gate-weighted one-hots).
+
+    idx (B, S, k) int32 — chosen experts; gates (B, S, k) f32. Tokens beyond
+    an expert's capacity C within their group are dropped (standard GShard).
+    Returns combine f32 and the boolean dispatch mask.
+    """
+    B, S, k = idx.shape
+    prev = jnp.zeros((B, E), jnp.int32)
+    combine = jnp.zeros((B, S, E, C), jnp.float32)
+    for slot in range(k):
+        mask = jax.nn.one_hot(idx[:, :, slot], E, dtype=jnp.int32)     # (B,S,E)
+        pos = jnp.cumsum(mask, axis=1) - mask + prev[:, None, :]       # (B,S,E)
+        prev = prev + jnp.sum(mask, axis=1)
+        keep = (pos < C) & (mask > 0)                                  # (B,S,E)
+        pos_oh = jax.nn.one_hot(jnp.clip(pos, 0, C - 1), C, dtype=jnp.float32)
+        combine = combine + (
+            pos_oh * keep[..., None] * gates[:, :, slot, None, None]
+        )
+    dispatch = combine > 0.0
+    return combine, dispatch
+
+
+def moe_apply(p: dict, x: jax.Array, cfg: ArchConfig, ctx: ModelCtx) -> jax.Array:
+    """x (B, S, d) -> (B, S, d). Each batch element is one dispatch group."""
+    m = cfg.moe
+    B, S, d = x.shape
+    E, C = m.n_experts, capacity(cfg, S)
+
+    # --- routing (unquantized, f32) ---
+    logits = dense(x, p["router"]).astype(jnp.float32)        # (B,S,E), NO quant
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, m.top_k)                # (B,S,k)
+    gates = gates / jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+
+    combine, dispatch = _dispatch_combine(idx, gates, E, C)
+
+    # --- dispatch: token-major -> expert-major (all-to-all under EP) ---
+    xe = jnp.einsum("bsec,bsd->becd", dispatch.astype(x.dtype), x)
+    xe = ctx.shard.constrain(xe, "batch", "experts", None, None)
+
+    # --- expert FFN (quantized like any linear layer) ---
+    def qbmm(a, w, a_axis=-1, w_axis=1):
+        """Batched-expert einsum with A-W quantization on the contraction."""
+        if ctx.quant.enabled:
+            a = quantize_activation(a, ctx.quant, axis=a_axis)
+            w = quantize_weight(w, ctx.quant, axis=w_axis)
+        return jnp.einsum("becd,edf->becf", a, w)
+
+    if cfg.activation == "swiglu":
+        h = jax.nn.silu(qbmm(xe, p["wg"]).astype(jnp.float32))
+        h = (h * qbmm(xe, p["wu"]).astype(jnp.float32)).astype(x.dtype)
+    else:
+        h = jax.nn.gelu(qbmm(xe, p["wi"]).astype(jnp.float32)).astype(x.dtype)
+    h = ctx.shard.constrain(h, "batch", "experts", None, None)
+    ye = qbmm(h, p["wo"])                                      # (B,E,C,d)
+    ye = ctx.shard.constrain(ye, "batch", "experts", None, None)
+
+    # --- combine: expert-major -> token-major ---
+    y = jnp.einsum("bsec,becd->bsd", combine.astype(ye.dtype), ye)
+    return y.astype(x.dtype)
+
+
+def aux_load_balance_loss(logits: jax.Array, idx: jax.Array, n_experts: int):
+    """Switch-Transformer load-balancing auxiliary loss (for training)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    me = jnp.mean(probs.reshape(-1, n_experts), axis=0)
+    ce = jnp.mean(
+        jax.nn.one_hot(idx[..., 0].reshape(-1), n_experts, dtype=jnp.float32), axis=0
+    )
+    return n_experts * jnp.sum(me * ce)

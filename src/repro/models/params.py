@@ -1,0 +1,105 @@
+"""Abstract parameter specs: shapes + logical sharding axes, no allocation.
+
+Every model family first builds a pytree of :class:`PSpec` leaves. From that
+single source of truth we derive:
+
+* ``init_from_specs``      — materialized random params (smoke tests, examples)
+* ``shape_structs``        — ``jax.ShapeDtypeStruct`` tree (dry-run: no memory)
+* ``shardings_from_specs`` — NamedShardings resolved via :class:`ShardCtx`
+* ``pspecs_from_specs``    — raw PartitionSpecs (for in_shardings of pjit)
+
+Keeping specs abstract is what lets the 340B configs lower on a CPU-only
+container: the dry-run never allocates a single parameter.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.rules import ShardCtx
+
+
+@dataclasses.dataclass(frozen=True)
+class PSpec:
+    """One parameter: shape, logical axis names, dtype, initializer."""
+
+    shape: tuple
+    axes: tuple                      # logical names (or None), len == ndim
+    dtype: Any = jnp.bfloat16
+    init: str = "normal"             # normal | zeros | ones
+    std: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_pspec(x) -> bool:
+    return isinstance(x, PSpec)
+
+
+def tree_map_specs(fn, tree):
+    return jax.tree_util.tree_map(fn, tree, is_leaf=is_pspec)
+
+
+def stack_specs(tree, n: int, axis_name: str = "layers"):
+    """Add a leading stacked-layer axis of size ``n`` to every leaf."""
+    return tree_map_specs(
+        lambda p: PSpec(
+            shape=(n,) + p.shape,
+            axes=(axis_name,) + p.axes,
+            dtype=p.dtype,
+            init=p.init,
+            std=p.std,
+        ),
+        tree,
+    )
+
+
+def init_from_specs(tree, key: jax.Array):
+    """Materialize parameters (deterministic per-leaf key via fold_in)."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree, is_leaf=is_pspec)
+
+    def one(i: int, p: PSpec):
+        if p.init == "zeros":
+            return jnp.zeros(p.shape, p.dtype)
+        if p.init == "ones":
+            return jnp.ones(p.shape, p.dtype)
+        k = jax.random.fold_in(key, i)
+        x = jax.random.truncated_normal(k, -2.0, 2.0, p.shape, jnp.float32) * p.std
+        return x.astype(p.dtype)
+
+    return jax.tree_util.tree_unflatten(
+        treedef, [one(i, p) for i, p in enumerate(leaves)]
+    )
+
+
+def shape_structs(tree, sharding_tree=None):
+    """ShapeDtypeStruct tree for .lower() — optionally carrying shardings."""
+    if sharding_tree is None:
+        return tree_map_specs(lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), tree)
+    return jax.tree_util.tree_map(
+        lambda p, s: jax.ShapeDtypeStruct(p.shape, p.dtype, sharding=s),
+        tree,
+        sharding_tree,
+        is_leaf=is_pspec,
+    )
+
+
+def pspecs_from_specs(tree, shard: ShardCtx):
+    return tree_map_specs(lambda p: shard.pspec(p.axes, p.shape), tree)
+
+
+def shardings_from_specs(tree, shard: ShardCtx):
+    return tree_map_specs(lambda p: shard.sharding(p.axes, p.shape), tree)
+
+
+def n_elements(tree) -> int:
+    import numpy as np
+
+    total = 0
+    for p in jax.tree_util.tree_leaves(tree, is_leaf=is_pspec):
+        total += int(np.prod(p.shape))
+    return total

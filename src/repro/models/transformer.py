@@ -1,0 +1,220 @@
+"""Transformer blocks: GQA attention (qk-norm, QKV-bias) + dense MLPs.
+
+All linear layers run through :func:`repro.models.common.dense`, which
+applies the configured BFP quantization (HiF4/NVFP4/MXFP4) along the
+contraction dimension — the paper's A-W PTQ placement (§IV). Norms,
+softmax, RoPE stay high-precision.
+
+Three attention execution modes:
+  * full    — flash attention over the whole sequence (train / encoder)
+  * prefill — full + returns the RoPE'd KV as a cache
+  * decode  — one token vs. a KV cache (append at ``pos``)
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.attention import AttnChunking, decode_attention, flash_attention
+from repro.models.common import ModelCtx, apply_rope, dense, layer_norm, rms_norm
+from repro.models.params import PSpec
+
+
+# ---------------------------------------------------------------------------
+# Norm wrapper (family-dependent: audio uses LN+bias, LMs use RMSNorm)
+# ---------------------------------------------------------------------------
+
+
+def norm_specs(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    if cfg.family == "audio":
+        return {
+            "w": PSpec((d,), (None,), init="ones"),
+            "b": PSpec((d,), (None,), init="zeros"),
+        }
+    return {"w": PSpec((d,), (None,), init="ones")}
+
+
+def norm_apply(p: dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    if "b" in p:
+        return layer_norm(x, p["w"], p["b"], eps=cfg.norm_eps)
+    return rms_norm(x, p["w"], eps=cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def attn_specs(cfg: ArchConfig) -> dict:
+    a = cfg.attn
+    d = cfg.d_model
+    specs = {
+        "wq": PSpec((d, a.n_heads, a.d_head), ("fsdp", "heads", None)),
+        "wk": PSpec((d, a.n_kv_heads, a.d_head), ("fsdp", "kv_heads", None)),
+        "wv": PSpec((d, a.n_kv_heads, a.d_head), ("fsdp", "kv_heads", None)),
+        "wo": PSpec((a.n_heads, a.d_head, d), ("heads", None, "fsdp")),
+    }
+    if a.qkv_bias:
+        specs["bq"] = PSpec((a.n_heads, a.d_head), ("heads", None), init="zeros")
+        specs["bk"] = PSpec((a.n_kv_heads, a.d_head), ("kv_heads", None), init="zeros")
+        specs["bv"] = PSpec((a.n_kv_heads, a.d_head), ("kv_heads", None), init="zeros")
+    if a.qk_norm:
+        specs["q_norm"] = PSpec((a.d_head,), (None,), init="ones")
+        specs["k_norm"] = PSpec((a.d_head,), (None,), init="ones")
+    return specs
+
+
+def _proj_qkv(p: dict, x: jax.Array, cfg: ArchConfig, ctx: ModelCtx):
+    """x (..., d) -> q (..., H, Dh), k/v (..., Hkv, Dh), RoPE NOT yet applied."""
+    a = cfg.attn
+    d = cfg.d_model
+    lead = x.shape[:-1]
+    q = dense(x, p["wq"].reshape(d, -1), quant=ctx.quant).reshape(
+        lead + (a.n_heads, a.d_head)
+    )
+    k = dense(x, p["wk"].reshape(d, -1), quant=ctx.quant).reshape(
+        lead + (a.n_kv_heads, a.d_head)
+    )
+    v = dense(x, p["wv"].reshape(d, -1), quant=ctx.quant).reshape(
+        lead + (a.n_kv_heads, a.d_head)
+    )
+    if a.qkv_bias:
+        q = q + p["bq"].astype(q.dtype)
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    if a.qk_norm:
+        q = rms_norm(q, p["q_norm"], eps=cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], eps=cfg.norm_eps)
+    return q, k, v
+
+
+def _out_proj(p: dict, o: jax.Array, cfg: ArchConfig, ctx: ModelCtx) -> jax.Array:
+    a = cfg.attn
+    lead = o.shape[:-2]
+    o = o.reshape(lead + (a.n_heads * a.d_head,))
+    return dense(o, p["wo"].reshape(-1, cfg.d_model), quant=ctx.quant)
+
+
+def attn_full(
+    p: dict,
+    x: jax.Array,                 # (B, S, d)
+    cfg: ArchConfig,
+    ctx: ModelCtx,
+    *,
+    causal: bool = True,
+    use_rope: bool = True,
+    return_cache: bool = False,
+):
+    """Full-sequence attention; optionally returns the KV cache (prefill)."""
+    B, S, _ = x.shape
+    q, k, v = _proj_qkv(p, x, cfg, ctx)
+    if use_rope:
+        positions = jnp.arange(S)
+        q = apply_rope(q, positions, cfg.attn.rope_theta)
+        k = apply_rope(k, positions, cfg.attn.rope_theta)
+    chunking = AttnChunking(
+        q_chunk=min(ctx.attn_q_chunk, S), k_chunk=min(ctx.attn_k_chunk, S)
+    )
+    if ctx.attn_impl == "vec_q":
+        from repro.models import attention as attn_mod
+
+        attn_mod._VEC_CONSTRAIN[0] = lambda qc: ctx.shard.constrain(
+            qc, "batch", "attn_q_chunks", None, None, None, None
+        )
+        o = attn_mod.flash_mha_vec(q, k, v, causal, 0, chunking)
+    else:
+        # NOTE (§Perf, refuted hypothesis): repeating KV to full heads when
+        # kv_heads don't divide the TP axis was tried to remove the per-tile
+        # all-to-alls XLA emits for the (g, rep) head split — it REGRESSED
+        # (343s vs 314s collective on 340B train: the repeated-KV gathers
+        # outweigh the all-to-alls they replace). Kept as measured evidence.
+        q = ctx.shard.constrain(q, "batch", None, "heads", None)
+        k = ctx.shard.constrain(k, "batch", None, "kv_heads", None)
+        v = ctx.shard.constrain(v, "batch", None, "kv_heads", None)
+        o = flash_attention(q, k, v, causal=causal, chunking=chunking)
+    y = _out_proj(p, o, cfg, ctx)
+    if return_cache:
+        return y, {"k": k, "v": v}
+    return y, None
+
+
+def attn_decode(
+    p: dict,
+    x: jax.Array,                 # (B, 1, d) — the new token's hidden state
+    cache: dict,                  # {"k","v"}: (B, S, Hkv, Dh); roped already
+    pos: jax.Array,               # scalar int32: number of valid cache slots
+    cfg: ArchConfig,
+    ctx: ModelCtx,
+    *,
+    use_rope: bool = True,
+    cross: bool = False,          # cross-attention: read-only cache, no append
+):
+    """One-token attention against (and, unless cross, appending to) a cache."""
+    B = x.shape[0]
+    q, k_new, v_new = _proj_qkv(p, x, cfg, ctx)        # (B, 1, H/Hkv, Dh)
+    if use_rope:
+        positions = pos + jnp.arange(1)
+        q = apply_rope(q, positions, cfg.attn.rope_theta)
+        if not cross:
+            k_new = apply_rope(k_new, positions, cfg.attn.rope_theta)
+    if cross:
+        new_cache = cache
+        length = jnp.full((B,), cache["k"].shape[1], jnp.int32)
+    else:
+        k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                         (0, pos, 0, 0))
+        v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                         (0, pos, 0, 0))
+        new_cache = {"k": k, "v": v}
+        length = jnp.full((B,), pos + 1, jnp.int32)
+    o = decode_attention(q[:, 0], new_cache["k"], new_cache["v"], length)
+    y = _out_proj(p, o[:, None], cfg, ctx)             # (B, 1, d)
+    return y, new_cache
+
+
+def attn_cache_specs(cfg: ArchConfig, batch: int, seq: int) -> dict:
+    """Abstract per-layer KV-cache spec. seq is sharded over the TP axis
+    ("kv_seq" context parallelism) — kv_heads rarely divide the model axis
+    (8 kv heads vs 16-way TP) whereas 32k..512k sequences always do."""
+    a = cfg.attn
+    return {
+        "k": PSpec((batch, seq, a.n_kv_heads, a.d_head),
+                   ("batch", "kv_seq", None, None)),
+        "v": PSpec((batch, seq, a.n_kv_heads, a.d_head),
+                   ("batch", "kv_seq", None, None)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Dense MLP (swiglu | squared_relu | gelu)
+# ---------------------------------------------------------------------------
+
+
+def mlp_specs(cfg: ArchConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.activation == "swiglu":
+        return {
+            "wg": PSpec((d, f), ("fsdp", "ff")),
+            "wu": PSpec((d, f), ("fsdp", "ff")),
+            "wo": PSpec((f, d), ("ff", "fsdp")),
+        }
+    return {
+        "wi": PSpec((d, f), ("fsdp", "ff")),
+        "wo": PSpec((f, d), ("ff", "fsdp")),
+    }
+
+
+def mlp_apply(p: dict, x: jax.Array, cfg: ArchConfig, ctx: ModelCtx) -> jax.Array:
+    if cfg.activation == "swiglu":
+        h = jax.nn.silu(dense(x, p["wg"], quant=ctx.quant).astype(jnp.float32))
+        h = (h * dense(x, p["wu"], quant=ctx.quant).astype(jnp.float32)).astype(x.dtype)
+    else:
+        h = dense(x, p["wi"], quant=ctx.quant).astype(jnp.float32)
+        h = jnp.square(jax.nn.relu(h)) if cfg.activation == "squared_relu" else jax.nn.gelu(h)
+        h = h.astype(x.dtype)
+    h = ctx.shard.constrain(h, "batch", None, "ff")
+    return dense(h, p["wo"], quant=ctx.quant)

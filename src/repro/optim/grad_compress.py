@@ -1,0 +1,136 @@
+"""HiF4 gradient compression for data-parallel all-reduce (beyond-paper).
+
+Why HiF4 specifically: gradients have a huge dynamic range across tensors
+and steps. FP8/NVFP4-style compressors need per-tensor software scaling
+passes before every reduce; HiF4's 69-binade global range (Table II) lets
+gradients be cast DIRECTLY, no scale sweep — the same property that saves
+Mistral-7B in the paper's Table III saves the optimizer here.
+
+Transport actually moves 4.5 bits/value: the all-reduce is decomposed as
+  pack (codes uint8 + meta uint32)
+  -> all_to_all         (each rank owns 1/N of the groups; wire = packed)
+  -> local dequant+sum  (f32)
+  -> requant+pack
+  -> all_gather         (wire = packed)
+i.e. the classic compressed reduce-scatter/all-gather, 16/4.5 = 3.56x less
+wire than a bf16 ring all-reduce. A local error-feedback accumulator keeps
+the compound update unbiased over steps (Karimireddy et al.-style EF).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hif4
+
+GROUP = hif4.GROUP_SIZE
+
+
+def _flatten_to_groups(x: jnp.ndarray):
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    pad = (-n) % GROUP
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, GROUP), n
+
+
+def qdq_flat(x: jnp.ndarray) -> jnp.ndarray:
+    """HiF4 QDQ of an arbitrary tensor in flat 64-groups (for EF math)."""
+    groups, n = _flatten_to_groups(x)
+    deq = hif4.dequantize_groups(hif4.quantize_groups(groups))
+    return deq.reshape(-1)[:n].reshape(x.shape).astype(x.dtype)
+
+
+def pack_flat(x: jnp.ndarray):
+    """tensor -> (codes (G, 32) uint8, meta (G,) uint32, orig_len)."""
+    groups, n = _flatten_to_groups(x)
+    packed = hif4.pack_groups(hif4.quantize_groups(groups))
+    return packed.codes, packed.meta, n
+
+
+def unpack_flat(codes, meta, n, shape, dtype=jnp.float32):
+    vals = hif4.dequantize_groups(hif4.unpack_groups(hif4.HiF4Packed(codes, meta)))
+    return vals.reshape(-1)[:n].reshape(shape).astype(dtype)
+
+
+def compressed_psum(x: jnp.ndarray, axis_name: str, n_dev: int) -> jnp.ndarray:
+    """All-reduce-mean of ``x`` moving HiF4-packed bytes on the wire.
+
+    Must run inside shard_map/pmap over ``axis_name``. Groups are sharded
+    round-robin across ranks for the reduce-scatter phase.
+    """
+    groups, n = _flatten_to_groups(x)
+    g = groups.shape[0]
+    pad_g = (-g) % n_dev
+    if pad_g:
+        groups = jnp.pad(groups, ((0, pad_g), (0, 0)))
+    packed = hif4.pack_groups(hif4.quantize_groups(groups))
+
+    # reduce-scatter phase: rank i receives chunk i of every peer
+    codes = packed.codes.reshape(n_dev, -1, 32)
+    meta = packed.meta.reshape(n_dev, -1)
+    codes_x = jax.lax.all_to_all(codes, axis_name, 0, 0, tiled=False)
+    meta_x = jax.lax.all_to_all(meta, axis_name, 0, 0, tiled=False)
+    # local dequant + sum over peers (f32)
+    vals = hif4.dequantize_groups(
+        hif4.unpack_groups(hif4.HiF4Packed(codes_x, meta_x))
+    )                                               # (n_dev, g/n_dev, 64)
+    local_sum = jnp.mean(vals, axis=0)
+
+    # all-gather phase: share requantized partial sums
+    rs = hif4.pack_groups(hif4.quantize_groups(local_sum))
+    codes_g = jax.lax.all_gather(rs.codes, axis_name)   # (n_dev, g/n_dev, 32)
+    meta_g = jax.lax.all_gather(rs.meta, axis_name)
+    full = hif4.dequantize_groups(
+        hif4.unpack_groups(hif4.HiF4Packed(codes_g, meta_g))
+    ).reshape(-1, GROUP)
+    if pad_g:
+        full = full[:g]
+    return full.reshape(-1)[:n].reshape(x.shape).astype(x.dtype)
+
+
+def ef_compress_step(grad: jnp.ndarray, err: jnp.ndarray):
+    """Error-feedback: returns (compressed value to reduce, new residual)."""
+    target = grad.astype(jnp.float32) + err
+    q = qdq_flat(target)
+    return q, target - q
+
+
+def make_dp_compressed_train_step(loss_fn, opt_update, mesh, axis: str = "data"):
+    """shard_map DP train step with HiF4-compressed gradient all-reduce.
+
+    Params replicated per rank; batch split over ``axis``. Suitable for
+    the inter-pod DP axis (the slow links) of models that fit replicated —
+    the TP/FSDP axes keep XLA's native collectives.
+    """
+    from jax.sharding import PartitionSpec as P
+    from jax import shard_map
+
+    n_dev = mesh.shape[axis]
+
+    def step(params, opt_state, err, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        flat_g, tdef = jax.tree_util.tree_flatten(grads)
+        flat_e = tdef.flatten_up_to(err)
+        reduced, new_err = [], []
+        for g, e in zip(flat_g, flat_e):
+            q, res = ef_compress_step(g, e)
+            r = compressed_psum(q, axis, n_dev)
+            reduced.append(r.astype(g.dtype))
+            new_err.append(res)
+        grads = jax.tree_util.tree_unflatten(tdef, reduced)
+        err_out = jax.tree_util.tree_unflatten(tdef, new_err)
+        loss = jax.lax.pmean(loss, axis)
+        new_params, new_opt, stats = opt_update(params, grads, opt_state)
+        return new_params, new_opt, err_out, dict(stats, loss=loss)
+
+    return shard_map(
+        step,
+        mesh=mesh,
+        in_specs=(P(), P(), P(), P(axis)),
+        out_specs=(P(), P(), P(), P()),
+        check_vma=False,
+    )  # check_vma off: compressed_psum mixes manual pack/unpack with psum

@@ -1,0 +1,2 @@
+from repro.runtime.train_loop import TrainLoopConfig, train  # noqa: F401
+from repro.runtime.serve_loop import ServeConfig, serve  # noqa: F401

@@ -1,0 +1,70 @@
+"""Batched serving loop: offline weight PTQ -> prefill -> greedy decode.
+
+Weights are quantized ONCE (``quantize_params_offline``) — the deployment
+artifact; activations are cast dynamically inside each step (the paper's
+A-W placement). The KV cache buffer is donated so decode updates in place.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.qlinear import QuantConfig, quantize_params_offline
+from repro.models import lm
+from repro.models.common import ModelCtx
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_new_tokens: int = 32
+    cache_capacity: Optional[int] = None   # default: prompt + max_new
+
+
+def prepare_params_for_serving(params: dict, quant: QuantConfig) -> dict:
+    """Offline PTQ of every block weight (embed/head/router excluded)."""
+    if not quant.enabled:
+        return params
+    out = dict(params)
+    for key in ("blocks", "shared", "enc_blocks"):
+        if key in out:
+            out[key] = quantize_params_offline(out[key], quant)
+    return out
+
+
+def serve(
+    cfg: ArchConfig,
+    params: dict,
+    batch: dict,                       # prefill inputs (tokens/embeds/frames)
+    ctx: ModelCtx,
+    serve_cfg: ServeConfig = ServeConfig(),
+):
+    """Greedy-decode ``max_new_tokens``; returns (B, T) int32 tokens."""
+    qcfg = dataclasses.replace(ctx.quant, offline_weights=True)
+    sctx = ModelCtx(quant=qcfg, shard=ctx.shard, remat=False,
+                    param_dtype=ctx.param_dtype, compute_dtype=ctx.compute_dtype,
+                    attn_q_chunk=ctx.attn_q_chunk, attn_k_chunk=ctx.attn_k_chunk)
+    params = prepare_params_for_serving(params, ctx.quant)
+
+    logits, cache = jax.jit(lambda p, b: lm.prefill(p, b, cfg, sctx))(
+        params, batch
+    )
+    if cfg.family in ("dense", "vlm", "moe", "audio", "hybrid"):
+        prompt_len = int(cache["pos"])
+        cap = serve_cfg.cache_capacity or prompt_len + serve_cfg.max_new_tokens
+        cache = lm.pad_cache(cache, cfg, cap)
+
+    step = jax.jit(
+        lambda p, t, c: lm.decode_step(p, t, c, cfg, sctx),
+        donate_argnums=(2,),
+    )
+    token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    out = [token]
+    for _ in range(serve_cfg.max_new_tokens - 1):
+        logits, cache = step(params, token, cache)
+        token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out.append(token)
+    return jnp.stack(out, axis=1)

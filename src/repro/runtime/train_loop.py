@@ -1,0 +1,121 @@
+"""Fault-tolerant training loop.
+
+* resumes from the latest valid checkpoint (params + opt state + data-
+  iterator state), bit-deterministically — kill the process anywhere and
+  the restarted run produces the same trajectory (tested);
+* async checkpoints (serialization overlaps compute);
+* step-time straggler monitor: flags steps slower than ``straggler_factor``
+  x the trailing median — on real fleets this feeds the reschedule signal;
+* optional HiF4-compressed data-parallel gradient all-reduce (beyond-paper,
+  see optim/grad_compress.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager, latest_step, load_checkpoint
+from repro.configs.base import ArchConfig
+from repro.data import SyntheticLMDataset
+from repro.launch.steps import make_train_step
+from repro.models import lm
+from repro.models.common import ModelCtx
+from repro.models.params import shardings_from_specs
+from repro.optim.adamw import AdamWConfig, adamw_init_specs
+from repro.models.params import init_from_specs
+
+
+@dataclasses.dataclass
+class TrainLoopConfig:
+    steps: int = 100
+    global_batch: int = 8
+    seq_len: int = 128
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 25
+    log_every: int = 10
+    straggler_factor: float = 3.0
+    num_microbatches: int = 1
+    seed: int = 0
+    data_noise: float = 0.05
+
+
+def train(
+    cfg: ArchConfig,
+    ctx: ModelCtx,
+    loop: TrainLoopConfig,
+    opt_cfg: Optional[AdamWConfig] = None,
+    on_step: Optional[Callable[[int, dict], None]] = None,
+):
+    """Returns (params, opt_state, history dict)."""
+    opt_cfg = opt_cfg or AdamWConfig(
+        lr=1e-3, total_steps=loop.steps,
+        warmup_steps=max(1, loop.steps // 10),
+    )
+    data = SyntheticLMDataset(cfg.vocab, loop.seq_len, loop.global_batch,
+                              seed=loop.seed, noise=loop.data_noise)
+
+    pspecs = lm.abstract_params(cfg)
+    ospecs = adamw_init_specs(pspecs)
+    p_shard = shardings_from_specs(pspecs, ctx.shard)
+    o_shard = shardings_from_specs(ospecs, ctx.shard)
+
+    start_step = 0
+    params = opt_state = None
+    if loop.checkpoint_dir:
+        s = latest_step(loop.checkpoint_dir)
+        if s is not None:
+            target = jax.eval_shape(
+                lambda: (
+                    init_from_specs(pspecs, jax.random.PRNGKey(0)),
+                    init_from_specs(ospecs, jax.random.PRNGKey(0)),
+                )
+            )
+            (params, opt_state), extra = load_checkpoint(
+                loop.checkpoint_dir, s, target,
+                shardings=(p_shard, o_shard) if ctx.shard.mesh is not None else None,
+            )
+            data.load_state_dict(extra["data"])
+            start_step = int(extra["step"])
+    if params is None:
+        params = init_from_specs(pspecs, jax.random.PRNGKey(loop.seed))
+        opt_state = init_from_specs(ospecs, jax.random.PRNGKey(0))
+
+    step_fn = jax.jit(
+        make_train_step(cfg, ctx, opt_cfg,
+                        num_microbatches=loop.num_microbatches),
+        donate_argnums=(0, 1),
+    )
+
+    mgr = CheckpointManager(loop.checkpoint_dir) if loop.checkpoint_dir else None
+    history = {"loss": [], "step_time": [], "stragglers": []}
+    times: list[float] = []
+
+    for step in range(start_step, loop.steps):
+        batch = data.batch_at(step)
+        data.step = step + 1
+        t0 = time.time()
+        params, opt_state, stats = step_fn(params, opt_state, batch)
+        loss = float(stats["loss"])
+        dt = time.time() - t0
+        times.append(dt)
+        history["loss"].append(loss)
+        history["step_time"].append(dt)
+        # straggler detection against the trailing median
+        if len(times) >= 5:
+            med = float(np.median(times[-20:]))
+            if dt > loop.straggler_factor * med:
+                history["stragglers"].append(step)
+        if on_step:
+            on_step(step, {"loss": loss, "time": dt})
+        if mgr and (step + 1) % loop.checkpoint_every == 0:
+            mgr.save_async(step + 1, (params, opt_state),
+                           {"step": step + 1, "data": data.state_dict()})
+    if mgr:
+        mgr.save_async(loop.steps, (params, opt_state),
+                       {"step": loop.steps, "data": data.state_dict()})
+        mgr.wait()
+    return params, opt_state, history

@@ -1,0 +1,1 @@
+from repro.sharding.rules import NO_SHARD, ShardCtx  # noqa: F401

@@ -1,0 +1,112 @@
+"""Logical-axis sharding rules with divisibility fallback.
+
+Models annotate tensors with *logical* axis names ("batch", "heads",
+"ff", ...). A :class:`ShardCtx` resolves them against a concrete mesh:
+any logical axis whose dimension does not divide the product of its mesh
+axes is replicated instead (dropped from the spec). This is what lets the
+same model code lower on a 1-device CPU (everything replicated), a 256-chip
+pod, and a 512-chip multi-pod mesh without per-arch special cases.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> tuple of mesh axes it shards over (in order)
+DEFAULT_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),       # data parallel
+    "seq": (),                      # unsharded by default (SP optional)
+    "act_seq": ("model",),          # Megatron-style SP: residual-stream seq
+    #                                 at layer boundaries shards over TP axis
+    #                                 so remat-saved activations fit HBM
+    "kv_seq": ("model",),           # context-parallel KV cache (decode)
+    "embed": (),                    # d_model replicated by default
+    "heads": ("model",),            # TP over attention heads
+    "attn_q_chunks": ("model",),    # vec_q flash: q-chunk axis over TP when
+    #                                 heads don't divide the model axis
+    "kv_heads": ("model",),         # TP over KV heads
+    "ff": ("model",),               # TP over FFN hidden
+    "experts": ("model",),          # EP over experts
+    "vocab": ("model",),            # TP over vocab for embed/head
+    "ssm_inner": ("model",),        # TP over mamba d_inner
+    "layers": (),                   # stacked-layer axis never sharded
+    "opt_shard": ("pod", "data"),   # ZeRO-1 axis for optimizer state
+    # FSDP weight sharding (large models): shard the non-TP weight axis
+    # (usually d_model) over the DP axes; XLA inserts per-layer all-gathers.
+    "fsdp": ("data",),
+}
+
+
+@dataclasses.dataclass
+class ShardCtx:
+    """Resolves logical specs against a mesh; None mesh = no-op (CPU tests)."""
+
+    mesh: Optional[Mesh] = None
+    rules: dict[str, tuple[str, ...]] = dataclasses.field(
+        default_factory=lambda: dict(DEFAULT_RULES)
+    )
+
+    def with_rules(self, **overrides: tuple[str, ...]) -> "ShardCtx":
+        r = dict(self.rules)
+        r.update(overrides)
+        return ShardCtx(mesh=self.mesh, rules=r)
+
+    # -- resolution ---------------------------------------------------------
+
+    def _axes_for(self, logical: Optional[str], dim: int) -> Optional[tuple[str, ...]]:
+        if logical is None or self.mesh is None:
+            return None
+        mesh_axes = tuple(
+            a for a in self.rules.get(logical, ()) if a in self.mesh.shape
+        )
+        if not mesh_axes:
+            return None
+        total = 1
+        for a in mesh_axes:
+            total *= self.mesh.shape[a]
+        if dim % total != 0:
+            # divisibility fallback: try a prefix of the axes, else replicate
+            for cut in range(len(mesh_axes) - 1, 0, -1):
+                sub = mesh_axes[:cut]
+                t = 1
+                for a in sub:
+                    t *= self.mesh.shape[a]
+                if dim % t == 0:
+                    return sub
+            return None
+        return mesh_axes
+
+    def pspec(self, logical_axes: Sequence[Optional[str]], shape: Sequence[int]) -> P:
+        assert len(logical_axes) == len(shape), (logical_axes, shape)
+        used: set[str] = set()
+        parts = []
+        for name, dim in zip(logical_axes, shape):
+            axes = self._axes_for(name, dim)
+            if axes is None or any(a in used for a in axes):
+                parts.append(None)
+            else:
+                used.update(axes)
+                parts.append(axes if len(axes) > 1 else axes[0])
+        return P(*parts)
+
+    def sharding(
+        self, logical_axes: Sequence[Optional[str]], shape: Sequence[int]
+    ) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.pspec(logical_axes, shape))
+
+    # -- in-graph constraint -------------------------------------------------
+
+    def constrain(self, x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+        """with_sharding_constraint on a traced value (no-op without mesh)."""
+        if self.mesh is None:
+            return x
+        s = self.sharding(logical_axes, x.shape)
+        return jax.lax.with_sharding_constraint(x, s)
+
+
+NO_SHARD = ShardCtx(mesh=None)

@@ -1,0 +1,187 @@
+"""Per-architecture smoke tests: reduced configs, one train loss + a short
+prefill->decode roll on CPU. Asserts output shapes and no NaNs.
+
+The FULL configs are exercised only via the dry-run (ShapeDtypeStruct, no
+allocation) — see launch/dryrun.py and EXPERIMENTS.md §Dry-run.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import all_archs, get_arch
+from repro.core.qlinear import QuantConfig
+from repro.models import lm
+from repro.models.common import ModelCtx
+
+B, S = 2, 64
+CTX = ModelCtx(quant=QuantConfig(fmt="hif4"), remat=False,
+               attn_q_chunk=32, attn_k_chunk=32)
+CTX_NOQ = ModelCtx(remat=False, attn_q_chunk=32, attn_k_chunk=32)
+
+
+def _train_batch(cfg, key):
+    kt, ke = jax.random.split(key)
+    if cfg.family == "audio":
+        return {
+            "frames": jax.random.normal(ke, (B, S, cfg.d_model), jnp.bfloat16),
+            "tokens": jax.random.randint(kt, (B, S), 0, cfg.vocab),
+        }
+    if cfg.embeds_input:
+        return {
+            "embeds": jax.random.normal(ke, (B, S, cfg.d_model), jnp.bfloat16),
+            "labels": jax.random.randint(kt, (B, S), 0, cfg.vocab),
+        }
+    return {"tokens": jax.random.randint(kt, (B, S), 0, cfg.vocab)}
+
+
+def _prefill_batch(cfg, key):
+    b = _train_batch(cfg, key)
+    b.pop("labels", None)
+    if cfg.family == "audio":
+        b.pop("tokens", None)
+    return b
+
+
+@pytest.fixture(scope="module")
+def arch_setup():
+    cache = {}
+
+    def get(name):
+        if name not in cache:
+            cfg = get_arch(name).reduced()
+            params = lm.init_params(cfg, jax.random.PRNGKey(0))
+            cache[name] = (cfg, params)
+        return cache[name]
+
+    return get
+
+
+@pytest.mark.parametrize("arch", all_archs())
+def test_train_loss(arch, arch_setup):
+    cfg, params = arch_setup(arch)
+    batch = _train_batch(cfg, jax.random.PRNGKey(1))
+    loss = jax.jit(lambda p, b: lm.train_loss(p, b, cfg, CTX))(params, batch)
+    assert loss.shape == ()
+    assert np.isfinite(float(loss)), f"{arch}: loss={loss}"
+    # quantized loss should be close to (not wildly off from) the bf16 loss
+    loss_bf16 = jax.jit(lambda p, b: lm.train_loss(p, b, cfg, CTX_NOQ))(
+        params, batch
+    )
+    assert abs(float(loss) - float(loss_bf16)) < 1.0, (
+        f"{arch}: hif4 {loss} vs bf16 {loss_bf16}"
+    )
+
+
+@pytest.mark.parametrize("arch", all_archs())
+def test_train_grads_finite(arch, arch_setup):
+    """Gradients must be finite and NONZERO with quantization enabled —
+    regression guard for the round()-has-zero-grad STE bug that silently
+    DCE'd the whole backward pass."""
+    cfg, params = arch_setup(arch)
+    batch = _train_batch(cfg, jax.random.PRNGKey(2))
+    grads = jax.jit(jax.grad(lambda p: lm.train_loss(p, batch, cfg, CTX)))(
+        params
+    )
+    flat = jax.tree_util.tree_leaves(grads)
+    assert all(bool(jnp.all(jnp.isfinite(g))) for g in flat), arch
+    # at least 90% of param tensors receive nonzero gradient signal
+    nz = [float(jnp.max(jnp.abs(g))) > 0 for g in flat]
+    assert sum(nz) >= 0.9 * len(nz), f"{arch}: {sum(nz)}/{len(nz)} nonzero"
+
+
+@pytest.mark.parametrize("arch", all_archs())
+def test_prefill_decode(arch, arch_setup):
+    cfg, params = arch_setup(arch)
+    batch = _prefill_batch(cfg, jax.random.PRNGKey(3))
+    logits, cache = jax.jit(lambda p, b: lm.prefill(p, b, cfg, CTX))(params, batch)
+    assert logits.shape == (B, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits))), arch
+
+    cache = lm.pad_cache(cache, cfg, S + 8)
+    step = jax.jit(lambda p, t, c: lm.decode_step(p, t, c, cfg, CTX))
+    token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    for _ in range(3):
+        logits, cache = step(params, token, cache)
+        assert logits.shape == (B, cfg.vocab)
+        assert bool(jnp.all(jnp.isfinite(logits))), arch
+        token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def test_decode_matches_prefill_dense():
+    """Teacher-forced decode must reproduce full-forward logits (bf16 tol).
+
+    This is the strongest correctness property of the cache path: running
+    the same tokens through prefill+decode and through one full forward
+    must agree position by position.
+    """
+    cfg = get_arch("qwen1.5-0.5b").reduced()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    ctx = CTX_NOQ
+    tokens = jax.random.randint(jax.random.PRNGKey(4), (B, 16), 0, cfg.vocab)
+
+    # full forward: logits for every position
+    x = lm.embed_tokens(params, tokens, cfg, ctx)
+    h, _ = lm._backbone(params, x, cfg, ctx, mode="train")
+    full_logits = lm.lm_logits(params, h, cfg, ctx)          # (B, 16, V)
+
+    # prefill on the first 8, then teacher-forced decode of the rest
+    logits, cache = lm.prefill(params, {"tokens": tokens[:, :8]}, cfg, ctx)
+    cache = lm.pad_cache(cache, cfg, 16)
+    np.testing.assert_allclose(
+        np.asarray(logits), np.asarray(full_logits[:, 7]), rtol=0.05, atol=0.05
+    )
+    for t in range(8, 16):
+        logits, cache = lm.decode_step(params, tokens[:, t], cache, cfg, ctx)
+        if t < 15:
+            np.testing.assert_allclose(
+                np.asarray(logits), np.asarray(full_logits[:, t]),
+                rtol=0.05, atol=0.05,
+            )
+
+
+def test_decode_matches_prefill_ssm():
+    """Same teacher-forcing property for the recurrent (Mamba2) path."""
+    cfg = get_arch("mamba2-1.3b").reduced()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    ctx = CTX_NOQ
+    tokens = jax.random.randint(jax.random.PRNGKey(5), (B, 64), 0, cfg.vocab)
+
+    x = lm.embed_tokens(params, tokens, cfg, ctx)
+    h, _ = lm._backbone(params, x, cfg, ctx, mode="train")
+    full_logits = lm.lm_logits(params, h, cfg, ctx)
+
+    logits, cache = lm.prefill(params, {"tokens": tokens[:, :32]}, cfg, ctx)
+    np.testing.assert_allclose(
+        np.asarray(logits), np.asarray(full_logits[:, 31]), rtol=0.06, atol=0.06
+    )
+    for t in range(32, 40):
+        logits, cache = lm.decode_step(params, tokens[:, t], cache, cfg, ctx)
+        if t < 63:
+            np.testing.assert_allclose(
+                np.asarray(logits), np.asarray(full_logits[:, t]),
+                rtol=0.06, atol=0.06,
+            )
+
+
+def test_vec_q_model_equivalence():
+    """The vec_q attention path (§Perf iteration 1) must produce the same
+    loss as scan_q — it's a scheduling/sharding change, not a math change."""
+    import dataclasses
+
+    cfg = get_arch("qwen1.5-4b").reduced()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(9), (B, S), 0,
+                                          cfg.vocab)}
+    l_scan = lm.train_loss(params, batch, cfg, CTX_NOQ)
+    ctx_vec = dataclasses.replace(CTX_NOQ, attn_impl="vec_q")
+    l_vec = lm.train_loss(params, batch, cfg, ctx_vec)
+    np.testing.assert_allclose(float(l_scan), float(l_vec), rtol=2e-3)
+
+    g_scan = jax.grad(lambda p: lm.train_loss(p, batch, cfg, CTX_NOQ))(params)
+    g_vec = jax.grad(lambda p: lm.train_loss(p, batch, cfg, ctx_vec))(params)
+    n_scan = sum(float(jnp.sum(x.astype(jnp.float32) ** 2))
+                 for x in jax.tree_util.tree_leaves(g_scan)) ** 0.5
+    n_vec = sum(float(jnp.sum(x.astype(jnp.float32) ** 2))
+                for x in jax.tree_util.tree_leaves(g_vec)) ** 0.5
+    np.testing.assert_allclose(n_scan, n_vec, rtol=5e-3)

@@ -1,0 +1,139 @@
+"""Flash attention: forward vs naive softmax oracle, custom-VJP gradients."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import (
+    AttnChunking,
+    decode_attention,
+    flash_attention,
+    flash_mha,
+    flash_mha_vec,
+)
+
+
+def naive_attention(q, k, v, causal=True):
+    B, Sq, H, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    rep = H // Hkv
+    qf = q.astype(jnp.float32).reshape(B, Sq, Hkv, rep, D) / (D ** 0.5)
+    s = jnp.einsum("bqgrd,bkgd->bgrqk", qf, k.astype(jnp.float32))
+    if causal:
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Sk)[None, :]
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgrqk,bkgd->bqgrd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def _rand(key, *shape):
+    return jax.random.normal(key, shape, jnp.float32)
+
+
+CHUNKS = AttnChunking(q_chunk=16, k_chunk=32)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("hkv", [1, 2, 4])
+def test_forward_matches_naive(causal, hkv):
+    keys = jax.random.split(jax.random.PRNGKey(0), 3)
+    B, S, H, D = 2, 64, 4, 16
+    q = _rand(keys[0], B, S, H, D)
+    k = _rand(keys[1], B, S, hkv, D)
+    v = _rand(keys[2], B, S, hkv, D)
+    got = flash_attention(q, k, v, causal=causal, chunking=CHUNKS)
+    want = naive_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+def test_grads_match_naive(causal):
+    """The custom VJP must match autodiff-of-naive to numerical tolerance."""
+    keys = jax.random.split(jax.random.PRNGKey(1), 3)
+    B, S, H, Hkv, D = 2, 64, 4, 2, 16
+    q = _rand(keys[0], B, S, H, D)
+    k = _rand(keys[1], B, S, Hkv, D)
+    v = _rand(keys[2], B, S, Hkv, D)
+
+    def loss_flash(q, k, v):
+        o = flash_mha(q, k, v, causal, 0, CHUNKS)
+        return jnp.sum(jnp.sin(o.astype(jnp.float32)))
+
+    def loss_naive(q, k, v):
+        o = naive_attention(q, k, v, causal=causal)
+        return jnp.sum(jnp.sin(o.astype(jnp.float32)))
+
+    g_flash = jax.grad(loss_flash, argnums=(0, 1, 2))(q, k, v)
+    g_naive = jax.grad(loss_naive, argnums=(0, 1, 2))(q, k, v)
+    for a, b, name in zip(g_flash, g_naive, "qkv"):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), atol=3e-5,
+            err_msg=f"d{name} mismatch (causal={causal})",
+        )
+
+
+def test_grads_match_uneven_chunks():
+    """Chunk shapes that don't align q and kv chunk boundaries."""
+    keys = jax.random.split(jax.random.PRNGKey(2), 3)
+    B, S, H, Hkv, D = 1, 96, 2, 1, 8
+    q = _rand(keys[0], B, S, H, D)
+    k = _rand(keys[1], B, S, Hkv, D)
+    v = _rand(keys[2], B, S, Hkv, D)
+    ch = AttnChunking(q_chunk=32, k_chunk=48)
+
+    def f(fn):
+        def loss(q, k, v):
+            return jnp.sum(fn(q, k, v) ** 2)
+        return jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
+
+    g1 = f(lambda q, k, v: flash_mha(q, k, v, True, 0, ch))
+    g2 = f(lambda q, k, v: naive_attention(q, k, v, causal=True))
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=3e-5)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+def test_vec_q_forward_matches_naive(causal):
+    keys = jax.random.split(jax.random.PRNGKey(5), 3)
+    B, S, H, Hkv, D = 2, 64, 4, 2, 16
+    q = _rand(keys[0], B, S, H, D)
+    k = _rand(keys[1], B, S, Hkv, D)
+    v = _rand(keys[2], B, S, Hkv, D)
+    got = flash_mha_vec(q, k, v, causal, 0, CHUNKS)
+    want = naive_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+def test_vec_q_grads_match_naive(causal):
+    keys = jax.random.split(jax.random.PRNGKey(6), 3)
+    B, S, H, Hkv, D = 2, 64, 4, 2, 16
+    q = _rand(keys[0], B, S, H, D)
+    k = _rand(keys[1], B, S, Hkv, D)
+    v = _rand(keys[2], B, S, Hkv, D)
+
+    def loss(fn):
+        def f(q, k, v):
+            return jnp.sum(jnp.sin(fn(q, k, v).astype(jnp.float32)))
+        return jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+
+    g_vec = loss(lambda q, k, v: flash_mha_vec(q, k, v, causal, 0, CHUNKS))
+    g_naive = loss(lambda q, k, v: naive_attention(q, k, v, causal=causal))
+    for a, b, name in zip(g_vec, g_naive, "qkv"):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), atol=3e-5,
+            err_msg=f"vec_q d{name} (causal={causal})",
+        )
+
+
+def test_decode_matches_full():
+    """decode_attention over a cache == last row of full attention."""
+    keys = jax.random.split(jax.random.PRNGKey(3), 3)
+    B, S, H, Hkv, D = 2, 32, 4, 2, 16
+    q = _rand(keys[0], B, S, H, D)
+    k = _rand(keys[1], B, S, Hkv, D)
+    v = _rand(keys[2], B, S, Hkv, D)
+    full = naive_attention(q, k, v, causal=True)
+    got = decode_attention(q[:, -1], k, v, jnp.full((B,), S, jnp.int32))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full[:, -1]), atol=2e-5)
