@@ -2,11 +2,13 @@
 
     PYTHONPATH=src python -m benchmarks.run [--skip-llm]
 
-  format_table  -> Table I / II   (format constants)
-  quant_error   -> Fig. 3         (Gaussian MSE sweep, 1 : 1.32 : 1.89)
-  dot_product   -> §III.B / Fig.4 (fixed-point flow + multiplier counts)
-  llm_accuracy  -> Tables III-V   (tiny-LM proxy incl. the NVFP4 crash)
-  roofline      -> §Roofline      (aggregates experiments/dryrun/*.json)
+  format_table     -> Table I / II   (format constants)
+  quant_error      -> Fig. 3         (Gaussian MSE sweep, 1 : 1.32 : 1.89)
+  dot_product      -> §III.B / Fig.4 (fixed-point flow + multiplier counts)
+  llm_accuracy     -> Tables III-V   (tiny-LM proxy incl. the NVFP4 crash)
+  serve_throughput -> deployment     (scan-decode tok/s, prefill latency,
+                                      4.5-bit weight residency -> BENCH_serve.json)
+  roofline         -> §Roofline      (aggregates experiments/dryrun/*.json)
 """
 import argparse
 import sys
@@ -27,8 +29,12 @@ def main():
         ("dot_product (§III.B / Fig. 4)", dot_product.main),
     ]
     if not args.skip_llm:
-        from benchmarks import llm_accuracy
+        from benchmarks import llm_accuracy, serve_throughput
         sections.append(("llm_accuracy (Tables III-V proxy)", llm_accuracy.main))
+        # LLM-class work too: init + prefill + decode of the reduced model
+        sections.append(
+            ("serve_throughput (deployment)", lambda: serve_throughput.main([]))
+        )
     sections.append(("roofline (§Roofline)", roofline.main))
 
     failures = 0

@@ -1,0 +1,150 @@
+"""Serving benchmark: decode throughput, prefill latency, weight residency.
+
+Measures the execution paths end to end on the reduced arch (CPU-honest
+numbers — the point is the RELATIVE shape: packed must serve 0.5625 B/value
+of weight residency and scan decode must amortize dispatch):
+
+  * prefill latency (s) per impl
+  * decode throughput (tokens/s aggregate over the batch) via the scan loop
+  * weight bytes resident for the block matmul weights (bf16 vs packed),
+    reported as B/value
+
+Emits ``BENCH_serve.json`` next to this file and prints a table.
+
+    PYTHONPATH=src python -m benchmarks.serve_throughput [--impl qdq packed]
+"""
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.core.qlinear import PACKABLE_KEYS, QuantConfig
+from repro.models import lm
+from repro.models.common import ModelCtx
+from repro.runtime.serve_loop import (
+    ServeConfig,
+    packed_weight_bytes,
+    prepare_params_for_serving,
+    serve,
+)
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "BENCH_serve.json")
+
+
+def _dense_block_bytes(params) -> tuple[int, int]:
+    """(bytes, values) of the packable block weights in their dense dtype."""
+    total = values = 0
+
+    def walk(node, key=None):
+        nonlocal total, values
+        if isinstance(node, dict):
+            for k, v in node.items():
+                walk(v, k)
+        elif key in PACKABLE_KEYS and hasattr(node, "nbytes"):
+            total += int(node.nbytes)
+            values += int(node.size)
+
+    for blk in ("blocks", "shared", "enc_blocks"):
+        if blk in params:
+            walk(params[blk])
+    return total, values
+
+
+def bench_impl(cfg, params, ctx, *, batch, prompt_len, new_tokens):
+    impl = ctx.quant.impl
+    serving_params = prepare_params_for_serving(params, cfg, ctx.quant)
+
+    nbytes_packed, nvals_packed = packed_weight_bytes(serving_params)
+    dense_bytes, dense_vals = _dense_block_bytes(params)
+    weight_bytes = nbytes_packed if nvals_packed else dense_bytes
+    weight_vals = nvals_packed if nvals_packed else dense_vals
+
+    prompts = {"tokens": jax.random.randint(
+        jax.random.PRNGKey(1), (batch, prompt_len), 0, cfg.vocab)}
+    sc = ServeConfig(max_new_tokens=new_tokens)
+
+    # warmup (compile prefill + decode scan), then measure
+    toks = serve(cfg, serving_params, prompts, ctx, sc)
+    jax.block_until_ready(toks)
+
+    from repro.runtime.serve_loop import serving_ctx
+    sctx = serving_ctx(ctx)
+    prefill = jax.jit(lambda p, b: lm.prefill(p, b, cfg, sctx))
+    out = prefill(serving_params, prompts)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    out = prefill(serving_params, prompts)
+    jax.block_until_ready(out)
+    t_prefill = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    toks = serve(cfg, serving_params, prompts, ctx, sc)
+    jax.block_until_ready(toks)
+    t_serve = time.perf_counter() - t0
+    decode_tokens = batch * new_tokens
+    tok_per_s = decode_tokens / max(t_serve - t_prefill, 1e-9)
+
+    return {
+        "impl": impl,
+        "prefill_s": round(t_prefill, 4),
+        "serve_s": round(t_serve, 4),
+        "decode_tokens": decode_tokens,
+        "decode_tok_per_s": round(tok_per_s, 2),
+        "weight_bytes": weight_bytes,
+        "weight_values": weight_vals,
+        "bytes_per_value": round(weight_bytes / max(weight_vals, 1), 4),
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    # pallas is interpret-mode off-TPU (orders of magnitude slow on CPU):
+    # excluded from the default sweep, opt in with --impl ... pallas
+    ap.add_argument("--impl", nargs="+", default=["qdq", "packed"],
+                    choices=["qdq", "packed", "pallas"])
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch).reduced()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+
+    results = []
+    for impl in args.impl:
+        ctx = ModelCtx(quant=QuantConfig(fmt="hif4", impl=impl), remat=False,
+                       attn_q_chunk=32, attn_k_chunk=32)
+        r = bench_impl(cfg, params, ctx, batch=args.batch,
+                       prompt_len=args.prompt_len, new_tokens=args.new_tokens)
+        results.append(r)
+        print(f"{impl:8} prefill {r['prefill_s']*1e3:8.1f} ms   "
+              f"decode {r['decode_tok_per_s']:9.1f} tok/s   "
+              f"weights {r['weight_bytes']/2**20:6.2f} MiB "
+              f"({r['bytes_per_value']:.4f} B/value)")
+
+    record = {
+        "arch": args.arch + "-smoke",
+        "batch": args.batch,
+        "prompt_len": args.prompt_len,
+        "new_tokens": args.new_tokens,
+        "backend": jax.default_backend(),
+        "results": results,
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(record, f, indent=1)
+    print(f"wrote {OUT_PATH}")
+
+    packed = [r for r in results if r["impl"] in ("packed", "pallas")]
+    for r in packed:
+        assert abs(r["bytes_per_value"] - 0.5625) < 1e-3, (
+            f"{r['impl']}: packed residency {r['bytes_per_value']} B/value "
+            f"!= 4.5 bits/value")
+
+
+if __name__ == "__main__":
+    main()

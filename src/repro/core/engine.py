@@ -1,0 +1,231 @@
+"""Execution engine: the single dispatch point for quantized matmuls.
+
+``QuantConfig.impl`` selects how a quantized contraction actually executes;
+every model-side linear layer funnels through :func:`matmul`, so the three
+paths advertised by the config are now real dispatch instead of
+documentation:
+
+  qdq    — fake-quant the operands, matmul in bf16/f32. Lowers on any
+           backend and is differentiable (STE); the training and accuracy-
+           experiment path.
+  packed — the weight is resident as a :class:`~repro.core.qlinear.PackedW`
+           (HiF4 bit-packed buffers, 0.5625 bytes/value) and is dequantized
+           group-wise inside the jitted graph; activations are quantized
+           dynamically. The serving deployment path.
+  pallas — the paper's §III.B fixed-point flow: ``hif4_quantize`` both
+           operands (Algorithm 1 kernel), contract each 64-group on the MXU
+           in int8 with a single f32 ``a_scale * b_scale`` rescale per
+           group (``bfp_matmul_quantized``). Runs in interpret mode off-TPU.
+
+Dispatch is **total**: a combination an impl cannot execute falls back to
+the closest executable path instead of erroring, so model code never guards
+call sites. The fallbacks (see docs/EXECUTION.md for the full matrix):
+
+  * non-HiF4 formats on ``pallas``          -> qdq (kernels are HiF4-only)
+  * ``weights_only`` on ``pallas``          -> qdq (the integer dot
+                                               inherently quantizes both)
+  * dense (unpacked) weight under ``packed``-> qdq (nothing resident to
+                                               contract against)
+  * PackedW under ``qdq``                   -> packed (a 4.5-bit buffer
+                                               can only be dequantized)
+  * contraction not a whole number of
+    64-groups                               -> qdq
+
+The engine context also carries the :class:`ShardCtx` that packed-weight
+dequantization needs (gather the 4.5-bit payload, not the dequantized bf16
+weight) — previously a module-level mutable (``_PACKED_SHARD``), now
+threaded explicitly from the model context.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hif4
+from repro.core.qlinear import (
+    NO_QUANT,
+    PackedW,
+    QuantConfig,
+    quantize_activation,
+    quantize_weight,
+)
+# Imported at module scope deliberately: the kernel modules concretize
+# bf16-rounded constants at import time, so a first import from inside a
+# traced scan body would see tracers and fail.
+from repro.kernels.bfp_matmul import bfp_matmul_quantized
+from repro.kernels.hif4_quant import hif4_quantize
+from repro.sharding.rules import NO_SHARD, ShardCtx
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineCtx:
+    """Everything a quantized contraction needs besides its operands."""
+
+    quant: QuantConfig = NO_QUANT
+    shard: ShardCtx = dataclasses.field(default_factory=lambda: NO_SHARD)
+    # Pallas interpret mode: None = auto (interpret everywhere but TPU).
+    interpret: Optional[bool] = None
+
+    def resolved_interpret(self) -> bool:
+        if self.interpret is None:
+            return jax.default_backend() != "tpu"
+        return self.interpret
+
+
+DEFAULT_ENGINE = EngineCtx()
+
+
+def matmul(
+    x: jnp.ndarray,
+    w,
+    ectx: EngineCtx = DEFAULT_ENGINE,
+    *,
+    contract_x: int = -1,
+    contract_w: int = 0,
+    precision=None,
+    accum_dtype=None,
+) -> jnp.ndarray:
+    """``x @ w`` through the configured execution path.
+
+    ``w`` is a dense array or a :class:`PackedW`. ``accum_dtype`` is the dot
+    OUTPUT dtype on the qdq/packed paths (default x.dtype; see qmatmul for
+    the TP wire rationale); the pallas path always accumulates f32 in the
+    kernel and casts once at the end.
+    """
+    cfg = ectx.quant
+    if isinstance(w, PackedW):
+        if cfg.impl == "pallas" and _pallas_activation_ok(cfg, x, contract_x):
+            return _pallas_packed_matmul(x, w, ectx)
+        return _packed_matmul(x, w, ectx, contract_x=contract_x,
+                              accum_dtype=accum_dtype)
+    if (
+        cfg.enabled
+        and cfg.impl == "pallas"
+        and _pallas_activation_ok(cfg, x, contract_x)
+        and _pallas_weight_ok(w, contract_w)
+    ):
+        return _pallas_dense_matmul(x, w, ectx)
+    return _qdq_matmul(x, w, cfg, contract_x=contract_x, contract_w=contract_w,
+                       precision=precision, accum_dtype=accum_dtype)
+
+
+def qdq_einsum(eq: str, a: jnp.ndarray, w: jnp.ndarray, ectx: EngineCtx,
+               *, a_axis: int = -1, w_axis: int = 1) -> jnp.ndarray:
+    """Batched-contraction einsum (MoE expert matmuls) on the qdq path.
+
+    Batched-expert weights have no packed/pallas dispatch yet (the (E, C)
+    dispatch buffer re-tiles per step, so there is no static packed operand
+    to contract against); they always execute fake-quant regardless of
+    ``impl`` — documented in the docs/EXECUTION.md matrix.
+    """
+    cfg = ectx.quant
+    if cfg.enabled:
+        a = quantize_activation(a, cfg, axis=a_axis)
+        w = quantize_weight(w, cfg, axis=w_axis)
+    return jnp.einsum(eq, a, w)
+
+
+# ---------------------------------------------------------------------------
+# qdq path
+# ---------------------------------------------------------------------------
+
+
+def _qdq_matmul(x, w, cfg, *, contract_x, contract_w, precision, accum_dtype):
+    out_dtype = x.dtype
+    if cfg.enabled:
+        x = quantize_activation(x, cfg, axis=contract_x)
+        w = quantize_weight(w, cfg, axis=contract_w)
+    cx = contract_x % x.ndim
+    cw = contract_w % w.ndim
+    y = jax.lax.dot_general(
+        x,
+        w,
+        dimension_numbers=(((cx,), (cw,)), ((), ())),
+        precision=precision,
+        preferred_element_type=accum_dtype or out_dtype,
+    )
+    return y.astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# packed path: PackedW resident buffers, dequantized in-graph
+# ---------------------------------------------------------------------------
+
+
+def _packed_matmul(x, w: PackedW, ectx: EngineCtx, *, contract_x, accum_dtype):
+    out_dtype = x.dtype
+    wd = w.dequantize(shard=ectx.shard)                 # (K, N) dense
+    x = quantize_activation(x, ectx.quant, axis=contract_x)
+    cx = contract_x % x.ndim
+    y = jax.lax.dot_general(
+        x,
+        wd,
+        dimension_numbers=(((cx,), (0,)), ((), ())),
+        preferred_element_type=accum_dtype or out_dtype,
+    )
+    return y.astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# pallas path: Algorithm-1 quantize kernel + §III.B fixed-point matmul
+# ---------------------------------------------------------------------------
+
+
+def _pallas_activation_ok(cfg: QuantConfig, x, contract_x: int) -> bool:
+    return (
+        cfg.fmt == "hif4"
+        and not cfg.weights_only
+        and contract_x % x.ndim == x.ndim - 1
+        and x.shape[-1] % hif4.GROUP_SIZE == 0
+    )
+
+
+def _pallas_weight_ok(w, contract_w: int) -> bool:
+    return (
+        w.ndim == 2
+        and contract_w % w.ndim == 0
+        and w.shape[0] % hif4.GROUP_SIZE == 0
+    )
+
+
+def _pallas_dense_matmul(x, w, ectx: EngineCtx):
+    """Both operands quantized by the Algorithm-1 kernel each call (A-W
+    dynamic quantization; the offline-weights variant is the packed path)."""
+    interp = ectx.resolved_interpret()
+    out_dtype = x.dtype
+    lead, K = x.shape[:-1], x.shape[-1]
+    N = w.shape[1]
+    ai, asc = hif4_quantize(x.reshape(-1, K), interpret=interp)
+    wi, wsc = hif4_quantize(w.T, interpret=interp)       # rows along K-groups
+    y = bfp_matmul_quantized(ai, asc, wi.T, wsc.T, interpret=interp)
+    return y.reshape(lead + (N,)).astype(out_dtype)
+
+
+def packed_to_absorbed(w: PackedW) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """PackedW -> (ints (K, N) int8, scales (K/64, N) f32) for the kernel.
+
+    The 4-bit codes + 32-bit meta expand to the absorbed-shift integers of
+    §III.B (micro-exponents become left shifts, |q| <= 28) without ever
+    materializing the bf16 weight — the pallas serving operand.
+    """
+    k, n = w.shape2d
+    g = hif4.unpack_groups(hif4.HiF4Packed(w.codes, w.meta))
+    ints, scale = hif4.to_absorbed_int(g)               # (n, k/64, 64), (n, k/64)
+    return ints.reshape(n, k).T, scale.astype(jnp.float32).T
+
+
+def _pallas_packed_matmul(x, w: PackedW, ectx: EngineCtx):
+    """Fused serving path: dynamic activation quant (Algorithm 1 kernel) x
+    packed resident weight, contracted by the fixed-point kernel."""
+    interp = ectx.resolved_interpret()
+    out_dtype = x.dtype
+    k, n = w.shape2d
+    lead = x.shape[:-1]
+    assert x.shape[-1] == k, (x.shape, w.shape2d)
+    ai, asc = hif4_quantize(x.reshape(-1, k), interpret=interp)
+    wi, wsc = packed_to_absorbed(w)
+    y = bfp_matmul_quantized(ai, asc, wi, wsc, interpret=interp)
+    return y.reshape(lead + (n,)).astype(out_dtype)

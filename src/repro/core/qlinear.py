@@ -1,6 +1,7 @@
 """Quantized linear algebra: the integration point between formats and models.
 
-Three execution paths, all numerically anchored to the same format modules:
+Three execution paths, all numerically anchored to the same format modules
+and dispatched by :mod:`repro.core.engine` (``QuantConfig.impl``):
 
 * ``qdq``     — fake-quant both operands, matmul in bf16/f32. Lowers on any
                 backend; used for accuracy experiments and the dry-run.
@@ -12,11 +13,12 @@ Three execution paths, all numerically anchored to the same format modules:
 
 Quantization always happens along the contraction dimension (each 64-element
 HiF4 group lies along K), matching how a 64-length PE dot consumes the data.
+This module owns the format plumbing (configs, fake-quant ops, packed-weight
+containers); the engine owns execution.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Optional
 
 import jax
@@ -24,7 +26,6 @@ import jax.numpy as jnp
 
 from repro.core import hif4
 from repro.core.formats import BFPFormat, get_format
-from repro.core.grouping import from_groups, to_groups
 
 
 @dataclasses.dataclass(frozen=True)
@@ -146,12 +147,17 @@ def qmatmul(
     contract_w: int = 0,
     precision=None,
     accum_dtype=None,
+    shard=None,
 ) -> jnp.ndarray:
     """``x @ w`` with both operands cast to ``cfg.fmt`` along contraction.
 
-    Shapes: x (..., K) contracted with w (K, ...); arbitrary contract axes
-    via ``contract_x`` / ``contract_w``. Embedding/LM-head/router callers
-    simply pass cfg=NO_QUANT (paper SS IV exclusions).
+    Routes through :func:`repro.core.engine.matmul`, so ``cfg.impl`` picks
+    the execution path (qdq / packed / pallas) and ``w`` may be a dense
+    array or a :class:`PackedW`. Shapes: x (..., K) contracted with
+    w (K, ...); arbitrary contract axes via ``contract_x`` / ``contract_w``.
+    Embedding/LM-head/router callers simply pass cfg=NO_QUANT (paper SS IV
+    exclusions). ``shard`` is the ShardCtx packed dequantization gathers
+    under (None = unsharded).
 
     ``accum_dtype`` is the dot OUTPUT dtype (default: x.dtype). The MXU
     accumulates f32 internally either way; emitting bf16 makes the
@@ -159,96 +165,14 @@ def qmatmul(
     reduction per layer; the cross-shard rounding noise is the standard
     Megatron-TP trade). lm_logits requests f32 explicitly.
     """
-    out_dtype = x.dtype
-    if cfg.enabled:
-        x = quantize_activation(x, cfg, axis=contract_x)
-        w = quantize_weight(w, cfg, axis=contract_w)
-    cx = contract_x % x.ndim
-    cw = contract_w % w.ndim
-    y = jax.lax.dot_general(
-        x,
-        w,
-        dimension_numbers=(((cx,), (cw,)), ((), ())),
-        precision=precision,
-        preferred_element_type=accum_dtype or out_dtype,
+    from repro.core import engine
+
+    ectx = engine.EngineCtx(quant=cfg) if shard is None else engine.EngineCtx(
+        quant=cfg, shard=shard
     )
-    return y.astype(out_dtype)
-
-
-# ---------------------------------------------------------------------------
-# Packed-weight path: real 4.5 bits/value residency
-# ---------------------------------------------------------------------------
-
-
-@jax.tree_util.register_pytree_node_class
-@dataclasses.dataclass
-class PackedHiF4Weight:
-    """A weight matrix stored as HiF4 packed buffers.
-
-    ``codes`` (G, 32) uint8 and ``meta`` (G,) uint32 where G = prod(shape
-    with K replaced by K/64); logical shape + contraction axis retained so
-    the weight can be dequantized back in-graph.
-    """
-
-    codes: jnp.ndarray
-    meta: jnp.ndarray
-    shape: tuple
-    contract_axis: int
-    dtype: jnp.dtype
-
-    def tree_flatten(self):
-        return (self.codes, self.meta), (self.shape, self.contract_axis, self.dtype)
-
-    @classmethod
-    def tree_unflatten(cls, aux, children):
-        codes, meta = children
-        return cls(codes, meta, *aux)
-
-    @classmethod
-    def from_dense(cls, w: jnp.ndarray, contract_axis: int = 0) -> "PackedHiF4Weight":
-        groups, orig = to_groups(w.astype(jnp.float32), contract_axis, hif4.GROUP_SIZE)
-        assert orig == w.shape[contract_axis], "contraction dim must be padded-free"
-        packed = hif4.pack_groups(hif4.quantize_groups(groups))
-        return cls(
-            codes=packed.codes,
-            meta=packed.meta,
-            shape=tuple(w.shape),
-            contract_axis=contract_axis % w.ndim,
-            dtype=w.dtype,
-        )
-
-    def dequantize(self) -> jnp.ndarray:
-        vals = hif4.dequantize_groups(
-            hif4.unpack_groups(hif4.HiF4Packed(self.codes, self.meta))
-        )
-        w = from_groups(vals, self.contract_axis, self.shape[self.contract_axis])
-        return w.astype(self.dtype)
-
-    @property
-    def nbytes_packed(self) -> int:
-        import numpy as np
-
-        return int(np.prod(self.codes.shape)) + 4 * int(np.prod(self.meta.shape))
-
-
-def packed_matmul(
-    x: jnp.ndarray,
-    w_packed: PackedHiF4Weight,
-    cfg: QuantConfig,
-    *,
-    contract_x: int = -1,
-) -> jnp.ndarray:
-    """Activation (dynamically quantized) x packed HiF4 weight."""
-    w = w_packed.dequantize()
-    x = quantize_activation(x, cfg, axis=contract_x)
-    cx = contract_x % x.ndim
-    y = jax.lax.dot_general(
-        x,
-        w,
-        dimension_numbers=(((cx,), (w_packed.contract_axis,)), ((), ())),
-        preferred_element_type=jnp.float32,
-    )
-    return y.astype(x.dtype)
+    return engine.matmul(x, w, ectx, contract_x=contract_x,
+                         contract_w=contract_w, precision=precision,
+                         accum_dtype=accum_dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -309,13 +233,27 @@ class PackedW:
         return cls(children[0], children[1], *aux)
 
     def reshape(self, *shape):
-        if len(shape) == 1:
-            shape = shape[0]
+        """Validate-and-pass-through: the models' ``w.reshape(d, -1)`` /
+        ``w.reshape(-1, d)`` call sites must resolve to exactly the packed
+        layout (K, N); anything else would silently contract wrong axes."""
+        if len(shape) == 1 and isinstance(shape[0], (tuple, list)):
+            shape = tuple(shape[0])
         k, n = self.shape2d
-        import numpy as np
-
-        want = [k if s != -1 else -1 for s in shape]
-        assert int(np.prod([s for s in shape if s != -1])) in (k, n, k * n) or True
+        assert len(shape) == 2, f"PackedW.reshape{shape}: packed layout is 2-D"
+        assert sum(1 for s in shape if s == -1) <= 1, shape
+        known = 1
+        for s in shape:
+            if s != -1:
+                known *= s
+        if -1 in shape:
+            assert known != 0 and (k * n) % known == 0, (shape, self.shape2d)
+            resolved = tuple(s if s != -1 else (k * n) // known for s in shape)
+        else:
+            resolved = tuple(shape)
+        assert resolved == (k, n), (
+            f"PackedW.reshape{shape} resolved to {resolved}, "
+            f"but the packed layout is (K, N) = {self.shape2d}"
+        )
         return self
 
     @property
@@ -338,10 +276,15 @@ class PackedW:
         packed = hif4.pack_groups(hif4.quantize_groups(groups.astype(jnp.float32)))
         return cls(packed.codes, packed.meta, (k, n), w.dtype)
 
-    def dequantize(self) -> jnp.ndarray:
+    def dequantize(self, shard=None) -> jnp.ndarray:
+        """Expand to the (K, N) dense weight in-graph.
+
+        ``shard`` is the ShardCtx of the enclosing computation (threaded by
+        the execution engine from the model context); with a mesh attached
+        it constrains the gather to move the 4.5-bit payload.
+        """
         k, n = self.shape2d
         codes, meta = self.codes, self.meta
-        shard = _PACKED_SHARD[0]
         if shard is not None and shard.mesh is not None:
             # Gather the 4.5-bit payload, not the dequantized bf16 weight:
             # replicate the contract-group axis (the FSDP axis) while
@@ -356,7 +299,18 @@ class PackedW:
         )
         return vals.reshape(n, k).T.astype(self.dtype)       # (K, N)
 
+    @property
+    def nbytes_packed(self) -> int:
+        """Bytes of 4.5-bit payload actually resident (codes + meta)."""
+        import numpy as np
 
-# ShardCtx hook for PackedW.dequantize (set by launch/runtime code before
-# tracing; module-level because dense() call sites don't thread ShardCtx)
-_PACKED_SHARD = [None]
+        return int(np.prod(self.codes.shape)) + 4 * int(np.prod(self.meta.shape))
+
+    @property
+    def n_values(self) -> int:
+        k, n = self.shape2d
+        lead = 1
+        # stacked-layer PackedW carries extra leading axes on codes
+        for s in self.codes.shape[:-3]:
+            lead *= int(s)
+        return lead * k * n

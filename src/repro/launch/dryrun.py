@@ -128,9 +128,9 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool, quant: str = "hif
 
     pspecs = lm.abstract_params(cfg)
     if packed and shape.kind != "train":
-        # HiF4 packed serving weights: 4.5 bits/value residency + transport
-        from repro.core import qlinear as _ql
-        _ql._PACKED_SHARD[0] = ctx.shard
+        # HiF4 packed serving weights: 4.5 bits/value residency + transport.
+        # The ShardCtx the packed dequantization gathers under now travels
+        # inside the model context (engine dispatch) — no module-level hook.
         pspecs = lm.packed_overlay(pspecs)
 
         def leaf(p):
@@ -226,6 +226,7 @@ def run_cell(arch, shape_name, args):
             fsdp=args.fsdp != "off",
             seq_shard=False if args.no_seq_shard else None,
             microbatches=args.microbatches, attn_mode=args.attn,
+            packed=args.packed,
         )
     except Exception as e:
         traceback.print_exc()
@@ -244,6 +245,8 @@ def run_cell(arch, shape_name, args):
             tag += "_nosp"
         if args.attn != "auto":
             tag += f"_{args.attn}"
+        if args.packed:
+            tag += "_packed"
         path = os.path.join(args.out, tag.replace("/", "-") + ".json")
         with open(path, "w") as f:
             json.dump(rec, f, indent=1)
@@ -272,6 +275,8 @@ def main():
     ap.add_argument("--fsdp", choices=["on", "off"], default="on")
     ap.add_argument("--no-seq-shard", action="store_true")
     ap.add_argument("--attn", choices=["auto", "scan_q", "vec_q"], default="auto")
+    ap.add_argument("--packed", action="store_true",
+                    help="serve cells with 4.5-bit PackedW resident weights")
     ap.add_argument("--microbatches", type=int, default=0)
     ap.add_argument("--out", default="experiments/dryrun")
     args = ap.parse_args()

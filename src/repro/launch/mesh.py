@@ -10,20 +10,29 @@ state (the dry-run must set XLA_FLAGS before the first jax call).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5: explicit axis types (Auto = today's behavior)
+    from jax.sharding import AxisType
+
+    def _axis_kw(n: int) -> dict:
+        return {"axis_types": (AxisType.Auto,) * n}
+except ImportError:  # older jax: Auto is the only (implicit) behavior
+    AxisType = None
+
+    def _axis_kw(n: int) -> dict:
+        return {}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_kw(len(axes)))
 
 
 def make_host_mesh():
     """Whatever devices exist (CPU smoke tests / examples): 1D data mesh."""
     n = len(jax.devices())
-    return jax.make_mesh((n, 1), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return jax.make_mesh((n, 1), ("data", "model"), **_axis_kw(2))
 
 
 # Hardware constants for the roofline analysis (TPU v5e, per chip).

@@ -1,7 +1,12 @@
-"""Serving launcher: offline HiF4 PTQ + batched greedy decode.
+"""Serving launcher: offline HiF4 packing/PTQ + batched scan decode.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --reduced \
-        --batch 4 --prompt-len 32 --new-tokens 16 --quant hif4
+        --batch 4 --prompt-len 32 --new-tokens 16 --quant hif4 --impl packed
+
+``--impl`` picks the execution path (see docs/EXECUTION.md): ``packed``
+(default) serves real 4.5-bit resident weights; ``qdq`` is the fake-quant
+accuracy shape; ``pallas`` runs the fixed-point kernels (interpret mode off
+TPU — slow on CPU, use tiny shapes).
 """
 import argparse
 
@@ -14,6 +19,7 @@ from repro.launch.mesh import make_host_mesh
 from repro.models import lm
 from repro.models.common import ModelCtx
 from repro.runtime import ServeConfig, serve
+from repro.runtime.serve_loop import packed_weight_bytes, prepare_params_for_serving
 from repro.sharding.rules import ShardCtx
 
 
@@ -25,21 +31,38 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--quant", default="hif4")
+    ap.add_argument("--impl", default="packed",
+                    choices=["qdq", "packed", "pallas"])
+    ap.add_argument("--decode-chunk", type=int, default=0,
+                    help="tokens per jitted decode scan (0 = whole budget)")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
     mesh = make_host_mesh() if len(jax.devices()) > 1 else None
-    ctx = ModelCtx(quant=QuantConfig(fmt=args.quant),
+    ctx = ModelCtx(quant=QuantConfig(fmt=args.quant, impl=args.impl),
                    shard=ShardCtx(mesh=mesh), remat=False,
                    attn_q_chunk=32, attn_k_chunk=32)
 
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    serving_params = prepare_params_for_serving(params, cfg, ctx.quant)
+    nbytes, nvals = packed_weight_bytes(serving_params)
+    if nvals:
+        print(f"packed weight residency: {nbytes / 2**20:.2f} MiB for "
+              f"{nvals} values = {nbytes / nvals:.4f} B/value "
+              f"(bf16 would be {2 * nvals / 2**20:.2f} MiB)")
+    else:
+        print(f"impl={args.impl}: no packed weights resident "
+              f"(fake-quant bf16 artifact)")
+
     prompts = {"tokens": jax.random.randint(
         jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab)}
-    toks = serve(cfg, params, prompts, ctx,
-                 ServeConfig(max_new_tokens=args.new_tokens))
+    # packed impls reuse the converted tree (prepare is idempotent on it);
+    # the qdq artifact is re-derived inside serve from the raw weights
+    toks = serve(cfg, serving_params if nvals else params, prompts, ctx,
+                 ServeConfig(max_new_tokens=args.new_tokens,
+                             decode_chunk=args.decode_chunk))
     for i in range(args.batch):
         print(f"request {i}: {toks[i].tolist()}")
 

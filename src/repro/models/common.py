@@ -7,7 +7,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.qlinear import NO_QUANT, QuantConfig, qmatmul
+from repro.core import engine
+from repro.core.qlinear import NO_QUANT, QuantConfig
 from repro.sharding.rules import NO_SHARD, ShardCtx
 
 
@@ -122,21 +123,22 @@ def dense(
     b: Optional[jax.Array] = None,
     *,
     quant: QuantConfig = NO_QUANT,
+    shard: Optional[ShardCtx] = None,
     accum_dtype=None,
 ) -> jax.Array:
-    """y = x @ w (+ b), with A-W quantization along the contraction dim.
+    """y = x @ w (+ b), executed by the engine ``quant.impl`` selects.
 
     ``w`` is (d_in, ...) dense, or a :class:`PackedW` (HiF4 bit-packed
     serving weight, dequantized in-graph — 4.5 bits/value of residency and
-    FSDP-gather wire). Callers that must NOT be quantized (embedding, LM
-    head, router — paper SS IV) pass quant=NO_QUANT explicitly.
+    FSDP-gather wire) — call sites accept either transparently. Callers
+    that must NOT be quantized (embedding, LM head, router — paper SS IV)
+    pass quant=NO_QUANT explicitly. ``shard`` (usually ctx.shard) reaches
+    packed dequantization so the gather moves the 4.5-bit payload.
     """
-    from repro.core.qlinear import PackedW
-
-    if isinstance(w, PackedW):
-        w = w.dequantize()
-    y = qmatmul(x, w, quant, contract_x=-1, contract_w=0,
-                accum_dtype=accum_dtype)
+    ectx = engine.EngineCtx(quant=quant, shard=shard if shard is not None
+                            else NO_SHARD)
+    y = engine.matmul(x, w, ectx, contract_x=-1, contract_w=0,
+                      accum_dtype=accum_dtype)
     if b is not None:
         y = y + b.astype(y.dtype)
     return y

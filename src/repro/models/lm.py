@@ -381,10 +381,10 @@ def _cross_kv(params, enc, cfg, ctx):
 
     def body(_, p_layer):
         pa = p_layer["xattn"]
-        k = dense(enc, pa["wk"].reshape(d, -1), quant=ctx.quant).reshape(
+        k = dense(enc, pa["wk"].reshape(d, -1), quant=ctx.quant, shard=ctx.shard).reshape(
             B, S, a.n_kv_heads, a.d_head
         )
-        v = dense(enc, pa["wv"].reshape(d, -1), quant=ctx.quant).reshape(
+        v = dense(enc, pa["wv"].reshape(d, -1), quant=ctx.quant, shard=ctx.shard).reshape(
             B, S, a.n_kv_heads, a.d_head
         )
         if a.qkv_bias:
@@ -415,7 +415,7 @@ def _dec_block_apply(p, x, cfg, ctx, *, mode, self_cache, cross_kv, pos):
         # full-sequence cross attention against the encoder output KV
         B, S, d = hx.shape
         aa = cfg.attn
-        q = dense(hx, p["xattn"]["wq"].reshape(d, -1), quant=ctx.quant).reshape(
+        q = dense(hx, p["xattn"]["wq"].reshape(d, -1), quant=ctx.quant, shard=ctx.shard).reshape(
             B, S, aa.n_heads, aa.d_head
         )
         if aa.qkv_bias:
@@ -427,7 +427,7 @@ def _dec_block_apply(p, x, cfg, ctx, *, mode, self_cache, cross_kv, pos):
                                   k_chunk=min(ctx.attn_k_chunk, cross_kv["k"].shape[1])),
         )
         a = dense(o.reshape(B, S, -1), p["xattn"]["wo"].reshape(-1, d),
-                  quant=ctx.quant)
+                  quant=ctx.quant, shard=ctx.shard)
     x = x + a
 
     h2 = tf.norm_apply(p["norm2"], x, cfg)
@@ -686,12 +686,21 @@ def pack_params_for_serving(params: dict, cfg: ArchConfig) -> dict:
 
     specs = abstract_params(cfg)
 
-    def walk(p_node, s_node, key=None):
+    def walk(p_node, s_node, key=None, parent=None):
         if isinstance(s_node, PSpec):
-            if key in PACKABLE_KEYS and len(s_node.shape) >= 2:
+            # same eligibility rules as packed_overlay: MoE expert weights
+            # flow through the batched-expert einsum (no packed dispatch)
+            if (parent != "moe" and key in PACKABLE_KEYS
+                    and len(s_node.shape) >= 2):
                 ca = _packed_contract_axes(key, s_node)
                 k = int(np.prod([s_node.shape[a] for a in ca]))
                 if k % 64 == 0:
+                    nd = len(s_node.shape)
+                    out_axes = tuple(a for a in range(1, nd) if a not in ca)
+                    out_name = next((s_node.axes[a] for a in out_axes
+                                     if s_node.axes[a] is not None), None)
+                    c_name = next((s_node.axes[a] for a in ca
+                                   if s_node.axes[a] is not None), None)
                     # per-layer pack, stacked along L
                     stacked = [
                         PackedW.from_dense(p_node[i],
@@ -701,10 +710,11 @@ def pack_params_for_serving(params: dict, cfg: ArchConfig) -> dict:
                     codes = jnp.stack([s.codes for s in stacked])
                     meta = jnp.stack([s.meta for s in stacked])
                     return PackedW(codes, meta, stacked[0].shape2d,
-                                   p_node.dtype)
+                                   p_node.dtype, (out_name, c_name))
             return p_node
         if isinstance(s_node, dict):
-            return {kk: walk(p_node[kk], vv, kk) for kk, vv in s_node.items()}
+            return {kk: walk(p_node[kk], vv, kk, key)
+                    for kk, vv in s_node.items()}
         return p_node
 
     out = dict(params)

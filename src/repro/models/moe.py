@@ -18,9 +18,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.core import engine
 from repro.models.common import ModelCtx, dense
 from repro.models.params import PSpec
-from repro.core.qlinear import quantize_activation, quantize_weight
 
 
 def moe_specs(cfg: ArchConfig) -> dict:
@@ -86,13 +86,15 @@ def moe_apply(p: dict, x: jax.Array, cfg: ArchConfig, ctx: ModelCtx) -> jax.Arra
     xe = jnp.einsum("bsec,bsd->becd", dispatch.astype(x.dtype), x)
     xe = ctx.shard.constrain(xe, "batch", "experts", None, None)
 
-    # --- expert FFN (quantized like any linear layer) ---
+    # --- expert FFN (quantized like any linear layer; engine qdq path —
+    # batched-expert weights have no packed/pallas dispatch, see
+    # docs/EXECUTION.md) ---
+    ectx = engine.EngineCtx(quant=ctx.quant, shard=ctx.shard)
+
     def qbmm(a, w, a_axis=-1, w_axis=1):
         """Batched-expert einsum with A-W quantization on the contraction."""
-        if ctx.quant.enabled:
-            a = quantize_activation(a, ctx.quant, axis=a_axis)
-            w = quantize_weight(w, ctx.quant, axis=w_axis)
-        return jnp.einsum("becd,edf->becf", a, w)
+        return engine.qdq_einsum("becd,edf->becf", a, w, ectx,
+                                 a_axis=a_axis, w_axis=w_axis)
 
     if cfg.activation == "swiglu":
         h = jax.nn.silu(qbmm(xe, p["wg"]).astype(jnp.float32))

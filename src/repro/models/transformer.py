@@ -73,13 +73,13 @@ def _proj_qkv(p: dict, x: jax.Array, cfg: ArchConfig, ctx: ModelCtx):
     a = cfg.attn
     d = cfg.d_model
     lead = x.shape[:-1]
-    q = dense(x, p["wq"].reshape(d, -1), quant=ctx.quant).reshape(
+    q = dense(x, p["wq"].reshape(d, -1), quant=ctx.quant, shard=ctx.shard).reshape(
         lead + (a.n_heads, a.d_head)
     )
-    k = dense(x, p["wk"].reshape(d, -1), quant=ctx.quant).reshape(
+    k = dense(x, p["wk"].reshape(d, -1), quant=ctx.quant, shard=ctx.shard).reshape(
         lead + (a.n_kv_heads, a.d_head)
     )
-    v = dense(x, p["wv"].reshape(d, -1), quant=ctx.quant).reshape(
+    v = dense(x, p["wv"].reshape(d, -1), quant=ctx.quant, shard=ctx.shard).reshape(
         lead + (a.n_kv_heads, a.d_head)
     )
     if a.qkv_bias:
@@ -96,7 +96,7 @@ def _out_proj(p: dict, o: jax.Array, cfg: ArchConfig, ctx: ModelCtx) -> jax.Arra
     a = cfg.attn
     lead = o.shape[:-2]
     o = o.reshape(lead + (a.n_heads * a.d_head,))
-    return dense(o, p["wo"].reshape(-1, cfg.d_model), quant=ctx.quant)
+    return dense(o, p["wo"].reshape(-1, cfg.d_model), quant=ctx.quant, shard=ctx.shard)
 
 
 def attn_full(
@@ -142,11 +142,27 @@ def attn_full(
     return y, None
 
 
+def _append_kv_per_slot(cache: jax.Array, new: jax.Array, pos: jax.Array):
+    """Write new (B, 1, Hkv, Dh) into cache (B, S, Hkv, Dh) at pos (B,).
+
+    Per-batch-element write offsets are what continuous batching needs: a
+    freshly admitted request sits at its prompt length while its slot
+    neighbours are deep into decode.
+    """
+    return jax.vmap(
+        lambda c, n, p: jax.lax.dynamic_update_slice(
+            c, n.astype(c.dtype), (p, 0, 0)
+        )
+    )(cache, new, pos)
+
+
 def attn_decode(
     p: dict,
     x: jax.Array,                 # (B, 1, d) — the new token's hidden state
     cache: dict,                  # {"k","v"}: (B, S, Hkv, Dh); roped already
-    pos: jax.Array,               # scalar int32: number of valid cache slots
+    pos: jax.Array,               # int32 valid-cache-slot count: scalar
+    #                               (whole batch in lockstep) or (B,)
+    #                               per-slot (continuous batching)
     cfg: ArchConfig,
     ctx: ModelCtx,
     *,
@@ -155,15 +171,21 @@ def attn_decode(
 ):
     """One-token attention against (and, unless cross, appending to) a cache."""
     B = x.shape[0]
+    per_slot = jnp.ndim(pos) == 1
     q, k_new, v_new = _proj_qkv(p, x, cfg, ctx)        # (B, 1, H/Hkv, Dh)
     if use_rope:
-        positions = pos + jnp.arange(1)
+        positions = pos[:, None] if per_slot else pos + jnp.arange(1)
         q = apply_rope(q, positions, cfg.attn.rope_theta)
         if not cross:
             k_new = apply_rope(k_new, positions, cfg.attn.rope_theta)
     if cross:
         new_cache = cache
         length = jnp.full((B,), cache["k"].shape[1], jnp.int32)
+    elif per_slot:
+        k = _append_kv_per_slot(cache["k"], k_new, pos)
+        v = _append_kv_per_slot(cache["v"], v_new, pos)
+        new_cache = {"k": k, "v": v}
+        length = pos + 1
     else:
         k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
                                          (0, pos, 0, 0))
@@ -210,11 +232,11 @@ def mlp_specs(cfg: ArchConfig) -> dict:
 
 def mlp_apply(p: dict, x: jax.Array, cfg: ArchConfig, ctx: ModelCtx) -> jax.Array:
     if cfg.activation == "swiglu":
-        h = jax.nn.silu(dense(x, p["wg"], quant=ctx.quant).astype(jnp.float32))
-        h = (h * dense(x, p["wu"], quant=ctx.quant).astype(jnp.float32)).astype(x.dtype)
+        h = jax.nn.silu(dense(x, p["wg"], quant=ctx.quant, shard=ctx.shard).astype(jnp.float32))
+        h = (h * dense(x, p["wu"], quant=ctx.quant, shard=ctx.shard).astype(jnp.float32)).astype(x.dtype)
     else:
-        h = dense(x, p["wi"], quant=ctx.quant).astype(jnp.float32)
+        h = dense(x, p["wi"], quant=ctx.quant, shard=ctx.shard).astype(jnp.float32)
         h = jnp.square(jax.nn.relu(h)) if cfg.activation == "squared_relu" else jax.nn.gelu(h)
         h = h.astype(x.dtype)
     h = ctx.shard.constrain(h, "batch", None, "ff")
-    return dense(h, p["wo"], quant=ctx.quant)
+    return dense(h, p["wo"], quant=ctx.quant, shard=ctx.shard)

@@ -1,13 +1,24 @@
-"""Batched serving loop: offline weight PTQ -> prefill -> greedy decode.
+"""Batched serving loop: offline weight PTQ/packing -> prefill -> scan decode.
 
-Weights are quantized ONCE (``quantize_params_offline``) — the deployment
-artifact; activations are cast dynamically inside each step (the paper's
-A-W placement). The KV cache buffer is donated so decode updates in place.
+Weights are converted ONCE into the deployment artifact the configured
+execution path consumes (``QuantConfig.impl``):
+
+  qdq            -> fake-quant (QDQ) bf16 weights (accuracy-experiment shape)
+  packed/pallas  -> :class:`PackedW` 4.5-bit buffers (real 0.5625 B/value
+                    HBM residency; the pallas path expands them straight to
+                    the §III.B absorbed-int operands in-graph)
+
+Decode runs as a ``jax.lax.scan`` over a static token budget — ONE jitted
+dispatch per chunk instead of one per token — with per-request done masks.
+:func:`serve_requests` adds a slot-based continuous-batching scheduler on
+top: a fixed number of decode slots, per-slot cache positions, and admission
+of queued requests into slots as earlier requests finish.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from functools import partial
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -22,17 +33,126 @@ from repro.models.common import ModelCtx
 class ServeConfig:
     max_new_tokens: int = 32
     cache_capacity: Optional[int] = None   # default: prompt + max_new
+    decode_chunk: int = 0                  # tokens per jitted scan segment;
+    #                                        0 = the whole budget in one scan
+    eos_id: Optional[int] = None           # stop a request at this token
 
 
-def prepare_params_for_serving(params: dict, quant: QuantConfig) -> dict:
-    """Offline PTQ of every block weight (embed/head/router excluded)."""
+def prepare_params_for_serving(params: dict, cfg: ArchConfig,
+                               quant: QuantConfig) -> dict:
+    """One-time offline conversion of block weights into the serving artifact.
+
+    embed/head/router stay full precision (paper §IV exclusions). The
+    packed/pallas impls get true 4.5-bit PackedW buffers; qdq keeps the
+    fake-quant bf16 weights of the accuracy experiments.
+    """
     if not quant.enabled:
         return params
+    if packed_weight_bytes(params)[1]:
+        return params                  # already converted (idempotent)
+    # hybrid's doubly-stacked mamba blocks don't fit the single leading
+    # layer axis PackedW assumes; they keep the QDQ artifact for now.
+    if quant.impl in ("packed", "pallas") and cfg.family != "hybrid":
+        return lm.pack_params_for_serving(params, cfg)
     out = dict(params)
     for key in ("blocks", "shared", "enc_blocks"):
         if key in out:
             out[key] = quantize_params_offline(out[key], quant)
     return out
+
+
+def serving_ctx(ctx: ModelCtx) -> ModelCtx:
+    """The model context decode runs under: weights already quantized
+    offline (skip in-graph weight QDQ), no remat."""
+    qcfg = dataclasses.replace(ctx.quant, offline_weights=True)
+    return dataclasses.replace(ctx, quant=qcfg, remat=False)
+
+
+def packed_weight_bytes(params) -> tuple[int, int]:
+    """(packed payload bytes, packed value count) over all PackedW leaves."""
+    from repro.core.qlinear import PackedW
+
+    total = values = 0
+    for leaf in jax.tree_util.tree_leaves(
+        params, is_leaf=lambda x: isinstance(x, PackedW)
+    ):
+        if isinstance(leaf, PackedW):
+            total += leaf.nbytes_packed
+            values += leaf.n_values
+    return total, values
+
+
+# ---------------------------------------------------------------------------
+# Scan decode
+# ---------------------------------------------------------------------------
+
+
+def _decode_scan(params, token, cache, done, n_tokens: int, cfg: ArchConfig,
+                 sctx: ModelCtx, eos_id: Optional[int]):
+    """Greedy-decode ``n_tokens`` steps inside one lax.scan.
+
+    token (B,) int32 is the last emitted token; done (B,) bool masks
+    finished requests (their slots keep emitting eos/pad, and their cache
+    writes are inert because outputs are masked). Returns
+    (tokens (B, n_tokens), token, cache, done).
+    """
+
+    def body(carry, _):
+        token, cache, done = carry
+        logits, cache = lm.decode_step(params, token, cache, cfg, sctx)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        if eos_id is not None:
+            nxt = jnp.where(done, jnp.int32(eos_id), nxt)
+            done = done | (nxt == eos_id)
+        return (nxt, cache, done), nxt
+
+    (token, cache, done), toks = jax.lax.scan(
+        body, (token, cache, done), None, length=n_tokens
+    )
+    return jnp.swapaxes(toks, 0, 1), token, cache, done
+
+
+# jax.jit caches compiled executables per wrapper OBJECT, so building a
+# fresh wrapper inside every serve() call would retrace+recompile the whole
+# model per call. Key the wrappers on the values that change the traced
+# graph (ArchConfig and QuantConfig are frozen/hashable; ShardCtx is not —
+# its mesh identity + rules stand in for it). Bounded in practice: a
+# handful of (arch, ctx, budget) combinations per process.
+_JIT_CACHE: dict = {}
+
+
+def _ctx_cache_key(ctx: ModelCtx):
+    shard = ctx.shard
+    mesh_key = None if shard.mesh is None else (
+        tuple(shard.mesh.shape.items()), id(shard.mesh)
+    )
+    return (ctx.quant, mesh_key,
+            tuple(sorted((k, tuple(v)) for k, v in shard.rules.items())),
+            str(ctx.param_dtype), str(ctx.compute_dtype), ctx.remat,
+            ctx.attn_q_chunk, ctx.attn_k_chunk, ctx.attn_impl)
+
+
+def _jit_prefill(cfg: ArchConfig, sctx: ModelCtx):
+    key = ("prefill", cfg, _ctx_cache_key(sctx))
+    fn = _JIT_CACHE.get(key)
+    if fn is None:
+        fn = jax.jit(lambda p, b: lm.prefill(p, b, cfg, sctx))
+        _JIT_CACHE[key] = fn
+    return fn
+
+
+def _jit_decode_scan(cfg: ArchConfig, sctx: ModelCtx, n_tokens: int,
+                     eos_id: Optional[int]):
+    key = ("decode", cfg, _ctx_cache_key(sctx), n_tokens, eos_id)
+    fn = _JIT_CACHE.get(key)
+    if fn is None:
+        fn = jax.jit(
+            partial(_decode_scan, n_tokens=n_tokens, cfg=cfg, sctx=sctx,
+                    eos_id=eos_id),
+            donate_argnums=(2,),            # cache updates in place
+        )
+        _JIT_CACHE[key] = fn
+    return fn
 
 
 def serve(
@@ -42,29 +162,168 @@ def serve(
     ctx: ModelCtx,
     serve_cfg: ServeConfig = ServeConfig(),
 ):
-    """Greedy-decode ``max_new_tokens``; returns (B, T) int32 tokens."""
-    qcfg = dataclasses.replace(ctx.quant, offline_weights=True)
-    sctx = ModelCtx(quant=qcfg, shard=ctx.shard, remat=False,
-                    param_dtype=ctx.param_dtype, compute_dtype=ctx.compute_dtype,
-                    attn_q_chunk=ctx.attn_q_chunk, attn_k_chunk=ctx.attn_k_chunk)
-    params = prepare_params_for_serving(params, ctx.quant)
+    """Greedy-decode ``max_new_tokens``; returns (B, T) int32 tokens.
 
-    logits, cache = jax.jit(lambda p, b: lm.prefill(p, b, cfg, sctx))(
-        params, batch
-    )
+    All requests advance in lockstep (shared position clock); decode is a
+    single jitted scan per ``decode_chunk`` segment, not a dispatch per
+    token. For heterogeneous request streams use :func:`serve_requests`.
+    """
+    sctx = serving_ctx(ctx)
+    params = prepare_params_for_serving(params, cfg, ctx.quant)
+
+    logits, cache = _jit_prefill(cfg, sctx)(params, batch)
     if cfg.family in ("dense", "vlm", "moe", "audio", "hybrid"):
         prompt_len = int(cache["pos"])
         cap = serve_cfg.cache_capacity or prompt_len + serve_cfg.max_new_tokens
         cache = lm.pad_cache(cache, cfg, cap)
 
-    step = jax.jit(
-        lambda p, t, c: lm.decode_step(p, t, c, cfg, sctx),
-        donate_argnums=(2,),
-    )
     token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    out = [token]
-    for _ in range(serve_cfg.max_new_tokens - 1):
-        logits, cache = step(params, token, cache)
-        token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        out.append(token)
-    return jnp.stack(out, axis=1)
+    done = jnp.zeros(token.shape, bool)
+    if serve_cfg.eos_id is not None:
+        done = done | (token == serve_cfg.eos_id)
+    out = [token[:, None]]
+
+    budget = serve_cfg.max_new_tokens - 1
+    chunk = serve_cfg.decode_chunk or budget
+    emitted = 0
+    while emitted < budget:
+        n = min(chunk, budget - emitted)
+        step = _jit_decode_scan(cfg, sctx, n, serve_cfg.eos_id)
+        toks, token, cache, done = step(params, token, cache, done)
+        out.append(toks)
+        emitted += n
+        if serve_cfg.eos_id is not None and bool(jnp.all(done)):
+            break
+    toks = jnp.concatenate(out, axis=1)
+    if toks.shape[1] < serve_cfg.max_new_tokens and serve_cfg.eos_id is not None:
+        pad = jnp.full(
+            (toks.shape[0], serve_cfg.max_new_tokens - toks.shape[1]),
+            serve_cfg.eos_id, jnp.int32,
+        )
+        toks = jnp.concatenate([toks, pad], axis=1)
+    return toks
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching: slot-based admission over a shared decode batch
+# ---------------------------------------------------------------------------
+
+
+def _insert_slot(cache, slot_cache, token, slot_token, b: int):
+    """Write a freshly prefilled request (batch 1) into batch slot ``b``.
+
+    KV leaves are (L, B, S, Hkv, Dh) — insert along axis 1; the per-slot
+    ``pos`` vector and last-token vector update at index ``b``.
+    """
+
+    def put(full, one):
+        idx = (0, b) + (0,) * (full.ndim - 2)
+        return jax.lax.dynamic_update_slice(full, one.astype(full.dtype), idx)
+
+    new_kv = jax.tree_util.tree_map(put, cache["kv"], slot_cache["kv"])
+    pos = cache["pos"].at[b].set(slot_cache["pos"].astype(jnp.int32))
+    return (
+        {"kv": new_kv, "pos": pos},
+        token.at[b].set(slot_token),
+    )
+
+
+_insert_slot_jit = jax.jit(_insert_slot, static_argnums=(4,),
+                           donate_argnums=(0,))
+
+
+def serve_requests(
+    cfg: ArchConfig,
+    params: dict,
+    requests: Sequence[jnp.ndarray],   # per-request prompt token arrays (T,)
+    ctx: ModelCtx,
+    serve_cfg: ServeConfig = ServeConfig(),
+    *,
+    slots: int = 4,
+) -> list:
+    """Continuous-batching scheduler: serve ``requests`` through a fixed
+    number of decode ``slots``.
+
+    Each request is prefilled individually (its true prompt length — no
+    cross-request padding) and admitted into a free slot with its own cache
+    position; the shared decode batch advances via the scan body with
+    per-slot positions and done masks. When a request exhausts its budget
+    (or hits eos) its slot is freed and the next queued request admitted.
+    Per-request results are bit-identical to serving each request alone:
+    batch elements never mix, and invalid cache tail slots are masked by
+    the per-slot length.
+
+    Transformer families only (the per-slot position clock lives in the KV
+    cache); returns a list of (max_new_tokens,) int32 arrays, one per
+    request, in submission order.
+    """
+    assert cfg.family in ("dense", "vlm", "moe"), (
+        f"continuous batching supports KV-cache families, got {cfg.family!r}"
+    )
+    sctx = serving_ctx(ctx)
+    params = prepare_params_for_serving(params, cfg, ctx.quant)
+    prefill = _jit_prefill(cfg, sctx)
+
+    budget = serve_cfg.max_new_tokens
+    max_prompt = max(int(r.shape[-1]) for r in requests)
+    cap = serve_cfg.cache_capacity or max_prompt + budget
+    B = min(slots, len(requests))
+
+    # Shared decode state: zero cache at full capacity, per-slot positions.
+    cache = lm.init_cache(cfg, B, cap)
+    cache["pos"] = jnp.zeros((B,), jnp.int32)
+    token = jnp.zeros((B,), jnp.int32)
+    done = jnp.ones((B,), bool)                  # empty slots count as done
+
+    queue = list(range(len(requests)))
+    slot_req = [None] * B                        # request id per slot
+    slot_toks: list[list] = [[] for _ in range(B)]
+    results: list = [None] * len(requests)
+
+    def admit(b: int, cache, token):
+        rid = queue.pop(0)
+        prompt = jnp.asarray(requests[rid], jnp.int32).reshape(1, -1)
+        logits, slot_cache = prefill(params, {"tokens": prompt})
+        slot_cache = lm.pad_cache(slot_cache, cfg, cap)
+        first = jnp.argmax(logits, axis=-1).astype(jnp.int32)[0]
+        cache, token = _insert_slot_jit(cache, slot_cache, token, first, b)
+        slot_req[b] = rid
+        slot_toks[b] = [int(first)]
+        return cache, token
+
+    chunk = serve_cfg.decode_chunk or max(1, budget // 4)
+    step = _jit_decode_scan(cfg, sctx, chunk, serve_cfg.eos_id)
+
+    def retire(b: int):
+        rid = slot_req[b]
+        toks = slot_toks[b][:budget]
+        if serve_cfg.eos_id is not None and serve_cfg.eos_id in toks:
+            stop = toks.index(serve_cfg.eos_id) + 1
+            toks = toks + [serve_cfg.eos_id] * (budget - len(toks))
+            toks = toks[:stop] + [serve_cfg.eos_id] * (budget - stop)
+        results[rid] = jnp.asarray(toks, jnp.int32)
+        slot_req[b] = None
+
+    while queue or any(r is not None for r in slot_req):
+        # Admission: fill every free slot before the next decode segment.
+        for b in range(B):
+            if slot_req[b] is None and queue:
+                cache, token = admit(b, cache, token)
+                done = done.at[b].set(
+                    serve_cfg.eos_id is not None
+                    and slot_toks[b][0] == serve_cfg.eos_id
+                )
+        active = jnp.asarray([r is not None for r in slot_req])
+        toks, token, cache, done = step(params, token, cache, done | ~active)
+        host_toks = jax.device_get(toks)
+        for b in range(B):
+            if slot_req[b] is None:
+                continue
+            slot_toks[b].extend(int(t) for t in host_toks[b])
+            finished = len(slot_toks[b]) >= budget or (
+                serve_cfg.eos_id is not None
+                and serve_cfg.eos_id in slot_toks[b]
+            )
+            if finished:
+                retire(b)
+    return results

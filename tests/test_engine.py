@@ -1,0 +1,214 @@
+"""Execution-engine dispatch: impl='packed' and impl='pallas' must agree
+with impl='qdq' — same quantized values, different execution — at the
+matmul level, through a full transformer forward, and through the scan
+decode / continuous-batching serving stack."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core import engine, hif4
+from repro.core.qlinear import PackedW, QuantConfig, quantize_params_offline
+from repro.models import lm
+from repro.models.common import ModelCtx
+from repro.runtime.serve_loop import (
+    ServeConfig,
+    prepare_params_for_serving,
+    serve,
+    serve_requests,
+    serving_ctx,
+)
+
+CFG = get_arch("qwen1.5-0.5b").reduced()
+
+
+def _ctx(impl):
+    return ModelCtx(quant=QuantConfig(fmt="hif4", impl=impl), remat=False,
+                    attn_q_chunk=32, attn_k_chunk=32)
+
+
+def _operands(m=8, k=128, n=96, seed=0):
+    x = (jax.random.normal(jax.random.PRNGKey(seed), (m, k)) * 0.1).astype(
+        jnp.bfloat16)
+    w = (jax.random.normal(jax.random.PRNGKey(seed + 1), (k, n)) * 0.05).astype(
+        jnp.bfloat16)
+    return x, w
+
+
+# ---------------------------------------------------------------------------
+# Matmul-level equivalence
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("impl", ["packed", "pallas"])
+def test_engine_matmul_matches_qdq(impl):
+    x, w = _operands()
+    ref = engine.matmul(x, w, engine.EngineCtx(
+        quant=QuantConfig(fmt="hif4", impl="qdq")))
+    pw = PackedW.from_dense(w, (0,))
+    got = engine.matmul(x, pw, engine.EngineCtx(
+        quant=QuantConfig(fmt="hif4", impl=impl)))
+    # same HiF4 values contracted; bf16-output rounding is the only slack
+    np.testing.assert_allclose(
+        np.asarray(got, jnp.float32), np.asarray(ref, jnp.float32),
+        rtol=0.02, atol=0.01)
+
+
+def test_pallas_dense_equals_exact_fixed_point():
+    """The pallas path IS the §III.B flow: f32-accumulated group dot of the
+    quantized operands, bit-exact up to the final bf16 output cast."""
+    x, w = _operands()
+    got = engine.matmul(x, w, engine.EngineCtx(
+        quant=QuantConfig(fmt="hif4", impl="pallas")))
+    exact = hif4.qdq(x.astype(jnp.float32), axis=-1) @ hif4.qdq(
+        w.astype(jnp.float32), axis=0)
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(exact.astype(jnp.bfloat16)))
+
+
+def test_pallas_fallbacks_to_qdq():
+    """Non-HiF4 formats and weights_only cannot run the integer kernels;
+    dispatch must fall back to the qdq path, not error."""
+    import dataclasses
+
+    x, w = _operands()
+    for cfg in (QuantConfig(fmt="nvfp4", impl="pallas"),
+                QuantConfig(fmt="hif4", impl="pallas", weights_only=True)):
+        got = engine.matmul(x, w, engine.EngineCtx(quant=cfg))
+        ref = engine.matmul(x, w, engine.EngineCtx(
+            quant=dataclasses.replace(cfg, impl="qdq")))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_packedw_reshape_validates():
+    _, w = _operands()
+    pw = PackedW.from_dense(w, (0,))        # shape2d (128, 96)
+    assert pw.reshape(128, -1) is pw
+    assert pw.reshape(-1, 96) is pw
+    with pytest.raises(AssertionError):
+        pw.reshape(96, -1)                  # transposed layout
+    with pytest.raises(AssertionError):
+        pw.reshape(64, 2, 96)               # not the 2-D packed layout
+    with pytest.raises(AssertionError):
+        pw.reshape(128, 100)                # wrong element count
+
+
+def test_packed_residency_bytes_per_value():
+    _, w = _operands(k=256, n=128)
+    pw = PackedW.from_dense(w, (0,))
+    assert pw.nbytes_packed / pw.n_values == hif4.BITS_PER_VALUE / 8
+
+
+# ---------------------------------------------------------------------------
+# Model-level equivalence (small transformer forward)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("impl", ["packed", "pallas"])
+def test_transformer_forward_path_equivalence(impl):
+    # packed executes the identical bf16 dot on identical quantized values
+    # (tight tolerance); pallas accumulates every group dot in f32 inside
+    # the kernel where qdq's dot emits bf16 partials, and the difference
+    # compounds across layers (looser tolerance, same quantized values).
+    tol = dict(rtol=0.02, atol=0.02) if impl == "packed" else dict(
+        rtol=0.05, atol=0.08)
+    params = lm.init_params(CFG, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0, CFG.vocab)
+
+    ref_params = dict(params)
+    ref_params["blocks"] = quantize_params_offline(
+        params["blocks"], QuantConfig(fmt="hif4"))
+    ref_ctx = serving_ctx(_ctx("qdq"))
+    ref_logits, _ = lm.prefill(ref_params, {"tokens": tokens}, CFG, ref_ctx)
+
+    packed_params = prepare_params_for_serving(
+        params, CFG, QuantConfig(fmt="hif4", impl=impl))
+    ctx = serving_ctx(_ctx(impl))
+    logits, cache = lm.prefill(packed_params, {"tokens": tokens}, CFG, ctx)
+
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(ref_logits),
+                               **tol)
+
+    # and a decode step stays on the same path
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    cache = lm.pad_cache(cache, CFG, 24)
+    logits2, _ = lm.decode_step(packed_params, tok, cache, CFG, ctx)
+    assert bool(jnp.all(jnp.isfinite(logits2)))
+
+
+def test_moe_packed_serving_excludes_experts():
+    """MoE expert weights flow through the batched-expert einsum (no packed
+    dispatch): packing must leave them dense, and serving must still run."""
+    cfg = get_arch("phi3.5-moe-42b-a6.6b").reduced()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    packed = prepare_params_for_serving(
+        params, cfg, QuantConfig(fmt="hif4", impl="packed"))
+    moe_leaves = packed["blocks"]["moe"]
+    assert not any(isinstance(v, PackedW) for v in moe_leaves.values())
+    # attention weights DO pack
+    assert isinstance(packed["blocks"]["attn"]["wq"], PackedW)
+
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab)
+    toks = serve(cfg, params, {"tokens": tokens}, _ctx("packed"),
+                 ServeConfig(max_new_tokens=4))
+    assert toks.shape == (2, 4)
+
+
+# ---------------------------------------------------------------------------
+# Scan decode vs python-loop decode
+# ---------------------------------------------------------------------------
+
+
+def test_scan_decode_matches_python_loop():
+    params = lm.init_params(CFG, jax.random.PRNGKey(3))
+    tokens = jax.random.randint(jax.random.PRNGKey(4), (2, 8), 0, CFG.vocab)
+    ctx = serving_ctx(_ctx("qdq"))
+    n_new = 6
+
+    # python loop (the old serve shape): one decode_step call per token
+    logits, cache = lm.prefill(params, {"tokens": tokens}, CFG, ctx)
+    cache = lm.pad_cache(cache, CFG, 8 + n_new)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    loop_out = [tok]
+    for _ in range(n_new - 1):
+        logits, cache = lm.decode_step(params, tok, cache, CFG, ctx)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        loop_out.append(tok)
+    loop_toks = np.asarray(jnp.stack(loop_out, axis=1))
+
+    # scan path (what serve() runs)
+    scan_toks = np.asarray(serve(
+        CFG, params, {"tokens": tokens}, _ctx("qdq"),
+        ServeConfig(max_new_tokens=n_new)))
+    np.testing.assert_array_equal(scan_toks, loop_toks)
+
+    # chunked scan must not change results either
+    chunk_toks = np.asarray(serve(
+        CFG, params, {"tokens": tokens}, _ctx("qdq"),
+        ServeConfig(max_new_tokens=n_new, decode_chunk=2)))
+    np.testing.assert_array_equal(chunk_toks, loop_toks)
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching scheduler
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_matches_solo_serving():
+    """Slot-admitted requests (varying prompt lengths, fewer slots than
+    requests) must produce exactly the tokens of serving each alone."""
+    params = lm.init_params(CFG, jax.random.PRNGKey(0))
+    reqs = [
+        jax.random.randint(jax.random.PRNGKey(10 + i), (8 + 4 * i,), 0,
+                           CFG.vocab)
+        for i in range(3)
+    ]
+    ctx = _ctx("packed")
+    sc = ServeConfig(max_new_tokens=6, decode_chunk=2)
+    res = serve_requests(CFG, params, reqs, ctx, sc, slots=2)
+    assert len(res) == len(reqs)
+    for i, r in enumerate(reqs):
+        solo = serve(CFG, params, {"tokens": r[None, :]}, ctx,
+                     ServeConfig(max_new_tokens=6))
+        np.testing.assert_array_equal(np.asarray(res[i]), np.asarray(solo[0]))

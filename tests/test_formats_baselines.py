@@ -1,11 +1,12 @@
 """Tests for the baseline formats (NVFP4, NVFP4+PTS, MXFP4) and the
 paper's comparative claims (Fig. 3 MSE ratios, Table II features)."""
-import hypothesis
-import hypothesis.strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import mxfp4, nvfp4
 from repro.core import rounding as R

@@ -1,11 +1,12 @@
 """Unit + property tests for the HiF4 format (paper SS II, Table I/II, Alg. 1)."""
-import hypothesis
-import hypothesis.extra.numpy as hnp
-import hypothesis.strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+hnp = pytest.importorskip("hypothesis.extra.numpy")
+st = pytest.importorskip("hypothesis.strategies")
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import hif4, qlinear
 from repro.core import rounding as R

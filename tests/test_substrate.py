@@ -169,17 +169,29 @@ class TestGradCompress:
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import PartitionSpec as P, AxisType
-from jax import shard_map
+from jax.sharding import PartitionSpec as P
+try:                                  # jax >= 0.5
+    from jax.sharding import AxisType
+    mesh_kw = {"axis_types": (AxisType.Auto,)}
+except ImportError:                   # older jax: Auto is implicit
+    mesh_kw = {}
+try:
+    from jax import shard_map
+except ImportError:
+    from jax.experimental.shard_map import shard_map
 import sys; sys.path.insert(0, "src")
 from repro.optim.grad_compress import compressed_psum
 
-mesh = jax.make_mesh((4,), ("data",), axis_types=(AxisType.Auto,))
+mesh = jax.make_mesh((4,), ("data",), **mesh_kw)
 x = jax.random.normal(jax.random.PRNGKey(0), (4, 1024)) * 0.1
 
-f = shard_map(lambda v: compressed_psum(v[0], "data", 4)[None],
-              mesh=mesh, in_specs=P("data"), out_specs=P("data"),
-              check_vma=False)
+body = lambda v: compressed_psum(v[0], "data", 4)[None]
+try:
+    f = shard_map(body, mesh=mesh, in_specs=P("data"), out_specs=P("data"),
+                  check_vma=False)
+except TypeError:                     # older jax spells it check_rep
+    f = shard_map(body, mesh=mesh, in_specs=P("data"), out_specs=P("data"),
+                  check_rep=False)
 got = np.asarray(f(x))
 want = np.asarray(jnp.mean(x, axis=0))
 for i in range(4):
