@@ -7,8 +7,11 @@
   dot_product      -> §III.B / Fig.4 (fixed-point flow + multiplier counts)
   llm_accuracy     -> Tables III-V   (tiny-LM proxy incl. the NVFP4 crash)
   serve_throughput -> deployment     (scan-decode tok/s, prefill latency,
-                                      4.5-bit weight residency -> BENCH_serve.json)
+                                      4.5-bit weight + KV-cache residency
+                                      -> BENCH_serve.json)
   roofline         -> §Roofline      (aggregates experiments/dryrun/*.json)
+  check_docs       -> repo lint      (README/docs must not reference dead
+                                      symbols or files)
 """
 import argparse
 import sys
@@ -36,6 +39,9 @@ def main():
             ("serve_throughput (deployment)", lambda: serve_throughput.main([]))
         )
     sections.append(("roofline (§Roofline)", roofline.main))
+
+    from tools import check_docs
+    sections.append(("check_docs (repo lint)", check_docs.main))
 
     failures = 0
     for name, fn in sections:

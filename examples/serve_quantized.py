@@ -51,6 +51,7 @@ def main():
     # hif4 again, but served from REAL 4.5-bit packed buffers (impl='packed'
     # — the deployment artifact; see docs/EXECUTION.md for the dispatch
     # matrix). Same quantized values, 0.5625 B/value of weight residency.
+    from repro.core import kvcache
     from repro.runtime.serve_loop import (
         packed_weight_bytes, prepare_params_for_serving)
     qp = QuantConfig(fmt="hif4", impl="packed")
@@ -61,6 +62,22 @@ def main():
     agree = float(jnp.mean(toks == ref)) * 100
     print(f"{'hif4 (impl=packed)':22} {agree:19.1f}%"
           f"   [{nbytes / nvals:.4f} B/value resident]")
+
+    # ... and with the KV cache ALSO packed at 4.5 bits/value
+    # (kv_format='hif4', repro.core.kvcache): the cache is the term that
+    # grows with slots x capacity, so this is what buys serving scale.
+    toks = serve(cfg, serving_params, prompts, ctx,
+                 ServeConfig(max_new_tokens=args.new_tokens,
+                             kv_format="hif4"))
+    agree = float(jnp.mean(toks == ref)) * 100
+    a = cfg.attn
+    kv_tok = kvcache.kv_bytes_per_token(a.n_kv_heads, a.d_head,
+                                        "hif4") * cfg.n_layers
+    kv_bf16 = kvcache.kv_bytes_per_token(a.n_kv_heads, a.d_head,
+                                         "bf16") * cfg.n_layers
+    print(f"{'hif4 + hif4 kv cache':22} {agree:19.1f}%"
+          f"   [kv {kv_tok} B/token vs bf16 {kv_bf16} "
+          f"-> {kv_bf16 / kv_tok:.2f}x slots]")
 
 
 if __name__ == "__main__":

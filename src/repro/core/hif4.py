@@ -176,6 +176,21 @@ def pack_groups(g: HiF4Groups) -> HiF4Packed:
     return HiF4Packed(codes=codes, meta=meta)
 
 
+def quantize_packed(v: jnp.ndarray) -> HiF4Packed:
+    """Algorithm 1 + bit packing in one step: (..., 64) values -> 4.5-bit
+    storage. This is the unit every packed artifact is built from — weights
+    (:class:`repro.core.qlinear.PackedW`) and the KV cache
+    (:mod:`repro.core.kvcache`) share it, so their bits always agree with
+    the QDQ grid (see docs/FORMATS.md for the layout)."""
+    return pack_groups(quantize_groups(v))
+
+
+def dequantize_packed(p: HiF4Packed) -> jnp.ndarray:
+    """Inverse of :func:`quantize_packed` up to the value grid: unpack the
+    bits and reconstruct the (..., 64) values (exact, also in bf16)."""
+    return dequantize_groups(unpack_groups(p))
+
+
 def unpack_groups(p: HiF4Packed) -> HiF4Groups:
     lo = p.codes & 0xF
     hi = p.codes >> 4

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 
 from repro.core import hif4
 from repro.core.formats import BFPFormat, get_format
+from repro.core.kvcache import KVCacheConfig
 
 
 @dataclasses.dataclass(frozen=True)
@@ -40,12 +41,16 @@ class QuantConfig:
                       this — re-quantizing static weights every serve step
                       would be pure waste on hardware too.
     impl            : 'qdq' | 'packed' | 'pallas'
+    kv              : how the decode KV cache is stored ('bf16' dense or
+                      'hif4' packed at 4.5 bits/value) — orthogonal to
+                      ``impl``; see repro.core.kvcache / docs/FORMATS.md.
     """
 
     fmt: str = "none"
     weights_only: bool = False
     offline_weights: bool = False
     impl: str = "qdq"
+    kv: KVCacheConfig = KVCacheConfig()
 
     @property
     def enabled(self) -> bool:

@@ -1,12 +1,14 @@
 """Serving launcher: offline HiF4 packing/PTQ + batched scan decode.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --reduced \
-        --batch 4 --prompt-len 32 --new-tokens 16 --quant hif4 --impl packed
+        --batch 4 --prompt-len 32 --new-tokens 16 --quant hif4 --impl packed \
+        --kv-format hif4
 
 ``--impl`` picks the execution path (see docs/EXECUTION.md): ``packed``
 (default) serves real 4.5-bit resident weights; ``qdq`` is the fake-quant
 accuracy shape; ``pallas`` runs the fixed-point kernels (interpret mode off
-TPU — slow on CPU, use tiny shapes).
+TPU — slow on CPU, use tiny shapes). ``--kv-format hif4`` additionally
+stores the decode KV cache at 4.5 bits/value (docs/FORMATS.md).
 """
 import argparse
 
@@ -14,12 +16,17 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_arch
+from repro.core import kvcache
 from repro.core.qlinear import QuantConfig
 from repro.launch.mesh import make_host_mesh
 from repro.models import lm
 from repro.models.common import ModelCtx
 from repro.runtime import ServeConfig, serve
-from repro.runtime.serve_loop import packed_weight_bytes, prepare_params_for_serving
+from repro.runtime.serve_loop import (
+    packed_weight_bytes,
+    prepare_params_for_serving,
+    resolve_kv_format,
+)
 from repro.sharding.rules import ShardCtx
 
 
@@ -35,13 +42,17 @@ def main():
                     choices=["qdq", "packed", "pallas"])
     ap.add_argument("--decode-chunk", type=int, default=0,
                     help="tokens per jitted decode scan (0 = whole budget)")
+    ap.add_argument("--kv-format", default="bf16",
+                    choices=list(kvcache.KV_FORMATS),
+                    help="decode KV-cache storage (hif4 = 4.5 bits/value)")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
     mesh = make_host_mesh() if len(jax.devices()) > 1 else None
-    ctx = ModelCtx(quant=QuantConfig(fmt=args.quant, impl=args.impl),
+    ctx = ModelCtx(quant=QuantConfig(fmt=args.quant, impl=args.impl,
+                                     kv=kvcache.KVCacheConfig(args.kv_format)),
                    shard=ShardCtx(mesh=mesh), remat=False,
                    attn_q_chunk=32, attn_k_chunk=32)
 
@@ -56,13 +67,31 @@ def main():
         print(f"impl={args.impl}: no packed weights resident "
               f"(fake-quant bf16 artifact)")
 
+    sc = ServeConfig(max_new_tokens=args.new_tokens,
+                     decode_chunk=args.decode_chunk)
+    a = cfg.attn
+    if a is None:
+        print("kv cache residency: n/a (attention-free family)")
+    else:
+        kv_fmt = resolve_kv_format(cfg, ctx.quant, sc)   # bf16 fallback for
+        #                                                  hybrid/audio
+        cap = args.prompt_len + args.new_tokens
+        per_tok = kvcache.kv_bytes_per_token(
+            a.n_kv_heads, a.d_head, kv_fmt) * cfg.n_layers
+        bf16_tok = kvcache.kv_bytes_per_token(
+            a.n_kv_heads, a.d_head, "bf16") * cfg.n_layers
+        total = per_tok * cap * args.batch
+        print(f"kv cache residency [{kv_fmt}]: {per_tok} B/token "
+              f"(bf16: {bf16_tok}) x {cap} capacity x {args.batch} slots "
+              f"= {total / 2**20:.2f} MiB"
+              + (f"  [{bf16_tok / per_tok:.2f}x more slots per byte]"
+                 if kv_fmt == "hif4" else ""))
+
     prompts = {"tokens": jax.random.randint(
         jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab)}
     # packed impls reuse the converted tree (prepare is idempotent on it);
     # the qdq artifact is re-derived inside serve from the raw weights
-    toks = serve(cfg, serving_params if nvals else params, prompts, ctx,
-                 ServeConfig(max_new_tokens=args.new_tokens,
-                             decode_chunk=args.decode_chunk))
+    toks = serve(cfg, serving_params if nvals else params, prompts, ctx, sc)
     for i in range(args.batch):
         print(f"request {i}: {toks[i].tolist()}")
 

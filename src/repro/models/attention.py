@@ -282,6 +282,79 @@ def decode_attention(
 
 
 # ---------------------------------------------------------------------------
+# Packed-KV decode: consume an HiF4 4.5-bit cache (repro.core.kvcache)
+# ---------------------------------------------------------------------------
+
+
+def decode_attention_packed(
+    q: jax.Array,                    # (B, H, D) single query token
+    k_cache: dict,                   # packed leaves {codes, meta, tail}, seq
+    v_cache: dict,                   #   axis 1: codes (B, S, G, 32) etc.
+    length: jax.Array,               # (B,) number of valid cache entries
+    n_kv_heads: int,
+    d_head: int,
+) -> jax.Array:
+    """One-token attention against an HiF4-packed KV cache.
+
+    Dequantize-on-read: the layer's cache expands to bf16 transiently
+    inside the layer scan body — per-LAYER working set, while the
+    RESIDENT multi-layer cache stays at 4.5 bits/value. (Reconstruction
+    is exact in bf16, so this matches :func:`decode_attention` on a bf16
+    cache holding the same quantized values bitwise.)
+    """
+    from repro.core import kvcache
+
+    k = kvcache.dequantize_kv(k_cache, n_kv_heads, d_head)
+    v = kvcache.dequantize_kv(v_cache, n_kv_heads, d_head)
+    return decode_attention(q, k, v, length)
+
+
+def flash_mha_vec_packed(
+    q: jax.Array,                    # (B, Sq, H, D)
+    k_cache: dict,                   # packed leaves, seq capacity Sk
+    v_cache: dict,
+    n_kv_heads: int,
+    d_head: int,
+    *,
+    causal: bool = True,
+    q_offset: int = 0,
+    kv_valid_len: Optional[jax.Array] = None,   # (B,) valid KV prefix length
+    chunking: AttnChunking = AttnChunking(),
+) -> jax.Array:
+    """Vectorized-q flash attention straight off a packed KV cache.
+
+    The vec_q recurrence (:func:`_flash_fwd_vec`, all q chunks advancing
+    together through the KV scan) with the K/V chunk DEQUANTIZED PER TILE
+    inside the scan body — the bf16 working set is one (B, ck, Hkv, Dh)
+    chunk, never the whole cache. This is the multi-token-per-step shape
+    (chunked prefill continuation, speculative verify) of
+    :func:`decode_attention_packed`. Forward-only: caches are never
+    differentiated.
+    """
+    from repro.core import kvcache
+
+    B, Sq, H, D = q.shape
+    assert D == d_head, (q.shape, d_head)
+    Sk = k_cache["codes"].shape[1]
+    nk = _chunks(Sk, chunking.k_chunk)
+    ck = Sk // nk
+    kc = {key: a.reshape((B, nk, ck) + a.shape[2:]) for key, a in k_cache.items()}
+    vc = {key: a.reshape((B, nk, ck) + a.shape[2:]) for key, a in v_cache.items()}
+
+    def loader(ki):
+        kblk = kvcache.dequantize_kv(
+            {key: a[:, ki] for key, a in kc.items()}, n_kv_heads, D)
+        vblk = kvcache.dequantize_kv(
+            {key: a[:, ki] for key, a in vc.items()}, n_kv_heads, D)
+        return kblk, vblk
+
+    out, _ = _flash_fwd_vec(q, None, None, causal, q_offset, chunking,
+                            kv_loader=loader, kv_shape=(Sk, n_kv_heads),
+                            kv_valid_len=kv_valid_len)
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Vectorized-q flash attention ("vec_q"): the q-chunk axis is a DATA axis
 # ---------------------------------------------------------------------------
 #
@@ -298,10 +371,17 @@ def decode_attention(
 # ~2x for causal) — but it unlocks 16x parallelism where heads can't shard.
 
 
-def _flash_fwd_vec(q, k, v, causal, q_offset, chunking, constrain_nq=None):
-    """Returns (out (B,Sq,H,D), lse (B,nq,Hkv,rep,cq))."""
+def _flash_fwd_vec(q, k, v, causal, q_offset, chunking, constrain_nq=None,
+                   *, kv_loader=None, kv_shape=None, kv_valid_len=None):
+    """Returns (out (B,Sq,H,D), lse (B,nq,Hkv,rep,cq)).
+
+    ``kv_loader(ki) -> (kblk, vblk)`` abstracts where a KV chunk comes
+    from: None reads dense (B, Sk, Hkv, D) arrays ``k``/``v``; a loader
+    (with ``kv_shape = (Sk, Hkv)``) may dequantize a packed cache per tile
+    (:func:`flash_mha_vec_packed`). One recurrence, both storages.
+    """
     B, Sq, H, D = q.shape
-    _, Sk, Hkv, _ = k.shape
+    Sk, Hkv = kv_shape if kv_loader is not None else (k.shape[1], k.shape[2])
     rep = H // Hkv
     scale = 1.0 / (D ** 0.5)
     nq = _chunks(Sq, chunking.q_chunk)
@@ -311,19 +391,24 @@ def _flash_fwd_vec(q, k, v, causal, q_offset, chunking, constrain_nq=None):
     qc = q.reshape(B, nq, cq, Hkv, rep, D)
     if constrain_nq is not None:
         qc = constrain_nq(qc)
-    kc = k.reshape(B, nk, ck, Hkv, D)
-    vc = v.reshape(B, nk, ck, Hkv, D)
+    if kv_loader is None:
+        kc = k.reshape(B, nk, ck, Hkv, D)
+        vc = v.reshape(B, nk, ck, Hkv, D)
+        kv_loader = lambda ki: (kc[:, ki], vc[:, ki])
     q_pos = q_offset + jnp.arange(Sq).reshape(nq, cq)
     k_pos = jnp.arange(Sk).reshape(nk, ck)
 
     def kv_body(carry, ki):
         m, l, acc = carry
-        kblk, vblk = kc[:, ki], vc[:, ki]
+        kblk, vblk = kv_loader(ki)
         s = jnp.einsum("bnqgrd,bkgd->bngrqk", qc, kblk,
                        preferred_element_type=jnp.float32) * scale
         if causal:
             mask = q_pos[:, :, None] >= k_pos[ki][None, None, :]  # (nq,cq,ck)
             s = jnp.where(mask[None, :, None, None], s, NEG_INF)
+        if kv_valid_len is not None:
+            valid = k_pos[ki][None, :] < kv_valid_len[:, None]    # (B, ck)
+            s = jnp.where(valid[:, None, None, None, None, :], s, NEG_INF)
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
         p = jnp.exp(s - m_new[..., None])
         corr = jnp.exp(m - m_new)

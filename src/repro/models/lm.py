@@ -141,13 +141,21 @@ def init_params(cfg: ArchConfig, key: jax.Array) -> dict:
 ENC_FRAMES_DECODE = 1536  # nominal encoder length backing a decode step (audio)
 
 
-def abstract_cache(cfg: ArchConfig, batch: int, seq: int) -> dict:
-    """Cache pytree spec for a decode step with capacity ``seq``."""
+def abstract_cache(cfg: ArchConfig, batch: int, seq: int,
+                   kv_format: str = "bf16") -> dict:
+    """Cache pytree spec for a decode step with capacity ``seq``.
+
+    kv_format="hif4" packs the self-attention KV cache at 4.5 bits/value
+    (repro.core.kvcache) for the transformer families; SSM state and the
+    audio/hybrid caches stay bf16 (documented fallback, docs/EXECUTION.md).
+    """
     fam = cfg.family
     pos = PSpec((), (), dtype=jnp.int32, init="zeros")
     if fam in ("dense", "vlm", "moe"):
         return {
-            "kv": stack_specs(tf.attn_cache_specs(cfg, batch, seq), cfg.n_layers),
+            "kv": stack_specs(
+                tf.attn_cache_specs(cfg, batch, seq, kv_format), cfg.n_layers
+            ),
             "pos": pos,
         }
     if fam == "ssm":
@@ -175,9 +183,11 @@ def abstract_cache(cfg: ArchConfig, batch: int, seq: int) -> dict:
     raise ValueError(fam)
 
 
-def init_cache(cfg: ArchConfig, batch: int, seq: int) -> dict:
+def init_cache(cfg: ArchConfig, batch: int, seq: int,
+               kv_format: str = "bf16") -> dict:
     """Zero-initialized decode cache (for real serving, not the dry-run)."""
-    return init_from_specs(abstract_cache(cfg, batch, seq), jax.random.PRNGKey(0))
+    return init_from_specs(abstract_cache(cfg, batch, seq, kv_format),
+                           jax.random.PRNGKey(0))
 
 
 # ---------------------------------------------------------------------------
@@ -561,6 +571,27 @@ def pad_cache(cache: dict, cfg: ArchConfig, capacity: int) -> dict:
     for key in ("kv", "self"):
         if key in out:
             out[key] = grow(out[key])
+    return out
+
+
+def quantize_kv_cache(cache: dict, cfg: ArchConfig) -> dict:
+    """Convert a prefill KV cache to the HiF4-packed layout (one-time).
+
+    KV leaves (L, B, S, Hkv, Dh) become packed {codes, meta, tail} leaves
+    (4.5 bits/value + bf16 partial-group tail). Grouping is per token, so
+    this bulk conversion is bit-identical to appending the same tokens one
+    at a time — the invariant continuous-batching parity rests on. Only
+    the transformer families' self-attention cache ("kv") converts; call
+    before :func:`pad_cache` (zero padding after packing stays inert).
+    """
+    from repro.core import kvcache
+
+    assert cfg.family in ("dense", "vlm", "moe"), cfg.family
+    out = dict(cache)
+    out["kv"] = {
+        "k": kvcache.quantize_kv(cache["kv"]["k"]),
+        "v": kvcache.quantize_kv(cache["kv"]["v"]),
+    }
     return out
 
 

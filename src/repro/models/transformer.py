@@ -18,7 +18,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.models.attention import AttnChunking, decode_attention, flash_attention
+from repro.core import kvcache
+from repro.models.attention import (
+    AttnChunking,
+    decode_attention,
+    decode_attention_packed,
+    flash_attention,
+)
 from repro.models.common import ModelCtx, apply_rope, dense, layer_norm, rms_norm
 from repro.models.params import PSpec
 
@@ -181,6 +187,15 @@ def attn_decode(
     if cross:
         new_cache = cache
         length = jnp.full((B,), cache["k"].shape[1], jnp.int32)
+    elif kvcache.is_packed_kv(cache["k"]):
+        # HiF4-packed cache (repro.core.kvcache): quantize the one new
+        # token into its own 64-groups + tail and write only those bytes;
+        # attention dequantizes on read. Handles scalar and per-slot pos.
+        new_cache = {
+            "k": kvcache.append_token(cache["k"], k_new, pos),
+            "v": kvcache.append_token(cache["v"], v_new, pos),
+        }
+        length = pos + 1 if per_slot else jnp.full((B,), pos + 1, jnp.int32)
     elif per_slot:
         k = _append_kv_per_slot(cache["k"], k_new, pos)
         v = _append_kv_per_slot(cache["v"], v_new, pos)
@@ -193,16 +208,39 @@ def attn_decode(
                                          (0, pos, 0, 0))
         new_cache = {"k": k, "v": v}
         length = jnp.full((B,), pos + 1, jnp.int32)
-    o = decode_attention(q[:, 0], new_cache["k"], new_cache["v"], length)
+    if kvcache.is_packed_kv(new_cache["k"]):
+        o = decode_attention_packed(q[:, 0], new_cache["k"], new_cache["v"],
+                                    length, cfg.attn.n_kv_heads,
+                                    cfg.attn.d_head)
+    else:
+        o = decode_attention(q[:, 0], new_cache["k"], new_cache["v"], length)
     y = _out_proj(p, o[:, None], cfg, ctx)             # (B, 1, d)
     return y, new_cache
 
 
-def attn_cache_specs(cfg: ArchConfig, batch: int, seq: int) -> dict:
+def attn_cache_specs(cfg: ArchConfig, batch: int, seq: int,
+                     kv_format: str = "bf16") -> dict:
     """Abstract per-layer KV-cache spec. seq is sharded over the TP axis
     ("kv_seq" context parallelism) — kv_heads rarely divide the model axis
-    (8 kv heads vs 16-way TP) whereas 32k..512k sequences always do."""
+    (8 kv heads vs 16-way TP) whereas 32k..512k sequences always do.
+
+    kv_format="hif4" yields the packed layout of repro.core.kvcache
+    (codes/meta at 4.5 bits/value + a bf16 partial-group tail); the seq
+    axis keeps the same "kv_seq" sharding — groups never cross tokens, so
+    context parallelism slices packed leaves exactly like dense ones.
+    """
     a = cfg.attn
+    if kv_format == "hif4":
+        g, t = kvcache.split_features(a.n_kv_heads, a.d_head)
+        packed = {
+            "codes": PSpec((batch, seq, g, 32), ("batch", "kv_seq", None, None),
+                           dtype=jnp.uint8, init="zeros"),
+            "meta": PSpec((batch, seq, g), ("batch", "kv_seq", None),
+                          dtype=jnp.uint32, init="zeros"),
+            "tail": PSpec((batch, seq, t), ("batch", "kv_seq", None),
+                          init="zeros"),
+        }
+        return {"k": dict(packed), "v": dict(packed)}
     return {
         "k": PSpec((batch, seq, a.n_kv_heads, a.d_head),
                    ("batch", "kv_seq", None, None)),

@@ -36,6 +36,23 @@ class ServeConfig:
     decode_chunk: int = 0                  # tokens per jitted scan segment;
     #                                        0 = the whole budget in one scan
     eos_id: Optional[int] = None           # stop a request at this token
+    kv_format: Optional[str] = None        # 'bf16' | 'hif4' KV cache storage;
+    #                                        None = ctx.quant.kv.kv_format
+
+
+def resolve_kv_format(cfg: ArchConfig, quant: QuantConfig,
+                      serve_cfg: ServeConfig) -> str:
+    """The KV storage this serve actually runs: ServeConfig overrides the
+    QuantConfig KVCacheConfig; non-transformer families fall back to bf16
+    (SSM state / audio cross caches have no packed layout — see the
+    docs/EXECUTION.md matrix)."""
+    from repro.core import kvcache
+
+    fmt = serve_cfg.kv_format or quant.kv.kv_format
+    assert fmt in kvcache.KV_FORMATS, fmt
+    if fmt == "hif4" and cfg.family not in ("dense", "vlm", "moe"):
+        return "bf16"
+    return fmt
 
 
 def prepare_params_for_serving(params: dict, cfg: ArchConfig,
@@ -80,6 +97,36 @@ def packed_weight_bytes(params) -> tuple[int, int]:
             total += leaf.nbytes_packed
             values += leaf.n_values
     return total, values
+
+
+def kv_cache_bytes(cache: dict) -> tuple[int, int]:
+    """(resident KV-cache bytes, token slots) of a decode cache.
+
+    Counts every attention KV entry: "kv" (transformer/hybrid families) or
+    "self" + "cross" (audio). Token slots = B * capacity of the decode
+    self-attention cache (one slot holds a token's K/V across ALL layers,
+    so bytes/token = bytes / slots); the read-only cross cache contributes
+    bytes but no slots. Works on bf16 and HiF4-packed caches alike.
+    """
+    from repro.core import kvcache
+
+    total = 0
+    slots = 0
+    for entry, counts_slots in (("kv", True), ("self", True),
+                                ("cross", False)):
+        kv = cache.get(entry)
+        if kv is None:
+            continue
+        for tensor in (kv["k"], kv["v"]):
+            if kvcache.is_packed_kv(tensor):
+                total += kvcache.packed_kv_nbytes(tensor)
+                _, b, s = tensor["codes"].shape[:3]
+            else:
+                total += int(tensor.nbytes)
+                _, b, s = tensor.shape[:3]
+            if counts_slots:
+                slots = b * s
+    return total, slots
 
 
 # ---------------------------------------------------------------------------
@@ -141,6 +188,15 @@ def _jit_prefill(cfg: ArchConfig, sctx: ModelCtx):
     return fn
 
 
+def _jit_quantize_kv(cfg: ArchConfig):
+    key = ("quantize_kv", cfg)
+    fn = _JIT_CACHE.get(key)
+    if fn is None:
+        fn = jax.jit(lambda c: lm.quantize_kv_cache(c, cfg))
+        _JIT_CACHE[key] = fn
+    return fn
+
+
 def _jit_decode_scan(cfg: ArchConfig, sctx: ModelCtx, n_tokens: int,
                      eos_id: Optional[int]):
     key = ("decode", cfg, _ctx_cache_key(sctx), n_tokens, eos_id)
@@ -170,8 +226,14 @@ def serve(
     """
     sctx = serving_ctx(ctx)
     params = prepare_params_for_serving(params, cfg, ctx.quant)
+    kv_fmt = resolve_kv_format(cfg, ctx.quant, serve_cfg)
 
     logits, cache = _jit_prefill(cfg, sctx)(params, batch)
+    if kv_fmt == "hif4":
+        # pack the prefix ONCE (per-token groups: bit-identical to having
+        # appended the same tokens one at a time), then pad — zero padding
+        # of packed leaves is inert under the length mask
+        cache = _jit_quantize_kv(cfg)(cache)
     if cfg.family in ("dense", "vlm", "moe", "audio", "hybrid"):
         prompt_len = int(cache["pos"])
         cap = serve_cfg.cache_capacity or prompt_len + serve_cfg.max_new_tokens
@@ -262,6 +324,7 @@ def serve_requests(
     )
     sctx = serving_ctx(ctx)
     params = prepare_params_for_serving(params, cfg, ctx.quant)
+    kv_fmt = resolve_kv_format(cfg, ctx.quant, serve_cfg)
     prefill = _jit_prefill(cfg, sctx)
 
     budget = serve_cfg.max_new_tokens
@@ -270,7 +333,7 @@ def serve_requests(
     B = min(slots, len(requests))
 
     # Shared decode state: zero cache at full capacity, per-slot positions.
-    cache = lm.init_cache(cfg, B, cap)
+    cache = lm.init_cache(cfg, B, cap, kv_format=kv_fmt)
     cache["pos"] = jnp.zeros((B,), jnp.int32)
     token = jnp.zeros((B,), jnp.int32)
     done = jnp.ones((B,), bool)                  # empty slots count as done
@@ -284,6 +347,8 @@ def serve_requests(
         rid = queue.pop(0)
         prompt = jnp.asarray(requests[rid], jnp.int32).reshape(1, -1)
         logits, slot_cache = prefill(params, {"tokens": prompt})
+        if kv_fmt == "hif4":
+            slot_cache = _jit_quantize_kv(cfg)(slot_cache)
         slot_cache = lm.pad_cache(slot_cache, cfg, cap)
         first = jnp.argmax(logits, axis=-1).astype(jnp.int32)[0]
         cache, token = _insert_slot_jit(cache, slot_cache, token, first, b)

@@ -1,0 +1,21 @@
+"""Tier-1 guard for the docs lint (tools/check_docs.py): README and docs
+must not reference symbols or files that no longer exist."""
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from tools import check_docs
+
+
+def test_docs_reference_live_symbols():
+    errors = check_docs.run()
+    assert not errors, "\n".join(errors)
+
+
+def test_lint_catches_dead_references(tmp_path):
+    bad = tmp_path / "bad.md"
+    bad.write_text("see `repro.core.kvcache.no_such_symbol` and "
+                   "docs/NO_SUCH_FILE.md\n")
+    errors = check_docs.check_file(str(bad))
+    assert len(errors) == 2

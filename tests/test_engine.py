@@ -212,3 +212,98 @@ def test_scheduler_matches_solo_serving():
         solo = serve(CFG, params, {"tokens": r[None, :]}, ctx,
                      ServeConfig(max_new_tokens=6))
         np.testing.assert_array_equal(np.asarray(res[i]), np.asarray(solo[0]))
+
+
+# ---------------------------------------------------------------------------
+# HiF4-packed KV cache (kv_format="hif4"): closeness, parity, residency
+# ---------------------------------------------------------------------------
+
+
+def test_hif4_kv_decode_matches_bf16_cache():
+    """Packed-cache decode must track bf16-cache decode within the
+    documented tolerance (docs/FORMATS.md: rtol=0.05, atol=0.1 on
+    logits — the KV quantization error), over several appended steps."""
+    params = lm.init_params(CFG, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0, CFG.vocab)
+    ctx = serving_ctx(_ctx("qdq"))
+
+    logits, cache = lm.prefill(params, {"tokens": tokens}, CFG, ctx)
+    cache_bf = lm.pad_cache(cache, CFG, 24)
+    cache_pk = lm.pad_cache(lm.quantize_kv_cache(cache, CFG), CFG, 24)
+
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    tok_bf = tok_pk = tok
+    for _ in range(5):
+        l_bf, cache_bf = lm.decode_step(params, tok_bf, cache_bf, CFG, ctx)
+        l_pk, cache_pk = lm.decode_step(params, tok_pk, cache_pk, CFG, ctx)
+        np.testing.assert_allclose(np.asarray(l_pk), np.asarray(l_bf),
+                                   rtol=0.05, atol=0.1)
+        tok_bf = jnp.argmax(l_bf, -1).astype(jnp.int32)
+        tok_pk = jnp.argmax(l_pk, -1).astype(jnp.int32)
+
+
+def test_hif4_kv_serve_config_wiring():
+    """ServeConfig.kv_format and QuantConfig.kv both select the packed
+    cache, and the two spellings serve identical tokens."""
+    from repro.core.kvcache import KVCacheConfig
+
+    params = lm.init_params(CFG, jax.random.PRNGKey(0))
+    prompts = {"tokens": jax.random.randint(jax.random.PRNGKey(4), (2, 8),
+                                            0, CFG.vocab)}
+    via_serve_cfg = serve(CFG, params, prompts, _ctx("packed"),
+                          ServeConfig(max_new_tokens=4, kv_format="hif4"))
+    ctx = ModelCtx(quant=QuantConfig(fmt="hif4", impl="packed",
+                                     kv=KVCacheConfig("hif4")),
+                   remat=False, attn_q_chunk=32, attn_k_chunk=32)
+    via_quant_cfg = serve(CFG, params, prompts, ctx,
+                          ServeConfig(max_new_tokens=4))
+    np.testing.assert_array_equal(np.asarray(via_serve_cfg),
+                                  np.asarray(via_quant_cfg))
+
+
+def test_scheduler_matches_solo_serving_hif4_kv():
+    """Continuous batching over a PACKED cache must stay bit-identical to
+    solo serving: a token's packed bits depend only on its own K/V vector,
+    never on its slot, neighbours, or cache capacity."""
+    params = lm.init_params(CFG, jax.random.PRNGKey(0))
+    reqs = [
+        jax.random.randint(jax.random.PRNGKey(20 + i), (8 + 4 * i,), 0,
+                           CFG.vocab)
+        for i in range(3)
+    ]
+    ctx = _ctx("packed")
+    sc = ServeConfig(max_new_tokens=6, decode_chunk=2, kv_format="hif4")
+    res = serve_requests(CFG, params, reqs, ctx, sc, slots=2)
+    for i, r in enumerate(reqs):
+        solo = serve(CFG, params, {"tokens": r[None, :]}, ctx,
+                     ServeConfig(max_new_tokens=6, kv_format="hif4"))
+        np.testing.assert_array_equal(np.asarray(res[i]), np.asarray(solo[0]))
+
+
+def test_flash_mha_vec_packed_matches_dense():
+    """The packed vec-q flash variant (per-tile dequantize inside the KV
+    scan) must match the dense recurrence run on the dequantized cache."""
+    from repro.core import kvcache
+    from repro.models import attention as attn_mod
+
+    B, Sq, Sk, Hkv, rep, D = 2, 8, 32, 2, 2, 32
+    q = (jax.random.normal(jax.random.PRNGKey(0), (B, Sq, Hkv * rep, D))
+         * 0.3).astype(jnp.bfloat16)
+    k = (jax.random.normal(jax.random.PRNGKey(1), (B, Sk, Hkv, D))
+         * 0.3).astype(jnp.bfloat16)
+    v = (jax.random.normal(jax.random.PRNGKey(2), (B, Sk, Hkv, D))
+         * 0.3).astype(jnp.bfloat16)
+    pk, pv = kvcache.quantize_kv(k), kvcache.quantize_kv(v)
+    kd = kvcache.dequantize_kv(pk, Hkv, D)
+    vd = kvcache.dequantize_kv(pv, Hkv, D)
+    chunking = attn_mod.AttnChunking(q_chunk=4, k_chunk=8)
+    valid = jnp.asarray([Sk, Sk // 2], jnp.int32)
+
+    got = attn_mod.flash_mha_vec_packed(
+        q, pk, pv, Hkv, D, causal=True, q_offset=Sk - Sq,
+        kv_valid_len=valid, chunking=chunking)
+    want, _ = attn_mod._flash_fwd_impl(
+        q, kd, vd, True, Sk - Sq, valid, chunking)
+    np.testing.assert_allclose(np.asarray(got, jnp.float32),
+                               np.asarray(want, jnp.float32),
+                               rtol=0.02, atol=0.01)

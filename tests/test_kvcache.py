@@ -1,0 +1,109 @@
+"""HiF4-packed KV cache (repro.core.kvcache): layout, round-trip, the
+partial-group staging buffer, and append-one-token vs bulk equivalence —
+the invariant continuous-batching parity rests on."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hif4, kvcache
+
+
+def _kv(shape, seed=0, scale=0.3):
+    return (jax.random.normal(jax.random.PRNGKey(seed), shape) * scale).astype(
+        jnp.bfloat16
+    )
+
+
+def test_layout_shapes_and_dtypes():
+    kv = _kv((2, 5, 4, 32))                        # F = 128: G=2, T=0
+    pk = kvcache.quantize_kv(kv)
+    assert pk["codes"].shape == (2, 5, 2, 32) and pk["codes"].dtype == jnp.uint8
+    assert pk["meta"].shape == (2, 5, 2) and pk["meta"].dtype == jnp.uint32
+    assert pk["tail"].shape == (2, 5, 0) and pk["tail"].dtype == jnp.bfloat16
+
+
+def test_roundtrip_matches_qdq():
+    """Dequantize-on-read must land exactly on the HiF4 QDQ grid (the
+    reconstruction is exact in bf16)."""
+    kv = _kv((2, 5, 4, 32))
+    deq = kvcache.dequantize_kv(kvcache.quantize_kv(kv), 4, 32)
+    want = hif4.qdq(kv.reshape(2, 5, 128).astype(jnp.float32), axis=-1)
+    np.testing.assert_array_equal(
+        np.asarray(deq.reshape(2, 5, 128), jnp.float32), np.asarray(want))
+
+
+def test_partial_group_tail_is_exact():
+    """F % 64 features stay bf16 in the staging buffer: bit-identical on
+    read; whole groups still quantize."""
+    kv = _kv((2, 3, 3, 24), seed=1)                # F = 72: G=1, T=8
+    pk = kvcache.quantize_kv(kv)
+    assert pk["codes"].shape[-2:] == (1, 32) and pk["tail"].shape[-1] == 8
+    deq = kvcache.dequantize_kv(pk, 3, 24).reshape(2, 3, 72)
+    flat = kv.reshape(2, 3, 72)
+    np.testing.assert_array_equal(                 # tail: exact
+        np.asarray(deq[..., 64:], jnp.float32),
+        np.asarray(flat[..., 64:], jnp.float32))
+    want = hif4.qdq(flat[..., :64].astype(jnp.float32), axis=-1)
+    np.testing.assert_array_equal(                 # body: on the HiF4 grid
+        np.asarray(deq[..., :64], jnp.float32), np.asarray(want))
+
+
+def test_append_token_matches_bulk_quantize():
+    """Per-token grouping: appending token-by-token must produce the very
+    bytes of quantizing the whole sequence at once."""
+    kv = _kv((2, 6, 4, 32), seed=2)
+    bulk = kvcache.quantize_kv(kv)
+    cache = {k: jnp.zeros(v.shape, v.dtype) for k, v in bulk.items()}
+    for s in range(6):
+        cache = kvcache.append_token(cache, kv[:, s : s + 1], jnp.asarray(s))
+    for key in bulk:
+        np.testing.assert_array_equal(np.asarray(cache[key]),
+                                      np.asarray(bulk[key]))
+
+
+def test_append_token_per_slot_positions():
+    """(B,) per-slot offsets (continuous batching): each slot's token lands
+    at its own position, independent of its neighbours."""
+    kv = _kv((3, 1, 4, 32), seed=3)
+    bulk_rows = kvcache.quantize_kv(kv)            # (3, 1, ...) per slot
+    cap = 5
+    cache = {k: jnp.zeros((3, cap) + v.shape[2:], v.dtype)
+             for k, v in bulk_rows.items()}
+    pos = jnp.asarray([0, 2, 4], jnp.int32)
+    cache = kvcache.append_token(cache, kv, pos)
+    for b, p in enumerate([0, 2, 4]):
+        for key in bulk_rows:
+            np.testing.assert_array_equal(
+                np.asarray(cache[key][b, p]), np.asarray(bulk_rows[key][b, 0]))
+            # every other row untouched (zeros)
+            others = np.delete(np.asarray(cache[key][b]), p, axis=0)
+            assert not np.any(others)
+
+
+def test_kv_bytes_per_token():
+    # F = 128: 2 groups x 36 B = 72 per tensor, K+V = 144 vs 512 bf16
+    assert kvcache.kv_bytes_per_token(4, 32, "bf16") == 512
+    assert kvcache.kv_bytes_per_token(4, 32, "hif4") == 144
+    # whole-group geometries hit the full 4.5-bit ratio
+    for hkv, dh in [(4, 32), (8, 128)]:
+        assert (kvcache.kv_bytes_per_token(hkv, dh, "bf16")
+                / kvcache.kv_bytes_per_token(hkv, dh, "hif4")
+                ) == pytest.approx(2 / 0.5625, rel=1e-6)
+    # partial group pays bf16 for the tail only: G=1, T=8 at F=72
+    assert kvcache.kv_bytes_per_token(3, 24, "hif4") == 2 * (36 + 16)
+
+
+def test_is_packed_kv_and_nbytes():
+    kv = _kv((1, 4, 4, 32))
+    pk = kvcache.quantize_kv(kv)
+    assert kvcache.is_packed_kv(pk) and not kvcache.is_packed_kv(kv)
+    # 4 tokens x (2 groups x 36 B) per tensor
+    assert kvcache.packed_kv_nbytes(pk) == 4 * 2 * 36
+
+
+def test_config_validates():
+    assert kvcache.KVCacheConfig("hif4").packed
+    assert not kvcache.KVCacheConfig().packed
+    with pytest.raises(AssertionError):
+        kvcache.KVCacheConfig("int8")

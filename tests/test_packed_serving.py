@@ -61,3 +61,33 @@ def test_packed_serving_matches_offline_qdq():
     cache = lm.pad_cache(cache, CFG, 24)
     logits2, _ = lm.decode_step(packed_params, tok, cache, CFG, CTX)
     assert bool(jnp.all(jnp.isfinite(logits2)))
+
+
+def test_fully_packed_serving_residency():
+    """Packed weights AND a packed KV cache together: the whole serving
+    working set (weights 0.5625 B/value, cache 4.5 bits/value + tail)
+    measured off the real pytrees, while decode still runs."""
+    from repro.runtime.serve_loop import (
+        ServeConfig, kv_cache_bytes, packed_weight_bytes,
+        prepare_params_for_serving, serve)
+
+    params = lm.init_params(CFG, jax.random.PRNGKey(0))
+    qp = QuantConfig(fmt="hif4", impl="packed")
+    serving_params = prepare_params_for_serving(params, CFG, qp)
+    nbytes, nvals = packed_weight_bytes(serving_params)
+    assert nvals and nbytes / nvals == 0.5625
+
+    cap = 24
+    packed_cache = lm.init_cache(CFG, 2, cap, kv_format="hif4")
+    bf16_cache = lm.init_cache(CFG, 2, cap, kv_format="bf16")
+    pk_bytes, slots = kv_cache_bytes(packed_cache)
+    bf_bytes, slots_bf = kv_cache_bytes(bf16_cache)
+    assert slots == slots_bf == 2 * cap
+    assert bf_bytes / pk_bytes >= 3.0          # >= 3x cache reduction
+
+    ctx = ModelCtx(quant=qp, remat=False, attn_q_chunk=32, attn_k_chunk=32)
+    prompts = {"tokens": jax.random.randint(jax.random.PRNGKey(5), (2, 8),
+                                            0, CFG.vocab)}
+    toks = serve(CFG, serving_params, prompts, ctx,
+                 ServeConfig(max_new_tokens=4, kv_format="hif4"))
+    assert toks.shape == (2, 4) and bool(jnp.all(toks >= 0))

@@ -1,0 +1,111 @@
+"""Docs lint: fail when README/docs reference symbols or files that no
+longer exist.
+
+Scans the prose docs (README.md, docs/*.md, ROADMAP.md) for
+
+  * dotted ``repro...`` references (``repro.core.kvcache``,
+    ``repro.models.attention.decode_attention_packed``, ...): the longest
+    importable module prefix is imported and the remainder resolved with
+    getattr — a renamed function or deleted module fails the lint;
+  * repo-relative file references (``docs/FORMATS.md``,
+    ``benchmarks/serve_throughput.py``, ``tests/test_engine.py``, ...):
+    the path must exist.
+
+Runs as a section of ``benchmarks/run.py`` and as the tier-1 test
+``tests/test_docs.py``, so stale docs break CI instead of readers.
+
+    PYTHONPATH=src python -m tools.check_docs
+"""
+from __future__ import annotations
+
+import importlib
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# CHANGES.md is deliberately excluded: it is an append-only historical log
+# whose old entries legitimately name since-renamed symbols.
+DOC_FILES = ["README.md", "ROADMAP.md", "docs"]
+
+# repro.a.b or repro.a.b.symbol — at least one dotted component
+SYMBOL_RE = re.compile(r"\brepro(?:\.[A-Za-z_][A-Za-z0-9_]*)+")
+# repo-relative paths with a known top-level dir and a file extension
+PATH_RE = re.compile(
+    r"\b(?:docs|tests|benchmarks|examples|tools|src)/[\w./-]+\.(?:py|md|json)\b"
+)
+
+
+def _doc_paths() -> list[str]:
+    out = []
+    for entry in DOC_FILES:
+        full = os.path.join(REPO, entry)
+        if os.path.isdir(full):
+            out.extend(
+                os.path.join(full, f) for f in sorted(os.listdir(full))
+                if f.endswith(".md")
+            )
+        elif os.path.exists(full):
+            out.append(full)
+    return out
+
+
+def _resolve_symbol(dotted: str) -> str | None:
+    """Return an error string, or None if the reference resolves."""
+    parts = dotted.split(".")
+    # find the longest importable module prefix
+    mod, n_mod = None, 0
+    for i in range(len(parts), 0, -1):
+        try:
+            mod = importlib.import_module(".".join(parts[:i]))
+            n_mod = i
+            break
+        except ImportError:
+            continue
+        except Exception as e:  # import-time crash is a real doc problem too
+            return f"importing {'.'.join(parts[:i])} raised {e!r}"
+    if mod is None:
+        return "no importable module prefix"
+    obj = mod
+    for attr in parts[n_mod:]:
+        if not hasattr(obj, attr):
+            return f"{'.'.join(parts[:n_mod])} has no attribute {attr!r}"
+        obj = getattr(obj, attr)
+    return None
+
+
+def check_file(path: str) -> list[str]:
+    with open(path, encoding="utf-8") as f:
+        text = f.read()
+    rel = os.path.relpath(path, REPO)
+    errors = []
+    for dotted in sorted(set(SYMBOL_RE.findall(text))):
+        err = _resolve_symbol(dotted)
+        if err is not None:
+            errors.append(f"{rel}: dead symbol `{dotted}` ({err})")
+    for ref in sorted(set(PATH_RE.findall(text))):
+        if not os.path.exists(os.path.join(REPO, ref)):
+            errors.append(f"{rel}: dead file reference `{ref}`")
+    return errors
+
+
+def run() -> list[str]:
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    errors = []
+    for path in _doc_paths():
+        errors.extend(check_file(path))
+    return errors
+
+
+def main():
+    errors = run()
+    for e in errors:
+        print(f"[check_docs] {e}")
+    n_files = len(_doc_paths())
+    assert not errors, f"{len(errors)} dead doc references (see above)"
+    print(f"[check_docs] {n_files} doc files clean")
+
+
+if __name__ == "__main__":
+    main()
