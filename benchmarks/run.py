@@ -6,7 +6,9 @@
   quant_error      -> Fig. 3         (Gaussian MSE sweep, 1 : 1.32 : 1.89)
   dot_product      -> §III.B / Fig.4 (fixed-point flow + multiplier counts)
   llm_accuracy     -> Tables III-V   (tiny-LM proxy incl. the NVFP4 crash)
-  serve_throughput -> deployment     (scan-decode tok/s, prefill latency,
+  serve_throughput -> deployment     (scan-decode tok/s per impl — packed
+                                      gated >= 0.9x qdq on the fused
+                                      kernel path — prefill latency,
                                       4.5-bit weight + KV-cache residency
                                       -> BENCH_serve.json)
   roofline         -> §Roofline      (aggregates experiments/dryrun/*.json)

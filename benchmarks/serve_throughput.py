@@ -6,7 +6,9 @@ of weight residency, the hif4 KV cache must serve >= 3x fewer cache
 bytes/token, and scan decode must amortize dispatch):
 
   * prefill latency (s) per impl x kv_format
-  * decode throughput (tokens/s aggregate over the batch) via the scan loop
+  * decode throughput (tokens/s aggregate over the batch) via the scan loop,
+    plus a per-impl decode comparison on identical geometry gated at
+    packed >= 0.9x qdq (the fused dequantize-in-kernel matmul's perf claim)
   * weight bytes resident for the block matmul weights (bf16 vs packed),
     reported as B/value
   * KV-cache bytes/token (measured from the real decode cache pytree) and
@@ -127,15 +129,26 @@ def bench_impl(cfg, params, ctx, *, batch, prompt_len, new_tokens,
     prefill = jax.jit(lambda p, b: lm.prefill(p, b, cfg, sctx))
     out = prefill(serving_params, prompts)
     jax.block_until_ready(out)
-    t0 = time.perf_counter()
-    out = prefill(serving_params, prompts)
-    jax.block_until_ready(out)
-    t_prefill = time.perf_counter() - t0
 
-    t0 = time.perf_counter()
-    toks = serve(cfg, serving_params, prompts, ctx, sc)
-    jax.block_until_ready(toks)
-    t_serve = time.perf_counter() - t0
+    # best-of-3 on BOTH measurements: single CPU wall-clock samples at this
+    # scale are noisy enough to flip the packed-vs-qdq gate, and the decode
+    # rate is a t_serve - t_prefill difference, so an asymmetric noisy-high
+    # prefill sample would corrupt it just as badly as a noisy serve. The
+    # min is the "nothing else interfered" measurement of the compiled
+    # program.
+    t_prefill = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        out = prefill(serving_params, prompts)
+        jax.block_until_ready(out)
+        t_prefill = min(t_prefill, time.perf_counter() - t0)
+
+    t_serve = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        toks = serve(cfg, serving_params, prompts, ctx, sc)
+        jax.block_until_ready(toks)
+        t_serve = min(t_serve, time.perf_counter() - t0)
     decode_tokens = batch * new_tokens
     tok_per_s = decode_tokens / max(t_serve - t_prefill, 1e-9)
 
@@ -203,6 +216,19 @@ def main(argv=None):
                   f"({r['kv_max_slots_full_arch']} slots @ "
                   f"{HBM_BUDGET_GIB} GiB full-arch)")
 
+    # Per-impl decode comparison on identical geometry (bf16-KV rows only,
+    # so the cache format doesn't confound the weight-path comparison).
+    # This is the first point on the bench trajectory the fused kernel is
+    # gated on: packed decode must stay >= 0.9x qdq decode.
+    decode_by_impl = {r["impl"]: r["decode_tok_per_s"] for r in results
+                      if r["kv_format"] == "bf16"}
+    packed_over_qdq = None
+    if "packed" in decode_by_impl and "qdq" in decode_by_impl:
+        packed_over_qdq = round(
+            decode_by_impl["packed"] / decode_by_impl["qdq"], 3)
+        print(f"decode tok/s by impl: {decode_by_impl}  "
+              f"(packed/qdq = {packed_over_qdq}x)")
+
     record = {
         "arch": args.arch + "-smoke",
         "batch": args.batch,
@@ -211,6 +237,8 @@ def main(argv=None):
         "backend": jax.default_backend(),
         "hbm_budget_gib": HBM_BUDGET_GIB,
         "full_arch_capacity": FULL_ARCH_CAPACITY,
+        "decode_tok_per_s_by_impl": decode_by_impl,
+        "packed_over_qdq_decode": packed_over_qdq,
         "results": results,
     }
     with open(OUT_PATH, "w") as f:
@@ -226,6 +254,13 @@ def main(argv=None):
             assert abs(r["bytes_per_value"] - 0.5625) < 1e-3, (
                 f"{r['impl']}: packed residency {r['bytes_per_value']} "
                 f"B/value != 4.5 bits/value")
+
+    # perf regression gate: the fused dequantize-in-kernel path must keep
+    # packed serving at least as fast as qdq (it was 0.32x before fusing)
+    if packed_over_qdq is not None:
+        assert packed_over_qdq >= 0.9, (
+            f"packed decode regressed to {packed_over_qdq}x of qdq "
+            f"(gate: >= 0.9x — the fused path exists to hold this)")
 
     by_kv = {r["kv_format"]: r for r in results}
     if ("hif4" in by_kv and "bf16" in by_kv

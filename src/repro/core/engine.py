@@ -9,13 +9,19 @@ documentation:
            backend and is differentiable (STE); the training and accuracy-
            experiment path.
   packed — the weight is resident as a :class:`~repro.core.qlinear.PackedW`
-           (HiF4 bit-packed buffers, 0.5625 bytes/value) and is dequantized
-           group-wise inside the jitted graph; activations are quantized
-           dynamically. The serving deployment path.
-  pallas — the paper's §III.B fixed-point flow: ``hif4_quantize`` both
-           operands (Algorithm 1 kernel), contract each 64-group on the MXU
-           in int8 with a single f32 ``a_scale * b_scale`` rescale per
-           group (``bfp_matmul_quantized``). Runs in interpret mode off-TPU.
+           (HiF4 bit-packed buffers, 0.5625 bytes/value) and is contracted
+           by the FUSED packed-operand matmul: the kernel reads the 4.5-bit
+           payload tiles directly and expands them to absorbed int8 inside
+           VMEM (``repro.kernels.fused_matmul``), so serving HBM traffic is
+           the packed payload — no (K, N) bf16/int8 intermediate. Off-TPU
+           the identical contraction runs as straight-line XLA
+           (``fused_packed_matmul_xla``); activations are quantized
+           dynamically either way. The serving deployment path.
+  pallas — the paper's §III.B fixed-point flow. On a PackedW it IS the
+           fused packed kernel (same dispatch as ``packed``); on a dense
+           weight it ``hif4_quantize``s both operands (Algorithm 1 kernel)
+           and contracts with ``bfp_matmul_quantized``. Runs in interpret
+           mode off-TPU.
 
 Dispatch is **total**: a combination an impl cannot execute falls back to
 the closest executable path instead of erroring, so model code never guards
@@ -26,8 +32,13 @@ call sites. The fallbacks (see docs/EXECUTION.md for the full matrix):
                                                inherently quantizes both)
   * dense (unpacked) weight under ``packed``-> qdq (nothing resident to
                                                contract against)
-  * PackedW under ``qdq``                   -> packed (a 4.5-bit buffer
-                                               can only be dequantized)
+  * PackedW under ``qdq``                   -> dequantize-then-dot (a
+                                               4.5-bit buffer can only be
+                                               dequantized)
+  * PackedW × ``weights_only`` / non-HiF4
+    fmt / non-innermost contraction         -> dequantize-then-dot (the
+                                               fused kernel quantizes
+                                               activations and tiles K)
   * contraction not a whole number of
     64-groups                               -> qdq
 
@@ -39,6 +50,7 @@ threaded explicitly from the model context.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional
 
 import jax
@@ -55,9 +67,25 @@ from repro.core.qlinear import (
 # Imported at module scope deliberately: the kernel modules concretize
 # bf16-rounded constants at import time, so a first import from inside a
 # traced scan body would see tracers and fail.
-from repro.kernels.bfp_matmul import bfp_matmul_quantized
+from repro.kernels.bfp_matmul import bfp_matmul_quantized, select_block_sizes
+from repro.kernels.fused_matmul import (
+    absorbed_activation,
+    fused_packed_matmul,
+    fused_packed_matmul_xla,
+)
 from repro.kernels.hif4_quant import hif4_quantize
 from repro.sharding.rules import NO_SHARD, ShardCtx
+
+
+@functools.lru_cache(maxsize=None)
+def _default_backend() -> str:
+    """Backend detection, resolved once per process.
+
+    ``jax.default_backend()`` walks the backend registry; un-cached it ran
+    on EVERY matmul dispatch inside the decode scan body (trace time, but
+    per call site per retrace).
+    """
+    return jax.default_backend()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,7 +99,7 @@ class EngineCtx:
 
     def resolved_interpret(self) -> bool:
         if self.interpret is None:
-            return jax.default_backend() != "tpu"
+            return _default_backend() != "tpu"
         return self.interpret
 
 
@@ -91,14 +119,14 @@ def matmul(
     """``x @ w`` through the configured execution path.
 
     ``w`` is a dense array or a :class:`PackedW`. ``accum_dtype`` is the dot
-    OUTPUT dtype on the qdq/packed paths (default x.dtype; see qmatmul for
-    the TP wire rationale); the pallas path always accumulates f32 in the
-    kernel and casts once at the end.
+    OUTPUT dtype on the qdq/packed-fallback paths (default x.dtype; see
+    qmatmul for the TP wire rationale); the fused/pallas kernels always
+    accumulate f32 and cast once at the end.
     """
     cfg = ectx.quant
     if isinstance(w, PackedW):
-        if cfg.impl == "pallas" and _pallas_activation_ok(cfg, x, contract_x):
-            return _pallas_packed_matmul(x, w, ectx)
+        if _fused_packed_ok(cfg, x, contract_x, w):
+            return _fused_packed_matmul(x, w, ectx)
         return _packed_matmul(x, w, ectx, contract_x=contract_x,
                               accum_dtype=accum_dtype)
     if (
@@ -151,7 +179,84 @@ def _qdq_matmul(x, w, cfg, *, contract_x, contract_w, precision, accum_dtype):
 
 
 # ---------------------------------------------------------------------------
-# packed path: PackedW resident buffers, dequantized in-graph
+# fused packed path: the kernel consumes the 4.5-bit payload directly
+# ---------------------------------------------------------------------------
+
+
+def _fused_packed_ok(cfg: QuantConfig, x, contract_x: int, w: PackedW) -> bool:
+    """The fused kernel dynamically quantizes activations and tiles K, so it
+    needs: a packed/pallas impl on the HiF4 format, both-operand
+    quantization, and an innermost-axis contraction of exactly K."""
+    return (
+        cfg.impl in ("packed", "pallas")
+        and cfg.fmt == "hif4"
+        and not cfg.weights_only
+        and contract_x % x.ndim == x.ndim - 1
+        and x.shape[-1] == w.shape2d[0]
+    )
+
+
+# The XLA twin's group-batched dot materializes a (K/64, M, N) f32
+# intermediate (the Pallas kernel keeps it tile-sized in VMEM). Fine for
+# decode (tiny M) and smoke prefill; at large-M off-TPU prefill it would be
+# K/64 times the output — cap it and take the dequantize fallback instead.
+_XLA_FUSED_PART_BYTES_MAX = 128 * 2 ** 20
+
+
+def _fused_packed_matmul(x, w: PackedW, ectx: EngineCtx):
+    """Serving hot path: dynamic activation quant × packed resident weight,
+    dequantized inside the contraction — never a (K, N) HBM intermediate."""
+    out_dtype = x.dtype
+    k, n = w.shape2d
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, k)
+    if ectx.resolved_interpret():
+        # Off-TPU there is no Pallas lowering; interpret mode is a test
+        # vehicle, not a serving path. Run the SAME fused contraction as
+        # straight-line XLA (bit-exact vs the kernel; see fused_matmul) —
+        # unless its batched-dot intermediate would dwarf the output.
+        part_bytes = (k // hif4.GROUP_SIZE) * x2.shape[0] * n * 4
+        if part_bytes > _XLA_FUSED_PART_BYTES_MAX:
+            return _packed_matmul(x, w, ectx, contract_x=-1, accum_dtype=None)
+        codes_km, meta_km = w.kernel_operands(shard=ectx.shard)
+        ai, asc = absorbed_activation(x2)
+        y = fused_packed_matmul_xla(ai, asc, codes_km, meta_km)
+    else:
+        codes_km, meta_km = w.kernel_operands(shard=ectx.shard)
+        ai, asc = hif4_quantize(x2, interpret=False)
+        y = fused_packed_matmul(ai, asc, codes_km, meta_km, interpret=False)
+    return y.reshape(lead + (n,)).astype(out_dtype)
+
+
+def packed_dispatch_info(quant: QuantConfig, w: PackedW, *, decode_m: int,
+                         prefill_m: int, interpret: Optional[bool] = None):
+    """What the engine will actually run for ``w`` under ``quant`` — the
+    launcher prints this next to the residency lines.
+
+    Returns a dict with ``fused`` (bool), ``execution`` (human string), and
+    per-regime kernel block sizes (None on the XLA twin, which doesn't
+    tile).
+    """
+    ectx = EngineCtx(quant=quant, interpret=interpret)
+    k, n = w.shape2d
+    probe = jax.ShapeDtypeStruct((decode_m, k), jnp.bfloat16)
+    fused = _fused_packed_ok(quant, probe, -1, w)
+    if not fused:
+        return {"fused": False, "execution": "dequantize-then-dot fallback",
+                "decode_blocks": None, "prefill_blocks": None}
+    if ectx.resolved_interpret():
+        return {"fused": True,
+                "execution": "XLA fused contraction (off-TPU twin)",
+                "decode_blocks": None, "prefill_blocks": None}
+    return {"fused": True, "execution": "Pallas fused kernel",
+            "decode_blocks": select_block_sizes(decode_m, n, k),
+            "prefill_blocks": select_block_sizes(prefill_m, n, k)}
+
+
+# ---------------------------------------------------------------------------
+# packed fallback: dequantize the PackedW in-graph, then a dense dot.
+# Taken when the fused kernel cannot run (qdq impl, weights_only, non-HiF4
+# activation format, non-innermost contraction) — see docs/EXECUTION.md.
 # ---------------------------------------------------------------------------
 
 
@@ -193,7 +298,8 @@ def _pallas_weight_ok(w, contract_w: int) -> bool:
 
 def _pallas_dense_matmul(x, w, ectx: EngineCtx):
     """Both operands quantized by the Algorithm-1 kernel each call (A-W
-    dynamic quantization; the offline-weights variant is the packed path)."""
+    dynamic quantization; the offline-weights variant is the fused packed
+    path)."""
     interp = ectx.resolved_interpret()
     out_dtype = x.dtype
     lead, K = x.shape[:-1], x.shape[-1]
@@ -209,23 +315,8 @@ def packed_to_absorbed(w: PackedW) -> tuple[jnp.ndarray, jnp.ndarray]:
 
     The 4-bit codes + 32-bit meta expand to the absorbed-shift integers of
     §III.B (micro-exponents become left shifts, |q| <= 28) without ever
-    materializing the bf16 weight — the pallas serving operand.
+    materializing the bf16 weight. The fused kernel performs exactly this
+    expansion per VMEM tile; this host-level version exists as the
+    materialized reference the fused path is tested bit-exact against.
     """
-    k, n = w.shape2d
-    g = hif4.unpack_groups(hif4.HiF4Packed(w.codes, w.meta))
-    ints, scale = hif4.to_absorbed_int(g)               # (n, k/64, 64), (n, k/64)
-    return ints.reshape(n, k).T, scale.astype(jnp.float32).T
-
-
-def _pallas_packed_matmul(x, w: PackedW, ectx: EngineCtx):
-    """Fused serving path: dynamic activation quant (Algorithm 1 kernel) x
-    packed resident weight, contracted by the fixed-point kernel."""
-    interp = ectx.resolved_interpret()
-    out_dtype = x.dtype
-    k, n = w.shape2d
-    lead = x.shape[:-1]
-    assert x.shape[-1] == k, (x.shape, w.shape2d)
-    ai, asc = hif4_quantize(x.reshape(-1, k), interpret=interp)
-    wi, wsc = packed_to_absorbed(w)
-    y = bfp_matmul_quantized(ai, asc, wi, wsc, interpret=interp)
-    return y.reshape(lead + (n,)).astype(out_dtype)
+    return hif4.absorbed_int_km(*w.kernel_operands())

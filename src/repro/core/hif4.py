@@ -15,6 +15,7 @@ from __future__ import annotations
 
 from typing import NamedTuple
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import rounding as R
@@ -152,6 +153,93 @@ def to_absorbed_int(g: HiF4Groups) -> tuple[jnp.ndarray, jnp.ndarray]:
     ints = (quarters << shift).astype(jnp.int8)
     scale = g.e6m2 * 0.25  # each operand contributes sqrt(1/16) = 1/4
     return ints, scale
+
+
+# ---------------------------------------------------------------------------
+# K-major ("kernel-tile") bit-layout helpers — usable from inside a kernel
+# ---------------------------------------------------------------------------
+#
+# The packed artifact stores a weight output-major: codes (N, K/64, 32),
+# meta (N, K/64) (see docs/FORMATS.md).  A matmul kernel consumes the
+# CONTRACTION axis innermost, so the serving re-layout transposes the
+# payload once into K-major 2-D buffers
+#
+#     codes_km (K/2, N) uint8    row k2 holds elements 2*k2 (low nibble)
+#                                and 2*k2+1 (high nibble) of column n
+#     meta_km  (K/64, N) uint32  one group record per 64 contraction rows
+#
+# and the helpers below expand a (bk/2, bn) / (bk/64, bn) VMEM tile of
+# those buffers to the absorbed-shift int8 operand of paper §III.B.  They
+# are pure jnp on whatever tile they are given — the same code runs inside
+# a Pallas kernel on VMEM refs and in the XLA twin of the fused matmul.
+
+
+def expand_codes_km(codes_km: jnp.ndarray) -> jnp.ndarray:
+    """(bk/2, bn) uint8 K-major code bytes -> (bk, bn) int32 S1P2 quarters.
+
+    Low nibble is the even contraction row, high nibble the odd one; the
+    4-bit code is sign<<3 | quarters (rounding.encode_s1p2)."""
+    lo = (codes_km & 0xF).astype(jnp.int32)
+    hi = (codes_km >> 4).astype(jnp.int32)
+    half, bn = codes_km.shape
+    c4 = jnp.stack([lo, hi], axis=1).reshape(half * 2, bn)
+    mag = c4 & 0x7
+    return jnp.where((c4 >> 3) & 1, -mag, mag)
+
+
+def expand_meta_km(meta_km: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(bg, bn) uint32 K-major group metadata -> (shift, scale).
+
+    ``shift`` (bg*64, bn) int32 is the per-element micro-exponent sum
+    E1_8 + E1_16; ``scale`` (bg, bn) f32 is the absorbed group scale
+    E6M2 / 4 (bitwise identical to ``decode_e6m2(meta>>24) * 0.25`` but
+    written with exp2 on the small per-group tile only, no LUT)."""
+    bg, bn = meta_km.shape
+    w8 = meta_km >> 16                       # E1_8 bits in 23..16
+    w16 = meta_km                            # E1_16 bits in 15..0
+    r = jnp.arange(GROUP_SIZE, dtype=jnp.uint32)
+    s8 = ((w8[:, None, :] >> (r[None, :, None] // 8)) & 1).astype(jnp.int32)
+    s4 = ((w16[:, None, :] >> (r[None, :, None] // 4)) & 1).astype(jnp.int32)
+    shift = (s8 + s4).reshape(bg * GROUP_SIZE, bn)
+    code = meta_km >> 24
+    # 2^eb built by exponent-field bitcast: jnp.exp2 is a polynomial
+    # approximation that is NOT exact across the E6M2 range (observed
+    # exp2(15) != 32768 on CPU), and the scale must stay on the exact
+    # power-of-two grid. eb in [-48, 15] is always a normal f32.
+    eb = (code >> 2).astype(jnp.int32) - 48
+    pow2 = jax.lax.bitcast_convert_type(
+        ((eb + 127) << 23).astype(jnp.uint32), jnp.float32)
+    m2 = (code & 0x3).astype(jnp.float32)
+    scale = pow2 * (1.0 + m2 * 0.25) * 0.25
+    # E6M2 0xFF is NaN (never produced by Algorithm 1, but corrupted bits
+    # must decode identically on every path — decode_e6m2 parity)
+    scale = jnp.where(code == 0xFF, jnp.nan, scale)
+    return shift, scale
+
+
+def absorbed_int_km(codes_km: jnp.ndarray, meta_km: jnp.ndarray):
+    """K-major packed tile -> (ints (bk, bn) int8, scale (bk/64, bn) f32).
+
+    The §III.B absorbed-shift operand (micro-exponents folded in as left
+    shifts, |q| <= 28), produced directly from the 4.5-bit payload without
+    materializing values: bitwise identical to
+    ``to_absorbed_int(unpack_groups(...))`` re-laid out K-major."""
+    quarters = expand_codes_km(codes_km)
+    shift, scale = expand_meta_km(meta_km)
+    return (quarters << shift).astype(jnp.int8), scale
+
+
+def dequantize_km(codes_km: jnp.ndarray, meta_km: jnp.ndarray,
+                  dtype=jnp.bfloat16) -> jnp.ndarray:
+    """K-major packed buffers -> (K, N) dense values.
+
+    ``scale * ints`` carries <= 6 significant bits, so the reconstruction
+    is exact in bf16 as well as f32 — and unlike the output-major
+    dequantize it needs no final (N, K) -> (K, N) transpose and no
+    per-element exp2 (shifts are integer left-shifts)."""
+    ints, scale = absorbed_int_km(codes_km, meta_km)
+    scale_k = jnp.repeat(scale, GROUP_SIZE, axis=0)
+    return (scale_k * ints.astype(jnp.float32)).astype(dtype)
 
 
 # ---------------------------------------------------------------------------

@@ -6,10 +6,13 @@ and dispatched by :mod:`repro.core.engine` (``QuantConfig.impl``):
 * ``qdq``     — fake-quant both operands, matmul in bf16/f32. Lowers on any
                 backend; used for accuracy experiments and the dry-run.
 * ``packed``  — weights stored as HiF4 bit-packed buffers (4.5 bits/value in
-                HBM); dequantized group-wise inside the jitted graph. This is
-                the deployment artifact that shrinks the memory roofline term.
+                HBM), contracted by the fused dequantize-in-kernel matmul
+                (repro.kernels.fused_matmul: the payload expands to absorbed
+                int8 inside VMEM). The deployment artifact that shrinks the
+                memory roofline term AND the serving hot path.
 * ``pallas``  — repro.kernels.bfp_matmul: the paper's SS III.B fixed-point
-                flow on the MXU int8 path (TPU target; interpret-mode on CPU).
+                flow on the MXU int8 path (TPU target; interpret-mode on CPU);
+                PackedW weights take the same fused kernel as ``packed``.
 
 Quantization always happens along the contraction dimension (each 64-element
 HiF4 group lies along K), matching how a 64-length PE dot consumes the data.
@@ -212,13 +215,24 @@ class PackedW:
     """A weight stored as HiF4 packed buffers, usable wherever the models
     pass a dense weight: ``dense(x, packed_w)`` dequantizes in-graph.
 
-    Layout: contraction flattened to K (64-groups), outputs flattened to N:
-        codes (N, K/64, 32) uint8    two 4-bit S1P2 codes per byte
-        meta  (N, K/64)     uint32   E6M2<<24 | E1_8<<16 | E1_16
-    = 0.5625 bytes/value vs 2 (bf16): 3.56x less HBM residency AND 3.56x
-    less wire when FSDP-sharded weights are all-gathered at use — the
-    paper's 4.5-bit storage applied to the serving memory/collective
-    roofline terms.
+    Two layouts carry the same bits (docs/FORMATS.md):
+
+    * artifact (``kernel_layout=False``) — output-major, the on-disk /
+      checkpoint shape:
+          codes (N, K/64, 32) uint8    two 4-bit S1P2 codes per byte
+          meta  (N, K/64)     uint32   E6M2<<24 | E1_8<<16 | E1_16
+    * kernel (``kernel_layout=True``) — K-major 2-D, what the fused
+      dequantize-in-kernel matmul tiles over (contraction rows innermost):
+          codes (K/2, N)  uint8        meta (K/64, N) uint32
+
+    Either way = 0.5625 bytes/value vs 2 (bf16): 3.56x less HBM residency
+    AND 3.56x less wire when FSDP-sharded weights are all-gathered at use —
+    the paper's 4.5-bit storage applied to the serving memory/collective
+    roofline terms. ``to_kernel_layout`` transposes the payload ONCE
+    (serving prep), so the decode hot path never re-lays-out per step.
+
+    Stacked-layer weights carry one extra leading L axis on both buffers
+    (``lax.scan`` over layers slices it off before any matmul sees them).
 
     ``shape2d`` = (K, N). ``reshape`` validates-and-passes-through so the
     models' ``w.reshape(d, -1)`` call sites work unchanged.
@@ -229,13 +243,47 @@ class PackedW:
     shape2d: tuple
     dtype: Any = jnp.bfloat16
     axes2d: tuple = (None, None)     # (out logical axis, contract logical axis)
+    kernel_layout: bool = False
 
     def tree_flatten(self):
-        return (self.codes, self.meta), (self.shape2d, self.dtype, self.axes2d)
+        return (self.codes, self.meta), (self.shape2d, self.dtype, self.axes2d,
+                                         self.kernel_layout)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         return cls(children[0], children[1], *aux)
+
+    def to_kernel_layout(self) -> "PackedW":
+        """One-time re-layout artifact -> K-major kernel buffers (same bits).
+
+        Accepts 2-D weights and stacked-layer weights (one leading L axis).
+        """
+        if self.kernel_layout:
+            return self
+        k, n = self.shape2d
+        lead = self.codes.shape[:-3]
+        codes = jnp.swapaxes(
+            self.codes.reshape(lead + (n, k // 2)), -1, -2)      # (.., K/2, N)
+        meta = jnp.swapaxes(self.meta, -1, -2)                   # (.., K/64, N)
+        return PackedW(codes, meta, self.shape2d, self.dtype, self.axes2d,
+                       kernel_layout=True)
+
+    def kernel_operands(self, shard=None):
+        """(codes_km (K/2, N) uint8, meta_km (K/64, N) uint32) for the fused
+        matmul. Kernel-layout weights hand over their resident buffers;
+        artifact-layout weights re-layout in-graph (correct but per-call —
+        serving pre-converts via :meth:`to_kernel_layout`). ``shard``
+        constrains the gather to move the 4.5-bit payload, as in
+        :meth:`dequantize`."""
+        kw = self.to_kernel_layout()
+        codes, meta = kw.codes, kw.meta
+        assert codes.ndim == 2, (
+            f"kernel_operands needs a per-layer slice, got codes {codes.shape}")
+        if shard is not None and shard.mesh is not None:
+            out_name = self.axes2d[0]
+            codes = shard.constrain(codes, None, out_name)
+            meta = shard.constrain(meta, None, out_name)
+        return codes, meta
 
     def reshape(self, *shape):
         """Validate-and-pass-through: the models' ``w.reshape(d, -1)`` /
@@ -289,6 +337,11 @@ class PackedW:
         it constrains the gather to move the 4.5-bit payload.
         """
         k, n = self.shape2d
+        if self.kernel_layout:
+            # K-major buffers reconstruct straight to (K, N): integer
+            # shifts instead of per-element exp2, and no final transpose.
+            codes, meta = self.kernel_operands(shard=shard)
+            return hif4.dequantize_km(codes, meta, self.dtype)
         codes, meta = self.codes, self.meta
         if shard is not None and shard.mesh is not None:
             # Gather the 4.5-bit payload, not the dequantized bf16 weight:
@@ -313,9 +366,7 @@ class PackedW:
 
     @property
     def n_values(self) -> int:
-        k, n = self.shape2d
-        lead = 1
-        # stacked-layer PackedW carries extra leading axes on codes
-        for s in self.codes.shape[:-3]:
-            lead *= int(s)
-        return lead * k * n
+        import numpy as np
+
+        # total code bytes = lead * N * K/2 in either layout
+        return int(np.prod(self.codes.shape)) * 2

@@ -6,50 +6,93 @@ The paper's core hardware insight: micro-exponents are left shifts, so a
 int8 (absorbed-shift elements, |q| <= 28; int8 x int8 -> int32 runs at 2x
 the bf16 rate on v5e — the same 2x the paper claims for 4-bit PEs), then
 apply the single f32 ``a_scale * b_scale`` rescale per (row, col, group)
-while accumulating.
+while accumulating. All 64-groups of a VMEM tile contract in ONE
+``dot_general`` with the group axis batched (``_tile_group_dot``) — not a
+per-group Python loop of 64-wide dots.
 
 Grid (M/bm, N/bn, K/bk); each VMEM tile holds whole 64-groups (bk % 64 ==
 0). The f32 accumulator lives in VMEM across the K-steps of one (i, j)
-tile (standard revisiting-output pattern; K must be the innermost grid
-axis so out_ref revisits are consecutive).
+tile (standard revisiting-output pattern). That revisit pattern silently
+relies on K being the INNERMOST grid axis — consecutive grid steps must
+revisit the same out_ref block — so the K position is a named module
+invariant (``K_GRID_AXIS``) asserted by every host wrapper, not a
+convention.
+
+Block sizes default to a per-regime selection (``select_block_sizes``):
+decode calls have tiny M (a batch of single tokens) and want all of M with
+deep K / wide N tiles; prefill calls have large M and want square-ish MXU
+tiles. Pass explicit ``block_*`` to override.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.hif4_quant import _fit
+
 GROUP = 64
 
+# The output-revisit accumulator requires the K grid axis to be LAST
+# (innermost): pallas iterates the grid in row-major order, so only the
+# last axis advances between consecutive steps of one (i, j) output tile.
+K_GRID_AXIS = 2
 
-def _bfp_matmul_kernel(a_ref, as_ref, b_ref, bs_ref, o_ref, *, n_k_steps):
-    k_step = pl.program_id(2)
+# Decode M (a batch of single-token rows) vs prefill M (batch x seq)
+# regime boundary for block selection.
+_DECODE_M_MAX = 32
+
+
+def select_block_sizes(M: int, N: int, K: int) -> tuple[int, int, int]:
+    """(bm, bn, bk) per execution regime.
+
+    decode (M <= 32): M doesn't tile — take all of it — and the weight is
+    the whole HBM traffic, so deep-K / wide-N tiles maximize payload per
+    grid step (fewer revisits, better DMA pipelining).
+    prefill (M large): square-ish 256/256/512 MXU tiles, the classic
+    compute-bound shape.
+    """
+    if M <= _DECODE_M_MAX:
+        return M, _fit(N, min(512, N), 1), _fit(K, min(1024, K), GROUP)
+    return (_fit(M, min(256, M), 1), _fit(N, min(256, N), 1),
+            _fit(K, min(512, K), GROUP))
+
+
+def _tile_group_dot(a, asc, b, bsc):
+    """All 64-groups of one VMEM tile in a single batched MXU contraction.
+
+    a (bm, bk) int8, asc (bm, bk/64) f32, b (bk, bn) int8,
+    bsc (bk/64, bn) f32 -> (bm, bn) f32: integer dot per group batched over
+    the group axis, then the ONE f32 ``a_scale * b_scale`` rescale per
+    (row, col, group) while summing groups (Eq. 3 flow).
+    """
+    bm, bk = a.shape
+    bn = b.shape[1]
+    g = bk // GROUP
+    a3 = a.reshape(bm, g, GROUP)
+    b3 = b.reshape(g, GROUP, bn)
+    part = jax.lax.dot_general(
+        a3, b3,
+        dimension_numbers=(((2,), (1,)), ((1,), (0,))),
+        preferred_element_type=jnp.int32,
+    )                                                   # (g, bm, bn)
+    scaled = part.astype(jnp.float32) * jnp.transpose(asc)[:, :, None] \
+        * bsc[:, None, :]
+    return jnp.sum(scaled, axis=0)
+
+
+def _bfp_matmul_kernel(a_ref, as_ref, b_ref, bs_ref, o_ref):
+    k_step = pl.program_id(K_GRID_AXIS)
 
     @pl.when(k_step == 0)
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    a = a_ref[...]                      # (bm, bk) int8
-    b = b_ref[...]                      # (bk, bn) int8
-    asc = as_ref[...]                   # (bm, bk/64) f32
-    bsc = bs_ref[...]                   # (bk/64, bn) f32
-    bm, bk = a.shape
-    bn = b.shape[1]
-    g = bk // GROUP
-
-    acc = o_ref[...]
-    # per 64-group: integer MXU dot + ONE float rescale (Eq. 3 flow)
-    for gi in range(g):
-        sl = slice(gi * GROUP, (gi + 1) * GROUP)
-        part = jax.lax.dot_general(
-            a[:, sl], b[sl, :],
-            dimension_numbers=(((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.int32,
-        )
-        acc = acc + part.astype(jnp.float32) * asc[:, gi][:, None] * bsc[gi, :][None, :]
-    o_ref[...] = acc
+    o_ref[...] += _tile_group_dot(a_ref[...], as_ref[...],
+                                  b_ref[...], bs_ref[...])
 
 
 @functools.partial(
@@ -61,25 +104,25 @@ def bfp_matmul_quantized(
     b_ints: jax.Array,     # (K, N) int8
     b_scales: jax.Array,   # (K/64, N) f32
     *,
-    block_m: int = 256,
-    block_n: int = 256,
-    block_k: int = 512,
+    block_m: Optional[int] = None,
+    block_n: Optional[int] = None,
+    block_k: Optional[int] = None,
     interpret: bool = False,
 ) -> jax.Array:
     """Group-scaled integer matmul on pre-quantized HiF4 operands -> f32."""
-    from repro.kernels.hif4_quant import _fit
-
     M, K = a_ints.shape
     K2, N = b_ints.shape
     assert K == K2 and K % GROUP == 0
-    bm = _fit(M, min(block_m, M), 1)
-    bn = _fit(N, min(block_n, N), 1)
-    bk = _fit(K, min(block_k, K), GROUP)
+    abm, abn, abk = select_block_sizes(M, N, K)
+    bm = _fit(M, min(block_m, M), 1) if block_m else abm
+    bn = _fit(N, min(block_n, N), 1) if block_n else abn
+    bk = _fit(K, min(block_k, K), GROUP) if block_k else abk
     grid = (M // bm, N // bn, K // bk)
+    # documented invariant: the accumulator revisit pattern needs K innermost
+    assert K_GRID_AXIS == len(grid) - 1 and grid[K_GRID_AXIS] == K // bk
 
-    kernel = functools.partial(_bfp_matmul_kernel, n_k_steps=K // bk)
     return pl.pallas_call(
-        kernel,
+        _bfp_matmul_kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),

@@ -5,10 +5,12 @@
         --kv-format hif4
 
 ``--impl`` picks the execution path (see docs/EXECUTION.md): ``packed``
-(default) serves real 4.5-bit resident weights; ``qdq`` is the fake-quant
-accuracy shape; ``pallas`` runs the fixed-point kernels (interpret mode off
-TPU — slow on CPU, use tiny shapes). ``--kv-format hif4`` additionally
-stores the decode KV cache at 4.5 bits/value (docs/FORMATS.md).
+(default) serves real 4.5-bit resident weights through the fused
+dequantize-in-kernel matmul (Pallas on TPU, its XLA twin elsewhere);
+``qdq`` is the fake-quant accuracy shape; ``pallas`` adds the fixed-point
+kernels for dense weights too (interpret mode off TPU — slow on CPU, use
+tiny shapes). ``--kv-format hif4`` additionally stores the decode KV cache
+at 4.5 bits/value (docs/FORMATS.md).
 """
 import argparse
 
@@ -28,6 +30,36 @@ from repro.runtime.serve_loop import (
     resolve_kv_format,
 )
 from repro.sharding.rules import ShardCtx
+
+
+def _print_kernel_dispatch(serving_params, ctx, args):
+    """One line per serving regime: is the fused dequantize-in-kernel matmul
+    active for the resident PackedW weights, and with which tile sizes."""
+    from repro.core.engine import packed_dispatch_info
+    from repro.core.qlinear import PackedW
+
+    pws = [leaf for leaf in jax.tree_util.tree_leaves(
+        serving_params, is_leaf=lambda x: isinstance(x, PackedW))
+        if isinstance(leaf, PackedW)]
+    if not pws:
+        return
+    # representative weight: a per-layer slice of the first (stacked) leaf
+    pw = pws[0]
+    if pw.codes.ndim > (2 if pw.kernel_layout else 3):
+        pw = jax.tree_util.tree_map(lambda b: b[0], pw)
+    info = packed_dispatch_info(ctx.quant, pw, decode_m=args.batch,
+                                prefill_m=args.batch * args.prompt_len)
+    if not info["fused"]:
+        print("packed matmul: dequantize-then-dot fallback "
+              "(fused kernel needs impl=packed|pallas, fmt=hif4, "
+              "both-operand quantization)")
+        return
+    k, n = pw.shape2d
+    line = f"packed matmul: fused [{info['execution']}] on e.g. (K={k}, N={n})"
+    if info["decode_blocks"] is not None:
+        line += (f"; blocks decode(bm,bn,bk)={info['decode_blocks']} "
+                 f"prefill={info['prefill_blocks']}")
+    print(line)
 
 
 def main():
@@ -63,6 +95,7 @@ def main():
         print(f"packed weight residency: {nbytes / 2**20:.2f} MiB for "
               f"{nvals} values = {nbytes / nvals:.4f} B/value "
               f"(bf16 would be {2 * nvals / 2**20:.2f} MiB)")
+        _print_kernel_dispatch(serving_params, ctx, args)
     else:
         print(f"impl={args.impl}: no packed weights resident "
               f"(fake-quant bf16 artifact)")

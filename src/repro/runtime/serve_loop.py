@@ -4,9 +4,10 @@ Weights are converted ONCE into the deployment artifact the configured
 execution path consumes (``QuantConfig.impl``):
 
   qdq            -> fake-quant (QDQ) bf16 weights (accuracy-experiment shape)
-  packed/pallas  -> :class:`PackedW` 4.5-bit buffers (real 0.5625 B/value
-                    HBM residency; the pallas path expands them straight to
-                    the §III.B absorbed-int operands in-graph)
+  packed/pallas  -> :class:`PackedW` 4.5-bit buffers in the K-major kernel
+                    layout (real 0.5625 B/value HBM residency) consumed
+                    directly by the fused dequantize-in-kernel matmul
+                    (repro.kernels.fused_matmul)
 
 Decode runs as a ``jax.lax.scan`` over a static token budget — ONE jitted
 dispatch per chunk instead of one per token — with per-request done masks.
@@ -55,22 +56,36 @@ def resolve_kv_format(cfg: ArchConfig, quant: QuantConfig,
     return fmt
 
 
+def _to_kernel_layout(params):
+    """Re-layout every PackedW leaf K-major ONCE (same 4.5-bit payload,
+    transposed) so the fused matmul tiles resident buffers per step instead
+    of re-laying-out inside the decode scan body."""
+    from repro.core.qlinear import PackedW
+
+    return jax.tree_util.tree_map(
+        lambda leaf: leaf.to_kernel_layout()
+        if isinstance(leaf, PackedW) else leaf,
+        params, is_leaf=lambda x: isinstance(x, PackedW),
+    )
+
+
 def prepare_params_for_serving(params: dict, cfg: ArchConfig,
                                quant: QuantConfig) -> dict:
     """One-time offline conversion of block weights into the serving artifact.
 
     embed/head/router stay full precision (paper §IV exclusions). The
-    packed/pallas impls get true 4.5-bit PackedW buffers; qdq keeps the
-    fake-quant bf16 weights of the accuracy experiments.
+    packed/pallas impls get true 4.5-bit PackedW buffers in the K-major
+    kernel layout the fused matmul consumes (docs/FORMATS.md); qdq keeps
+    the fake-quant bf16 weights of the accuracy experiments.
     """
     if not quant.enabled:
         return params
     if packed_weight_bytes(params)[1]:
-        return params                  # already converted (idempotent)
+        return _to_kernel_layout(params)   # already packed (idempotent)
     # hybrid's doubly-stacked mamba blocks don't fit the single leading
     # layer axis PackedW assumes; they keep the QDQ artifact for now.
     if quant.impl in ("packed", "pallas") and cfg.family != "hybrid":
-        return lm.pack_params_for_serving(params, cfg)
+        return _to_kernel_layout(lm.pack_params_for_serving(params, cfg))
     out = dict(params)
     for key in ("blocks", "shared", "enc_blocks"):
         if key in out:

@@ -1,7 +1,9 @@
 """Docs lint: fail when README/docs reference symbols or files that no
 longer exist.
 
-Scans the prose docs (README.md, docs/*.md, ROADMAP.md) for
+Scans the prose docs (README.md, docs/*.md, ROADMAP.md) and the module
+docstrings of the kernel package (``src/repro/kernels/*.py`` — the modules
+whose prose makes cross-module claims about layouts and test anchors) for
 
   * dotted ``repro...`` references (``repro.core.kvcache``,
     ``repro.models.attention.decode_attention_packed``, ...): the longest
@@ -37,6 +39,12 @@ PATH_RE = re.compile(
 )
 
 
+# Code packages whose MODULE DOCSTRINGS are linted like prose docs: kernel
+# modules document payload layouts and name their test/doc anchors, and a
+# renamed anchor must fail CI the same way a stale README does.
+DOCSTRING_DIRS = ["src/repro/kernels"]
+
+
 def _doc_paths() -> list[str]:
     out = []
     for entry in DOC_FILES:
@@ -48,6 +56,18 @@ def _doc_paths() -> list[str]:
             )
         elif os.path.exists(full):
             out.append(full)
+    return out
+
+
+def _docstring_paths() -> list[str]:
+    out = []
+    for entry in DOCSTRING_DIRS:
+        full = os.path.join(REPO, entry)
+        if os.path.isdir(full):
+            out.extend(
+                os.path.join(full, f) for f in sorted(os.listdir(full))
+                if f.endswith(".py")
+            )
     return out
 
 
@@ -75,9 +95,13 @@ def _resolve_symbol(dotted: str) -> str | None:
     return None
 
 
-def check_file(path: str) -> list[str]:
+def check_file(path: str, docstring_only: bool = False) -> list[str]:
     with open(path, encoding="utf-8") as f:
         text = f.read()
+    if docstring_only:
+        import ast
+
+        text = ast.get_docstring(ast.parse(text)) or ""
     rel = os.path.relpath(path, REPO)
     errors = []
     for dotted in sorted(set(SYMBOL_RE.findall(text))):
@@ -95,6 +119,8 @@ def run() -> list[str]:
     errors = []
     for path in _doc_paths():
         errors.extend(check_file(path))
+    for path in _docstring_paths():
+        errors.extend(check_file(path, docstring_only=True))
     return errors
 
 
@@ -102,7 +128,7 @@ def main():
     errors = run()
     for e in errors:
         print(f"[check_docs] {e}")
-    n_files = len(_doc_paths())
+    n_files = len(_doc_paths()) + len(_docstring_paths())
     assert not errors, f"{len(errors)} dead doc references (see above)"
     print(f"[check_docs] {n_files} doc files clean")
 
