@@ -8,16 +8,62 @@
   llm_accuracy     -> Tables III-V   (tiny-LM proxy incl. the NVFP4 crash)
   serve_throughput -> deployment     (scan-decode tok/s per impl — packed
                                       gated >= 0.9x qdq on the fused
-                                      kernel path — prefill latency,
-                                      4.5-bit weight + KV-cache residency
-                                      -> BENCH_serve.json)
+                                      kernel path — decode-step latency
+                                      per kv_format — hif4 KV gated
+                                      >= 0.9x bf16 on the fused
+                                      decode-attention path — prefill
+                                      latency, 4.5-bit weight + KV-cache
+                                      residency -> BENCH_serve.json)
   roofline         -> §Roofline      (aggregates experiments/dryrun/*.json)
   check_docs       -> repo lint      (README/docs must not reference dead
                                       symbols or files)
 """
 import argparse
+import json
+import os
 import sys
 import time
+
+
+def check_serve_gates():
+    """BENCH_serve.json must carry BOTH serving perf gates — the fused
+    matmul's packed>=0.9x-qdq ratio and the fused decode-attention's
+    hif4-KV>=0.9x-bf16-KV ratio. A benchmark refactor that silently drops
+    a gate field must fail here loudly, not skip: the gates are the perf
+    claims the fused kernels exist to hold. A null value is accepted ONLY
+    when the recorded sweep demonstrably lacks one side of the comparison
+    (a narrowed `--impl`/`--kv-format` run) — null with both sides present
+    means the gate was skipped, which is exactly the failure this check
+    exists for.
+    """
+    path = os.path.join(os.path.dirname(__file__), "BENCH_serve.json")
+    assert os.path.exists(path), (
+        "benchmarks/BENCH_serve.json missing — run benchmarks.serve_throughput")
+    with open(path) as f:
+        record = json.load(f)
+    rows = record.get("results", [])
+    impls = {r.get("impl") for r in rows}
+    packed_kvs = {r.get("kv_format") for r in rows if r.get("impl") == "packed"}
+    both_sides = {
+        "packed_over_qdq_decode": {"packed", "qdq"} <= impls,
+        "hif4_over_bf16_kv_decode": {"bf16", "hif4"} <= packed_kvs,
+    }
+    shown = {}
+    for gate, covered in both_sides.items():
+        assert gate in record, (
+            f"BENCH_serve.json lacks the `{gate}` gate — serve_throughput "
+            f"must record (and assert) it, not skip it")
+        if record[gate] is None:
+            assert not covered, (
+                f"BENCH_serve.json has `{gate}` = null although the sweep "
+                f"covered both sides of the comparison — the gate was "
+                f"skipped, not inapplicable")
+            shown[gate] = "n/a (narrowed sweep)"
+        else:
+            shown[gate] = f"{record[gate]}x"
+    print(f"[serve gates] packed/qdq decode = "
+          f"{shown['packed_over_qdq_decode']}, hif4/bf16 KV decode = "
+          f"{shown['hif4_over_bf16_kv_decode']}")
 
 
 def main():
@@ -41,6 +87,10 @@ def main():
             ("serve_throughput (deployment)", lambda: serve_throughput.main([]))
         )
     sections.append(("roofline (§Roofline)", roofline.main))
+
+    # the serve gates are checked even under --skip-llm (against the
+    # committed BENCH_serve.json): a missing gate fails loudly, never skips
+    sections.append(("serve perf gates (BENCH_serve.json)", check_serve_gates))
 
     from tools import check_docs
     sections.append(("check_docs (repo lint)", check_docs.main))

@@ -46,6 +46,14 @@ The engine context also carries the :class:`ShardCtx` that packed-weight
 dequantization needs (gather the 4.5-bit payload, not the dequantized bf16
 weight) — previously a module-level mutable (``_PACKED_SHARD``), now
 threaded explicitly from the model context.
+
+Decode attention over an HiF4-packed KV cache dispatches here too
+(:func:`attention_decode`): impl packed/pallas on a kernel-tileable cache
+on TPU runs the fused Pallas flash kernel
+(``repro.kernels.fused_attention`` — the 4.5-bit payload expands per KV
+tile inside VMEM); every other combination runs its bit-exact XLA twin,
+whose bf16 working set is still one KV tile. The bf16 cache path never
+enters the engine. See docs/EXECUTION.md for the attention matrix.
 """
 from __future__ import annotations
 
@@ -56,7 +64,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import hif4
+from repro.core import hif4, kvcache
 from repro.core.qlinear import (
     NO_QUANT,
     PackedW,
@@ -68,6 +76,12 @@ from repro.core.qlinear import (
 # bf16-rounded constants at import time, so a first import from inside a
 # traced scan body would see tracers and fail.
 from repro.kernels.bfp_matmul import bfp_matmul_quantized, select_block_sizes
+from repro.kernels.fused_attention import (
+    fused_decode_attention,
+    fused_decode_attention_xla,
+    kernel_compatible,
+    select_kv_block,
+)
 from repro.kernels.fused_matmul import (
     absorbed_activation,
     fused_packed_matmul,
@@ -251,6 +265,79 @@ def packed_dispatch_info(quant: QuantConfig, w: PackedW, *, decode_m: int,
     return {"fused": True, "execution": "Pallas fused kernel",
             "decode_blocks": select_block_sizes(decode_m, n, k),
             "prefill_blocks": select_block_sizes(prefill_m, n, k)}
+
+
+# ---------------------------------------------------------------------------
+# fused decode-attention path: the kernel consumes the packed KV cache
+# ---------------------------------------------------------------------------
+
+
+def _fused_attn_ok(cfg: QuantConfig, k_cache: dict, n_kv_heads: int,
+                   d_head: int) -> bool:
+    """The Pallas decode-attention kernel needs a packed/pallas impl and a
+    kernel-tileable cache (kernel-tile layout, no staging tail, head blocks
+    dividing the head count)."""
+    return (
+        cfg.impl in ("packed", "pallas")
+        and kernel_compatible(k_cache, n_kv_heads, d_head)
+    )
+
+
+def attention_decode(
+    q: jnp.ndarray,          # (B, H, D) single query token
+    k_cache: dict,           # HiF4-packed leaves {codes, meta, tail}
+    v_cache: dict,
+    length: jnp.ndarray,     # (B,) valid cache prefix per slot
+    n_kv_heads: int,
+    d_head: int,
+    ectx: EngineCtx = DEFAULT_ENGINE,
+) -> jnp.ndarray:
+    """Decode attention against a PACKED KV cache, dispatched like matmul.
+
+    impl packed/pallas x a kernel-tileable cache x TPU runs the fused
+    Pallas kernel (``repro.kernels.fused_attention``): the 4.5-bit payload
+    streams into VMEM and expands per KV tile. Every other combination —
+    off-TPU, qdq impl, artifact layout, staging tail — runs the bit-exact
+    XLA twin, whose bf16 working set is still ONE KV tile, never the cache.
+    bf16 caches never reach this function (``attn_decode`` keeps the dense
+    path untouched). See docs/EXECUTION.md for the full matrix.
+    """
+    if (_fused_attn_ok(ectx.quant, k_cache, n_kv_heads, d_head)
+            and not ectx.resolved_interpret()):
+        return fused_decode_attention(
+            q, k_cache, v_cache, length,
+            n_kv_heads=n_kv_heads, d_head=d_head, interpret=False)
+    return fused_decode_attention_xla(
+        q, k_cache, v_cache, length, n_kv_heads, d_head)
+
+
+def attention_dispatch_info(quant: QuantConfig, k_cache: dict, *,
+                            n_kv_heads: int, d_head: int,
+                            interpret: Optional[bool] = None):
+    """What :func:`attention_decode` will run for this cache under
+    ``quant`` — the launcher prints it next to the fused-matmul line.
+
+    Returns ``fused`` (bool: the Pallas kernel), ``execution`` (human
+    string), and ``block_kv`` (the KV tile both executions stream).
+    """
+    ectx = EngineCtx(quant=quant, interpret=interpret)
+    block = select_kv_block(kvcache.seq_capacity(k_cache))
+    if not _fused_attn_ok(quant, k_cache, n_kv_heads, d_head):
+        if quant.impl not in ("packed", "pallas"):
+            why = f"impl={quant.impl}"
+        elif not kvcache.is_kernel_layout(k_cache):
+            why = "artifact layout"
+        else:
+            # the only remaining kernel_compatible failure: F % 64 != 0
+            # (a tail-free F always makes Hkv divisible by the head block)
+            why = "staging tail"
+        return {"fused": False, "block_kv": block,
+                "execution": f"XLA twin (chunked dequantize; {why})"}
+    if ectx.resolved_interpret():
+        return {"fused": False, "block_kv": block,
+                "execution": "XLA twin (chunked dequantize; off-TPU)"}
+    return {"fused": True, "block_kv": block,
+            "execution": "Pallas fused kernel"}
 
 
 # ---------------------------------------------------------------------------

@@ -6,14 +6,32 @@ This module stores each cached token's K (and V) vector in the HiF4 packed
 layout so the resident bytes drop from 2 B/value (bf16) to 0.5625 B/value —
 ~3.56x more continuous-batching slots per device for the same HBM.
 
-Layout (per layer, per tensor; see docs/FORMATS.md for the bit layout):
+Two layouts carry the same bits (see docs/FORMATS.md for the bit layout);
+with token features F = n_kv_heads * d_head flattened per token,
+G = F // 64 whole HiF4 groups and T = F % 64 tail features:
 
-    token features F = n_kv_heads * d_head, flattened per token
-    G = F // 64 whole HiF4 groups, T = F % 64 tail features
+* artifact (token-major — what :func:`quantize_kv` writes, the natural
+  shape for per-token appends and interchange):
 
-    codes (..., S, G, 32) uint8    two 4-bit S1P2 codes per byte
-    meta  (..., S, G)     uint32   E6M2<<24 | E1_8<<16 | E1_16
-    tail  (..., S, T)     bf16     partial-group staging buffer
+      codes (..., S, G, 32) uint8    two 4-bit S1P2 codes per byte
+      meta  (..., S, G)     uint32   E6M2<<24 | E1_8<<16 | E1_16
+      tail  (..., S, T)     bf16     partial-group staging buffer
+
+* kernel-tile (feature-major — what the fused decode-attention kernel
+  tiles over, :func:`to_kernel_layout`; the resident serving layout):
+
+      codes (..., G*32, S) uint8     row f holds features 2f (low nibble)
+                                     and 2f+1 (high nibble) of each token
+      meta  (..., G, S)     uint32   one group record per 64 feature rows
+      tail  (..., T, S)     bf16
+
+  A (features, kv-tile) VMEM block of the kernel-tile buffers is exactly
+  the K-major operand of :func:`repro.core.hif4.dequantize_km`, so the
+  kernel expands 4.5-bit tiles to bf16 K/V columns inside VMEM with the
+  same bit helpers the fused matmul uses. The two layouts are pure bit
+  moves of each other (:func:`is_kernel_layout` discriminates by rank:
+  artifact codes carry one trailing 32-byte axis, kernel-tile codes do
+  not).
 
 Grouping is **per token along the flattened head axis** — never across
 tokens — so appending one decoded token re-quantizes nothing: each append
@@ -32,6 +50,7 @@ values.
 from __future__ import annotations
 
 import dataclasses
+import math
 
 import jax
 import jax.numpy as jnp
@@ -86,6 +105,85 @@ def is_packed_kv(cache) -> bool:
     return isinstance(cache, dict) and "codes" in cache
 
 
+def is_kernel_layout(pk: dict) -> bool:
+    """True when ``pk`` is in the feature-major kernel-tile layout.
+
+    Artifact codes carry one trailing 32-byte axis beyond meta's rank
+    ((..., S, G, 32) vs (..., S, G)); kernel-tile codes and meta have the
+    same rank ((..., G*32, S) and (..., G, S)). Rank, not shape values,
+    so the discriminator is static under jit/vmap/scan.
+    """
+    return pk["codes"].ndim == pk["meta"].ndim
+
+
+def to_kernel_layout(pk: dict) -> dict:
+    """Artifact leaves -> kernel-tile leaves (a pure bit move, idempotent).
+
+    codes (..., S, G, 32) -> (..., G*32, S); meta (..., S, G) ->
+    (..., G, S); tail (..., S, T) -> (..., T, S). The nibble pairing is
+    unchanged: artifact byte (g, b) holds features g*64 + 2b / g*64 + 2b+1,
+    which lands on kernel-tile row g*32 + b — exactly the K-major code row
+    convention of :func:`repro.core.hif4.expand_codes_km`.
+    """
+    if is_kernel_layout(pk):
+        return pk
+    codes = pk["codes"]
+    lead, s, g = codes.shape[:-3], codes.shape[-3], codes.shape[-2]
+    return {
+        "codes": jnp.swapaxes(codes.reshape(lead + (s, g * 32)), -1, -2),
+        "meta": jnp.swapaxes(pk["meta"], -1, -2),
+        "tail": jnp.swapaxes(pk["tail"], -1, -2),
+    }
+
+
+def seq_capacity(pk: dict) -> int:
+    """Token capacity S of a packed tensor, in either layout."""
+    if is_kernel_layout(pk):
+        return pk["meta"].shape[-1]
+    return pk["meta"].shape[-2]
+
+
+def slice_tokens(pk: dict, start, count: int) -> dict:
+    """Take ``count`` token slots beginning at ``start`` (same layout).
+
+    ``start`` may be a traced index (tile loaders inside a scan); shapes
+    stay static. Token slots are independent (per-token grouping), so
+    slicing commutes bitwise with quantize/dequantize.
+    """
+    def sl(a, axis):
+        return jax.lax.dynamic_slice_in_dim(a, start, count, axis=axis)
+
+    if is_kernel_layout(pk):
+        return {key: sl(a, a.ndim - 1) for key, a in pk.items()}
+    return {
+        "codes": sl(pk["codes"], pk["codes"].ndim - 3),
+        "meta": sl(pk["meta"], pk["meta"].ndim - 2),
+        "tail": sl(pk["tail"], pk["tail"].ndim - 2),
+    }
+
+
+def pad_tokens(pk: dict, capacity: int) -> dict:
+    """Zero-pad the token axis to ``capacity`` slots (either layout).
+
+    Zero padding of packed leaves is inert under the length mask — zero
+    codes/meta decode to values that masked positions never read.
+    """
+    def pad(a, axis):
+        if a.shape[axis] >= capacity:
+            return a
+        pads = [(0, 0)] * a.ndim
+        pads[axis] = (0, capacity - a.shape[axis])
+        return jnp.pad(a, pads)
+
+    if is_kernel_layout(pk):
+        return {key: pad(a, a.ndim - 1) for key, a in pk.items()}
+    return {
+        "codes": pad(pk["codes"], pk["codes"].ndim - 3),
+        "meta": pad(pk["meta"], pk["meta"].ndim - 2),
+        "tail": pad(pk["tail"], pk["tail"].ndim - 2),
+    }
+
+
 # ---------------------------------------------------------------------------
 # Quantize / dequantize (leading dims arbitrary: works per token, per
 # sequence, and on (L, B, S, ...) stacked whole caches alike)
@@ -116,19 +214,32 @@ def quantize_kv(kv: jnp.ndarray) -> dict:
 
 
 def dequantize_kv(pk: dict, n_kv_heads: int, d_head: int) -> jnp.ndarray:
-    """Packed leaves -> (..., Hkv, Dh) bf16 values (exact reconstruction
-    of the quantized grid; the tail returns bit-identical)."""
-    lead = pk["codes"].shape[:-2]
-    g = pk["codes"].shape[-2]
-    body = hif4.dequantize_packed(
-        hif4.HiF4Packed(pk["codes"], pk["meta"])
-    ).astype(jnp.bfloat16)
+    """Packed leaves (either layout) -> (..., S, Hkv, Dh) bf16 values.
+
+    ONE shared codes->values decode for the whole KV path: the leaves are
+    viewed K-major (a bit move for the artifact layout, free for the
+    kernel-tile layout) and expanded by
+    :func:`repro.core.hif4.dequantize_km` — the same bit helper the fused
+    kernels tile over, with the exact power-of-two scale construction and
+    E6M2 0xFF NaN parity tested once in ``tests/test_fused_matmul.py``.
+    Reconstruction is exact in bf16 (<= 6 significant bits); the tail
+    returns bit-identical.
+    """
+    pk = to_kernel_layout(pk)
+    codes, meta, tail = pk["codes"], pk["meta"], pk["tail"]
+    lead = codes.shape[:-2]
+    n = math.prod(lead)
+    s = codes.shape[-1]
+    body = jax.vmap(hif4.dequantize_km)(
+        codes.reshape((n,) + codes.shape[-2:]),
+        meta.reshape((n,) + meta.shape[-2:]),
+    )                                                     # (N, G*64, S) bf16
     flat = jnp.concatenate(
-        [body.reshape(lead + (g * hif4.GROUP_SIZE,)),
-         pk["tail"].astype(jnp.bfloat16)],
-        axis=-1,
-    )
-    return flat.reshape(lead + (n_kv_heads, d_head))
+        [body, tail.reshape((n,) + tail.shape[-2:]).astype(jnp.bfloat16)],
+        axis=-2,
+    )                                                     # (N, F, S)
+    flat = jnp.swapaxes(flat, -1, -2)                     # (N, S, F)
+    return flat.reshape(lead + (s, n_kv_heads, d_head))
 
 
 # ---------------------------------------------------------------------------
@@ -142,20 +253,40 @@ def append_token(pcache: dict, kv_new: jnp.ndarray, pos: jnp.ndarray) -> dict:
     ``pos`` is a scalar (whole batch in lockstep) or (B,) per-slot offsets
     (continuous batching: a freshly admitted request sits at its prompt
     length while its slot neighbours are deep into decode). Cache leaves
-    are (B, S, ...); only the G + tail bytes of the one token are written.
+    are (B, S, ...) artifact or (B, ..., S) kernel-tile; the token's bytes
+    are written in the cache's own layout (one column per token in kernel
+    order), so bulk packing + re-layout stays bitwise identical to
+    token-at-a-time appends. Only the G + tail bytes of the one token are
+    written.
     """
     new = quantize_kv(kv_new)
     per_slot = jnp.ndim(pos) == 1
+    if is_kernel_layout(pcache):
+        new = to_kernel_layout(new)            # (B, F/2, 1) / (B, G, 1) / ...
+        # lockstep (scalar) pos takes the same per-batch write as per-slot
+        # pos: one column per batch row. Writing the (B, ..., 1) slab in a
+        # single batched dynamic_update_slice was measured ~6x slower on
+        # CPU (XLA copies the whole buffer); the result is identical.
+        posv = pos if per_slot else jnp.full(
+            (new["meta"].shape[0],), pos, jnp.int32)
 
-    def write(full, one):
-        if per_slot:
+        def write(full, one):
             return jax.vmap(
                 lambda c, n, p: jax.lax.dynamic_update_slice(
-                    c, n.astype(c.dtype), (p,) + (0,) * (c.ndim - 1)
+                    c, n.astype(c.dtype), (0,) * (c.ndim - 1) + (p,)
                 )
-            )(full, one, pos)
-        idx = (0, pos) + (0,) * (full.ndim - 2)
-        return jax.lax.dynamic_update_slice(full, one.astype(full.dtype), idx)
+            )(full, one, posv)
+    else:
+
+        def write(full, one):
+            if per_slot:
+                return jax.vmap(
+                    lambda c, n, p: jax.lax.dynamic_update_slice(
+                        c, n.astype(c.dtype), (p,) + (0,) * (c.ndim - 1)
+                    )
+                )(full, one, pos)
+            idx = (0, pos) + (0,) * (full.ndim - 2)
+            return jax.lax.dynamic_update_slice(full, one.astype(full.dtype), idx)
 
     return {key: write(pcache[key], new[key]) for key in ("codes", "meta", "tail")}
 

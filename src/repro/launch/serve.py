@@ -62,6 +62,27 @@ def _print_kernel_dispatch(serving_params, ctx, args):
     print(line)
 
 
+def _print_attention_dispatch(cfg, ctx, capacity):
+    """One line for the packed-KV decode hot path: fused Pallas kernel vs
+    XLA twin, and the KV tile size either execution streams — next to the
+    fused-matmul and residency prints, the whole packed story at a glance."""
+    from repro.core.engine import attention_dispatch_info
+
+    a = cfg.attn
+    g, t = kvcache.split_features(a.n_kv_heads, a.d_head)
+    # shape probe only: dispatch reads ranks/shapes, never the bytes
+    probe = {
+        "codes": jax.ShapeDtypeStruct((1, g * 32, capacity), jnp.uint8),
+        "meta": jax.ShapeDtypeStruct((1, g, capacity), jnp.uint32),
+        "tail": jax.ShapeDtypeStruct((1, t, capacity), jnp.bfloat16),
+    }
+    info = attention_dispatch_info(ctx.quant, probe,
+                                   n_kv_heads=a.n_kv_heads, d_head=a.d_head)
+    print(f"packed attention: {'fused' if info['fused'] else 'twin'} "
+          f"[{info['execution']}] kv tile {info['block_kv']} of "
+          f"{capacity} slots")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -119,6 +140,8 @@ def main():
               f"= {total / 2**20:.2f} MiB"
               + (f"  [{bf16_tok / per_tok:.2f}x more slots per byte]"
                  if kv_fmt == "hif4" else ""))
+        if kv_fmt == "hif4":
+            _print_attention_dispatch(cfg, ctx, cap)
 
     prompts = {"tokens": jax.random.randint(
         jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab)}

@@ -288,25 +288,35 @@ def decode_attention(
 
 def decode_attention_packed(
     q: jax.Array,                    # (B, H, D) single query token
-    k_cache: dict,                   # packed leaves {codes, meta, tail}, seq
-    v_cache: dict,                   #   axis 1: codes (B, S, G, 32) etc.
+    k_cache: dict,                   # packed leaves {codes, meta, tail},
+    v_cache: dict,                   #   either kvcache layout
     length: jax.Array,               # (B,) number of valid cache entries
     n_kv_heads: int,
     d_head: int,
 ) -> jax.Array:
-    """One-token attention against an HiF4-packed KV cache.
+    """One-token attention against an HiF4-packed KV cache (the non-fused
+    models-level fallback; the serving hot path dispatches through
+    ``repro.core.engine.attention_decode``).
 
-    Dequantize-on-read: the layer's cache expands to bf16 transiently
-    inside the layer scan body — per-LAYER working set, while the
-    RESIDENT multi-layer cache stays at 4.5 bits/value. (Reconstruction
-    is exact in bf16, so this matches :func:`decode_attention` on a bf16
-    cache holding the same quantized values bitwise.)
+    Routed through the bounded per-tile loader recurrence
+    (:func:`flash_mha_vec_packed` with Sq=1): each KV chunk dequantizes to
+    bf16 transiently inside the scan body, so the bf16 working set is ONE
+    (B, k_chunk, Hkv, Dh) chunk — never the (B, S, Hkv, Dh) cache the
+    pre-fused version materialized in HBM on every decode step. The
+    RESIDENT multi-layer cache stays at 4.5 bits/value.
     """
     from repro.core import kvcache
+    from repro.kernels.fused_attention import select_kv_block
 
-    k = kvcache.dequantize_kv(k_cache, n_kv_heads, d_head)
-    v = kvcache.dequantize_kv(v_cache, n_kv_heads, d_head)
-    return decode_attention(q, k, v, length)
+    # the loader recurrence needs k_chunk | capacity; fit it (the default
+    # 1024 would assert on capacities > 1024 not divisible by 1024)
+    ck = select_kv_block(kvcache.seq_capacity(k_cache), 1024)
+    out = flash_mha_vec_packed(
+        q[:, None], k_cache, v_cache, n_kv_heads, d_head,
+        causal=False, kv_valid_len=length,
+        chunking=AttnChunking(q_chunk=1, k_chunk=ck),
+    )
+    return out[:, 0]
 
 
 def flash_mha_vec_packed(
@@ -326,26 +336,25 @@ def flash_mha_vec_packed(
     The vec_q recurrence (:func:`_flash_fwd_vec`, all q chunks advancing
     together through the KV scan) with the K/V chunk DEQUANTIZED PER TILE
     inside the scan body — the bf16 working set is one (B, ck, Hkv, Dh)
-    chunk, never the whole cache. This is the multi-token-per-step shape
-    (chunked prefill continuation, speculative verify) of
-    :func:`decode_attention_packed`. Forward-only: caches are never
-    differentiated.
+    chunk, never the whole cache. Accepts either packed layout (artifact
+    or kernel-tile; ``repro.core.kvcache.slice_tokens``). This is the
+    multi-token-per-step shape (chunked prefill continuation, speculative
+    verify) of :func:`decode_attention_packed`. Forward-only: caches are
+    never differentiated.
     """
     from repro.core import kvcache
 
     B, Sq, H, D = q.shape
     assert D == d_head, (q.shape, d_head)
-    Sk = k_cache["codes"].shape[1]
+    Sk = kvcache.seq_capacity(k_cache)
     nk = _chunks(Sk, chunking.k_chunk)
     ck = Sk // nk
-    kc = {key: a.reshape((B, nk, ck) + a.shape[2:]) for key, a in k_cache.items()}
-    vc = {key: a.reshape((B, nk, ck) + a.shape[2:]) for key, a in v_cache.items()}
 
     def loader(ki):
         kblk = kvcache.dequantize_kv(
-            {key: a[:, ki] for key, a in kc.items()}, n_kv_heads, D)
+            kvcache.slice_tokens(k_cache, ki * ck, ck), n_kv_heads, D)
         vblk = kvcache.dequantize_kv(
-            {key: a[:, ki] for key, a in vc.items()}, n_kv_heads, D)
+            kvcache.slice_tokens(v_cache, ki * ck, ck), n_kv_heads, D)
         return kblk, vblk
 
     out, _ = _flash_fwd_vec(q, None, None, causal, q_offset, chunking,

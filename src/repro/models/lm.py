@@ -556,16 +556,29 @@ def prefill(params: dict, batch: dict, cfg: ArchConfig, ctx: ModelCtx):
 
 
 def pad_cache(cache: dict, cfg: ArchConfig, capacity: int) -> dict:
-    """Grow prefill KV caches along the seq axis to ``capacity`` slots."""
+    """Grow prefill KV caches along the token axis to ``capacity`` slots.
+
+    Dense leaves (L, B, S, Hkv, Dh) pad axis 2; HiF4-packed tensors pad
+    their own layout's token axis (``repro.core.kvcache.pad_tokens`` —
+    the kernel-tile layout keeps tokens LAST). Zero padding is inert
+    under the length mask either way.
+    """
+    from repro.core import kvcache
+
+    def pad_dense(x):
+        s = x.shape[2]  # (L, B, S, Hkv, Dh)
+        if s >= capacity:
+            return x
+        pads = [(0, 0)] * x.ndim
+        pads[2] = (0, capacity - s)
+        return jnp.pad(x, pads)
+
     def grow(kv):
-        def pad(x):
-            s = x.shape[2]  # (L, B, S, Hkv, Dh)
-            if s >= capacity:
-                return x
-            pads = [(0, 0)] * x.ndim
-            pads[2] = (0, capacity - s)
-            return jnp.pad(x, pads)
-        return jax.tree_util.tree_map(pad, kv)
+        return {
+            name: (kvcache.pad_tokens(t, capacity) if kvcache.is_packed_kv(t)
+                   else pad_dense(t))
+            for name, t in kv.items()
+        }
 
     out = dict(cache)
     for key in ("kv", "self"):
@@ -578,10 +591,14 @@ def quantize_kv_cache(cache: dict, cfg: ArchConfig) -> dict:
     """Convert a prefill KV cache to the HiF4-packed layout (one-time).
 
     KV leaves (L, B, S, Hkv, Dh) become packed {codes, meta, tail} leaves
-    (4.5 bits/value + bf16 partial-group tail). Grouping is per token, so
-    this bulk conversion is bit-identical to appending the same tokens one
-    at a time — the invariant continuous-batching parity rests on. Only
-    the transformer families' self-attention cache ("kv") converts; call
+    (4.5 bits/value + bf16 partial-group tail) in the KERNEL-TILE layout
+    (token axis last) the fused decode-attention kernel streams — the
+    analogue of ``PackedW.to_kernel_layout`` in
+    ``prepare_params_for_serving``, applied once at cache build. Grouping
+    is per token and the re-layout is a pure bit move, so this bulk
+    conversion is bit-identical to appending the same tokens one at a
+    time — the invariant continuous-batching parity rests on. Only the
+    transformer families' self-attention cache ("kv") converts; call
     before :func:`pad_cache` (zero padding after packing stays inert).
     """
     from repro.core import kvcache
@@ -589,8 +606,8 @@ def quantize_kv_cache(cache: dict, cfg: ArchConfig) -> dict:
     assert cfg.family in ("dense", "vlm", "moe"), cfg.family
     out = dict(cache)
     out["kv"] = {
-        "k": kvcache.quantize_kv(cache["kv"]["k"]),
-        "v": kvcache.quantize_kv(cache["kv"]["v"]),
+        "k": kvcache.to_kernel_layout(kvcache.quantize_kv(cache["kv"]["k"])),
+        "v": kvcache.to_kernel_layout(kvcache.quantize_kv(cache["kv"]["v"])),
     }
     return out
 

@@ -18,11 +18,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.core import engine as qengine
 from repro.core import kvcache
 from repro.models.attention import (
     AttnChunking,
     decode_attention,
-    decode_attention_packed,
     flash_attention,
 )
 from repro.models.common import ModelCtx, apply_rope, dense, layer_norm, rms_norm
@@ -209,9 +209,14 @@ def attn_decode(
         new_cache = {"k": k, "v": v}
         length = jnp.full((B,), pos + 1, jnp.int32)
     if kvcache.is_packed_kv(new_cache["k"]):
-        o = decode_attention_packed(q[:, 0], new_cache["k"], new_cache["v"],
-                                    length, cfg.attn.n_kv_heads,
-                                    cfg.attn.d_head)
+        # engine-dispatched packed decode: the fused Pallas kernel on TPU
+        # (impl packed/pallas, kernel-tile cache), its bit-exact XLA twin
+        # everywhere else — either way the bf16 working set is one KV tile
+        # (docs/EXECUTION.md). The bf16 branch below is untouched.
+        ectx = qengine.EngineCtx(quant=ctx.quant, shard=ctx.shard)
+        o = qengine.attention_decode(q[:, 0], new_cache["k"], new_cache["v"],
+                                     length, cfg.attn.n_kv_heads,
+                                     cfg.attn.d_head, ectx)
     else:
         o = decode_attention(q[:, 0], new_cache["k"], new_cache["v"], length)
     y = _out_proj(p, o[:, None], cfg, ctx)             # (B, 1, d)
@@ -224,20 +229,23 @@ def attn_cache_specs(cfg: ArchConfig, batch: int, seq: int,
     ("kv_seq" context parallelism) — kv_heads rarely divide the model axis
     (8 kv heads vs 16-way TP) whereas 32k..512k sequences always do.
 
-    kv_format="hif4" yields the packed layout of repro.core.kvcache
-    (codes/meta at 4.5 bits/value + a bf16 partial-group tail); the seq
-    axis keeps the same "kv_seq" sharding — groups never cross tokens, so
-    context parallelism slices packed leaves exactly like dense ones.
+    kv_format="hif4" yields the packed KERNEL-TILE layout of
+    repro.core.kvcache (codes/meta at 4.5 bits/value + a bf16
+    partial-group tail, feature-major with the token axis last — the
+    layout the fused decode-attention kernel tiles directly,
+    docs/FORMATS.md); the seq axis keeps the same "kv_seq" sharding —
+    groups never cross tokens, so context parallelism slices packed
+    leaves exactly like dense ones.
     """
     a = cfg.attn
     if kv_format == "hif4":
         g, t = kvcache.split_features(a.n_kv_heads, a.d_head)
         packed = {
-            "codes": PSpec((batch, seq, g, 32), ("batch", "kv_seq", None, None),
+            "codes": PSpec((batch, g * 32, seq), ("batch", None, "kv_seq"),
                            dtype=jnp.uint8, init="zeros"),
-            "meta": PSpec((batch, seq, g), ("batch", "kv_seq", None),
+            "meta": PSpec((batch, g, seq), ("batch", None, "kv_seq"),
                           dtype=jnp.uint32, init="zeros"),
-            "tail": PSpec((batch, seq, t), ("batch", "kv_seq", None),
+            "tail": PSpec((batch, t, seq), ("batch", None, "kv_seq"),
                           init="zeros"),
         }
         return {"k": dict(packed), "v": dict(packed)}

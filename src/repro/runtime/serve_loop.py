@@ -135,7 +135,8 @@ def kv_cache_bytes(cache: dict) -> tuple[int, int]:
         for tensor in (kv["k"], kv["v"]):
             if kvcache.is_packed_kv(tensor):
                 total += kvcache.packed_kv_nbytes(tensor)
-                _, b, s = tensor["codes"].shape[:3]
+                b = tensor["meta"].shape[1]          # (L, B, ...) stacked
+                s = kvcache.seq_capacity(tensor)
             else:
                 total += int(tensor.nbytes)
                 _, b, s = tensor.shape[:3]

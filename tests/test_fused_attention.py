@@ -1,0 +1,328 @@
+"""Fused HiF4 flash decode-attention: bit-exactness and dispatch.
+
+The serving claim (docs/EXECUTION.md): streaming the 4.5-bit KV cache
+through the kernel changes WHERE the bits expand, never what is computed.
+The normalized online-softmax recurrence degenerates to the flat masked
+softmax of ``decode_attention`` at a single KV tile, so there — across
+lengths that exercise the tile mask (S=1, 63, 64, 65, capacity-1), B=1 vs
+full scheduler slots, GQA head ratios, head-spanning 64-groups, and the
+partial-group staging tail — the Pallas kernel (interpret mode, runs in
+tier-1 CI on CPU), its straight-line XLA twin, and ``decode_attention`` on
+the materialized bf16 cache must be BITWISE identical. Multi-tile runs
+keep kernel == twin bitwise (same recurrence, same tiling) and are
+float-close to the flat path (f32 sum reassociation only) — mirroring the
+single-K-step anchor of ``tests/test_fused_matmul.py``. NaN metadata
+(E6M2 0xFF) must propagate identically everywhere.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine, kvcache
+from repro.core.qlinear import QuantConfig
+from repro.kernels.fused_attention import (
+    fused_decode_attention,
+    fused_decode_attention_xla,
+    heads_per_block,
+    kernel_compatible,
+    select_kv_block,
+)
+from repro.models.attention import decode_attention, decode_attention_packed
+
+
+def _setup(B, S, Hkv, rep, D, seed=0, kernel_layout=True):
+    """Packed K/V caches + the materialized bf16 cache of the same bits."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = (jax.random.normal(ks[0], (B, Hkv * rep, D)) * 0.3).astype(jnp.bfloat16)
+    k = (jax.random.normal(ks[1], (B, S, Hkv, D)) * 0.3).astype(jnp.bfloat16)
+    v = (jax.random.normal(ks[2], (B, S, Hkv, D)) * 0.3).astype(jnp.bfloat16)
+    pk, pv = kvcache.quantize_kv(k), kvcache.quantize_kv(v)
+    if kernel_layout:
+        pk, pv = kvcache.to_kernel_layout(pk), kvcache.to_kernel_layout(pv)
+    kd = kvcache.dequantize_kv(pk, Hkv, D)
+    vd = kvcache.dequantize_kv(pv, Hkv, D)
+    return q, pk, pv, kd, vd
+
+
+# capacity 128; lengths exercise the mask at tile edges and the last slot
+CAP = 128
+LENGTHS = [1, 63, 64, 65, CAP - 1]
+
+
+# ---------------------------------------------------------------------------
+# Bit-exactness: kernel == twin == materialized flat decode (single tile)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,Hkv,rep,D", [
+    (1, 2, 1, 64),      # B=1 solo serving, MHA
+    (1, 2, 4, 64),      # GQA 4:1
+    (4, 2, 2, 64),      # full scheduler slots
+    (4, 4, 1, 32),      # the benchmark geometry: a 64-group spans 2 heads
+    (2, 4, 2, 32),      # head-spanning groups + GQA
+])
+def test_single_tile_bit_exact(B, Hkv, rep, D):
+    """One KV tile covering the cache: the recurrence IS the flat masked
+    softmax — kernel, twin, and materialized-bf16 decode agree bitwise."""
+    q, pk, pv, kd, vd = _setup(B, CAP, Hkv, rep, D)
+    length = jnp.asarray((LENGTHS * B)[:B], jnp.int32)
+    flat = decode_attention(q, kd, vd, length)
+    twin = fused_decode_attention_xla(q, pk, pv, length, Hkv, D, block_kv=CAP)
+    kern = fused_decode_attention(q, pk, pv, length, n_kv_heads=Hkv,
+                                  d_head=D, block_kv=CAP, interpret=True)
+    np.testing.assert_array_equal(np.asarray(twin), np.asarray(flat))
+    np.testing.assert_array_equal(np.asarray(kern), np.asarray(flat))
+
+
+@pytest.mark.parametrize("length", LENGTHS)
+def test_lengths_exercise_tile_mask_bit_exact(length):
+    """Every boundary length (S=1, 63, 64, 65, capacity-1) on the
+    single-tile anchor, B=1."""
+    q, pk, pv, kd, vd = _setup(1, CAP, 2, 2, 64, seed=length)
+    lv = jnp.asarray([length], jnp.int32)
+    flat = decode_attention(q, kd, vd, lv)
+    twin = fused_decode_attention_xla(q, pk, pv, lv, 2, 64, block_kv=CAP)
+    kern = fused_decode_attention(q, pk, pv, lv, n_kv_heads=2, d_head=64,
+                                  block_kv=CAP, interpret=True)
+    np.testing.assert_array_equal(np.asarray(twin), np.asarray(flat))
+    np.testing.assert_array_equal(np.asarray(kern), np.asarray(flat))
+
+
+@pytest.mark.parametrize("block", [32, 64])
+def test_multi_tile_kernel_equals_twin(block):
+    """Tiled KV (the bounded-working-set regime): kernel and twin run the
+    identical recurrence — bitwise — and reassociate the f32 sums vs the
+    flat path by at most bf16-probability rounding."""
+    B, Hkv, rep, D = 4, 2, 2, 64
+    q, pk, pv, kd, vd = _setup(B, CAP, Hkv, rep, D, seed=7)
+    length = jnp.asarray(LENGTHS[1:], jnp.int32)
+    twin = fused_decode_attention_xla(q, pk, pv, length, Hkv, D,
+                                      block_kv=block)
+    kern = fused_decode_attention(q, pk, pv, length, n_kv_heads=Hkv,
+                                  d_head=D, block_kv=block, interpret=True)
+    np.testing.assert_array_equal(np.asarray(kern), np.asarray(twin))
+    flat = decode_attention(q, kd, vd, length)
+    np.testing.assert_allclose(
+        np.asarray(twin, jnp.float32), np.asarray(flat, jnp.float32),
+        rtol=0.01, atol=0.005)
+
+
+def test_staging_tail_twin_bit_exact():
+    """F % 64 != 0 (d_head=24, Hkv=3 -> G=1, T=8): the kernel cannot tile
+    the bf16 staging tail, but the twin must still be bitwise identical to
+    the materialized flat decode — tail features return bit-identical."""
+    B, Hkv, rep, D = 2, 3, 2, 24
+    q, pk, pv, kd, vd = _setup(B, 64, Hkv, rep, D, seed=3)
+    assert pk["tail"].shape[-2] == 8                 # kernel layout (B, T, S)
+    assert not kernel_compatible(pk, Hkv, D)
+    length = jnp.asarray([64, 33], jnp.int32)
+    flat = decode_attention(q, kd, vd, length)
+    twin = fused_decode_attention_xla(q, pk, pv, length, Hkv, D, block_kv=64)
+    np.testing.assert_array_equal(np.asarray(twin), np.asarray(flat))
+
+
+def test_artifact_layout_twin_matches_kernel_layout():
+    """The twin serves either cache layout; the layouts carry the same
+    bits, so the outputs are bitwise identical."""
+    B, Hkv, rep, D = 2, 2, 2, 64
+    q, pk, pv, _, _ = _setup(B, 64, Hkv, rep, D, kernel_layout=False)
+    assert not kvcache.is_kernel_layout(pk)
+    length = jnp.asarray([64, 17], jnp.int32)
+    art = fused_decode_attention_xla(q, pk, pv, length, Hkv, D, block_kv=32)
+    kl = fused_decode_attention_xla(
+        q, kvcache.to_kernel_layout(pk), kvcache.to_kernel_layout(pv),
+        length, Hkv, D, block_kv=32)
+    np.testing.assert_array_equal(np.asarray(art), np.asarray(kl))
+
+
+def test_nan_codes_propagate_on_every_path():
+    """E6M2 0xFF metadata (never produced, but corrupted bits must decode
+    identically everywhere) poisons the poisoned head's output to NaN on
+    kernel, twin, and the materialized flat path alike — and leaves other
+    batch rows untouched."""
+    B, Hkv, rep, D = 2, 2, 2, 64
+    q, pk, pv, _, _ = _setup(B, 64, Hkv, rep, D, seed=11)
+    # poison one valid token's group metadata in K, batch row 0, head 0
+    meta = pk["meta"]                                # (B, G, S), G = Hkv*D/64
+    pk = dict(pk, meta=meta.at[0, 0, 3].set(jnp.uint32(0xFF) << 24))
+    kd = kvcache.dequantize_kv(pk, Hkv, D)
+    vd = kvcache.dequantize_kv(pv, Hkv, D)
+    length = jnp.full((B,), 64, jnp.int32)
+    flat = decode_attention(q, kd, vd, length)
+    twin = fused_decode_attention_xla(q, pk, pv, length, Hkv, D, block_kv=64)
+    kern = fused_decode_attention(q, pk, pv, length, n_kv_heads=Hkv,
+                                  d_head=D, block_kv=64, interpret=True)
+    flat_np = np.asarray(flat, jnp.float32)
+    assert np.isnan(flat_np[0, :rep]).all()          # head 0 of row 0 poisoned
+    assert np.isfinite(flat_np[1]).all()             # row 1 untouched
+    # compare in f32: numpy's NaN-position equality does not engage for the
+    # ml_dtypes bfloat16 dtype (NaN == NaN would count as a mismatch)
+    np.testing.assert_array_equal(np.asarray(twin, jnp.float32), flat_np)
+    np.testing.assert_array_equal(np.asarray(kern, jnp.float32), flat_np)
+    # ...and masked-out NaN tokens must NOT poison anything
+    pk_masked_len = jnp.asarray([3, 64], jnp.int32)  # token 3 now invalid
+    out = fused_decode_attention_xla(q, pk, pv, pk_masked_len, Hkv, D,
+                                     block_kv=64)
+    assert np.isfinite(np.asarray(out, jnp.float32)).all()
+
+
+def test_nonfused_fallback_matches_twin_tolerance():
+    """decode_attention_packed (the models-level bounded fallback, vec-q
+    recurrence) stays float-close to the twin: same quantized values,
+    different online-softmax association."""
+    B, Hkv, rep, D = 2, 2, 2, 64
+    q, pk, pv, _, _ = _setup(B, 64, Hkv, rep, D, seed=5)
+    length = jnp.asarray([64, 20], jnp.int32)
+    twin = fused_decode_attention_xla(q, pk, pv, length, Hkv, D)
+    fb = decode_attention_packed(q, pk, pv, length, Hkv, D)
+    np.testing.assert_allclose(np.asarray(fb, jnp.float32),
+                               np.asarray(twin, jnp.float32),
+                               rtol=0.01, atol=0.005)
+
+
+# ---------------------------------------------------------------------------
+# Engine dispatch: each (impl x backend x kv_format) cell
+# ---------------------------------------------------------------------------
+
+
+def test_attention_dispatch_matrix():
+    """Each (impl x backend x cache geometry) cell lands on the intended
+    path: the Pallas kernel ONLY for impl packed/pallas on a
+    kernel-tileable cache on TPU; the XLA twin everywhere else."""
+    _, pk, _, _, _ = _setup(1, 64, 2, 2, 64)
+    _, pk_tail, _, _, _ = _setup(1, 64, 3, 2, 24)    # staging tail
+    cases = [
+        # (impl, cache, interpret(off-TPU), expect_fused)
+        ("packed", pk, False, True),
+        ("pallas", pk, False, True),
+        ("packed", pk, True, False),                 # off-TPU -> twin
+        ("pallas", pk, True, False),
+        ("qdq", pk, False, False),                   # qdq impl -> twin
+        ("packed", pk_tail, False, False),           # staging tail -> twin
+    ]
+    for impl, cache, interpret, want in cases:
+        hkv, dh = (2, 64) if cache is pk else (3, 24)
+        info = engine.attention_dispatch_info(
+            QuantConfig(fmt="hif4", impl=impl), cache,
+            n_kv_heads=hkv, d_head=dh, interpret=interpret)
+        assert info["fused"] == want, (impl, interpret, info)
+        assert info["block_kv"] == select_kv_block(64)
+    # artifact layout is twin-only even on TPU
+    _, art, _, _, _ = _setup(1, 64, 2, 2, 64, kernel_layout=False)
+    info = engine.attention_dispatch_info(
+        QuantConfig(fmt="hif4", impl="packed"), art,
+        n_kv_heads=2, d_head=64, interpret=False)
+    assert not info["fused"] and "artifact layout" in info["execution"]
+    # ...and each twin reason names its actual cause (the launcher print)
+    info = engine.attention_dispatch_info(
+        QuantConfig(fmt="hif4", impl="qdq"), pk,
+        n_kv_heads=2, d_head=64, interpret=False)
+    assert "impl=qdq" in info["execution"]
+    info = engine.attention_dispatch_info(
+        QuantConfig(fmt="hif4", impl="packed"), pk_tail,
+        n_kv_heads=3, d_head=24, interpret=False)
+    assert "staging tail" in info["execution"]
+
+
+def test_engine_attention_decode_runs_twin_off_tpu():
+    """engine.attention_decode (what attn_decode dispatches to) must equal
+    the twin bitwise off-TPU, for every impl."""
+    B, Hkv, rep, D = 2, 2, 2, 64
+    q, pk, pv, _, _ = _setup(B, 64, Hkv, rep, D, seed=9)
+    length = jnp.asarray([64, 12], jnp.int32)
+    want = fused_decode_attention_xla(q, pk, pv, length, Hkv, D)
+    for impl in ("qdq", "packed", "pallas"):
+        got = engine.attention_decode(
+            q, pk, pv, length, Hkv, D,
+            engine.EngineCtx(quant=QuantConfig(fmt="hif4", impl=impl)))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_attn_decode_bf16_path_untouched(monkeypatch):
+    """bf16 caches never reach the packed dispatch: attn_decode keeps the
+    dense decode_attention path byte-for-byte; packed caches always route
+    through engine.attention_decode."""
+    from repro.configs import get_arch
+    from repro.models import lm, transformer as tf
+    from repro.models.common import ModelCtx
+
+    cfg = get_arch("qwen1.5-0.5b").reduced()
+    ctx = ModelCtx(quant=QuantConfig(fmt="hif4", impl="packed"), remat=False,
+                   attn_q_chunk=32, attn_k_chunk=32)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab)
+    _, cache = lm.prefill(params, {"tokens": tokens}, cfg, ctx)
+    cache_bf = lm.pad_cache(cache, cfg, 12)
+    cache_pk = lm.pad_cache(lm.quantize_kv_cache(cache, cfg), cfg, 12)
+
+    calls = []
+    real = engine.attention_decode
+
+    def spy(*a, **kw):
+        calls.append(1)
+        return real(*a, **kw)
+
+    monkeypatch.setattr(tf.qengine, "attention_decode", spy)
+    tok = jnp.zeros((2,), jnp.int32)
+    lm.decode_step(params, tok, {"kv": cache_bf["kv"], "pos": cache_bf["pos"]},
+                   cfg, ctx)
+    assert not calls                                 # bf16: never dispatched
+    lm.decode_step(params, tok, {"kv": cache_pk["kv"], "pos": cache_pk["pos"]},
+                   cfg, ctx)
+    assert len(calls) == 1                           # packed: dispatched (the
+    #                                                  layer loop is one scan
+    #                                                  trace, so one call)
+
+
+# ---------------------------------------------------------------------------
+# Tiling / geometry helpers
+# ---------------------------------------------------------------------------
+
+
+def test_select_kv_block_regimes():
+    assert select_kv_block(64) == 64                 # whole cache, one tile
+    assert select_kv_block(256) == 256
+    assert select_kv_block(1024) == 256              # stream 256-slot tiles
+    assert select_kv_block(96) == 96
+    for s in (24, 63, 100, 640, 509, 1018):
+        assert s % select_kv_block(s) == 0           # tiles hold whole slots
+    # awkward capacities must not degrade to 1-token tile storms: a prime
+    # capacity takes one whole-cache tile, 2x a prime takes two tiles
+    assert select_kv_block(509) == 509
+    assert select_kv_block(1018) == 509
+    assert select_kv_block(514) == 257               # 2 x 257: 2 is degenerate
+
+
+def test_awkward_capacity_all_paths():
+    """A prime cache capacity (no divisor near the tile target) must still
+    serve on every path — twin, kernel, and the models-level fallback —
+    and stay bitwise vs the flat path (whole-cache single tile)."""
+    B, S, Hkv, rep, D = 1, 131, 2, 2, 64             # 131 prime > tail of 128
+    q, pk, pv, kd, vd = _setup(B, S, Hkv, rep, D, seed=13)
+    length = jnp.asarray([S - 1], jnp.int32)
+    flat = decode_attention(q, kd, vd, length)
+    twin = fused_decode_attention_xla(q, pk, pv, length, Hkv, D)
+    kern = fused_decode_attention(q, pk, pv, length, n_kv_heads=Hkv,
+                                  d_head=D, interpret=True)
+    fb = decode_attention_packed(q, pk, pv, length, Hkv, D)
+    np.testing.assert_array_equal(np.asarray(twin), np.asarray(flat))
+    np.testing.assert_array_equal(np.asarray(kern), np.asarray(flat))
+    np.testing.assert_allclose(np.asarray(fb, jnp.float32),
+                               np.asarray(flat, jnp.float32),
+                               rtol=0.01, atol=0.005)
+
+
+def test_heads_per_block_alignment():
+    assert heads_per_block(64) == 1
+    assert heads_per_block(128) == 1
+    assert heads_per_block(32) == 2                  # a 64-group spans 2 heads
+    assert heads_per_block(16) == 4
+    # kernel_compatible needs head blocks to divide the head count — which
+    # a tail-free F implies; an odd head count at d_head=32 always carries
+    # a staging tail, so it is twin-routed either way
+    _, pk, _, _, _ = _setup(1, 64, 4, 1, 32)
+    assert kernel_compatible(pk, 4, 32)
+    _, pk3, _, _, _ = _setup(1, 64, 3, 1, 32)        # F = 96: G=1, T=32
+    assert pk3["tail"].shape[-2] == 32
+    assert not kernel_compatible(pk3, 3, 32)

@@ -107,3 +107,65 @@ def test_config_validates():
     assert not kvcache.KVCacheConfig().packed
     with pytest.raises(AssertionError):
         kvcache.KVCacheConfig("int8")
+
+
+# ---------------------------------------------------------------------------
+# Kernel-tile layout (what the fused decode-attention kernel streams)
+# ---------------------------------------------------------------------------
+
+
+def test_kernel_layout_same_bits_same_values():
+    """The feature-major re-layout is a pure bit move: same byte count,
+    same dequantized values, idempotent, rank-discriminated."""
+    kv = _kv((2, 5, 4, 32), seed=4)                # F = 128: G=2, T=0
+    pk = kvcache.quantize_kv(kv)
+    kl = kvcache.to_kernel_layout(pk)
+    assert not kvcache.is_kernel_layout(pk) and kvcache.is_kernel_layout(kl)
+    assert kl["codes"].shape == (2, 64, 5) and kl["meta"].shape == (2, 2, 5)
+    assert kvcache.to_kernel_layout(kl) is kl      # idempotent
+    assert kvcache.packed_kv_nbytes(kl) == kvcache.packed_kv_nbytes(pk)
+    assert kvcache.seq_capacity(kl) == kvcache.seq_capacity(pk) == 5
+    np.testing.assert_array_equal(
+        np.asarray(kvcache.dequantize_kv(kl, 4, 32), jnp.float32),
+        np.asarray(kvcache.dequantize_kv(pk, 4, 32), jnp.float32))
+
+
+def test_kernel_layout_append_matches_bulk():
+    """Bulk pack + re-layout == token-at-a-time appends INTO the kernel
+    layout, bitwise — the invariant that lets the serving cache be resident
+    in kernel order while continuous batching appends per slot."""
+    kv = _kv((2, 6, 4, 32), seed=5)
+    bulk = kvcache.to_kernel_layout(kvcache.quantize_kv(kv))
+    cache = {k: jnp.zeros(v.shape, v.dtype) for k, v in bulk.items()}
+    for s in range(6):
+        cache = kvcache.append_token(cache, kv[:, s : s + 1], jnp.asarray(s))
+    for key in bulk:
+        np.testing.assert_array_equal(np.asarray(cache[key]),
+                                      np.asarray(bulk[key]))
+    # per-slot positions land in kernel order too
+    cache2 = {k: jnp.zeros(v.shape, v.dtype) for k, v in bulk.items()}
+    for s in range(6):
+        cache2 = kvcache.append_token(cache2, kv[:, s : s + 1],
+                                      jnp.full((2,), s, jnp.int32))
+    for key in bulk:
+        np.testing.assert_array_equal(np.asarray(cache2[key]),
+                                      np.asarray(bulk[key]))
+
+
+def test_slice_and_pad_tokens_both_layouts():
+    """slice_tokens/pad_tokens address the token axis of either layout;
+    slicing commutes with dequantize (per-token grouping), padding is
+    shape-only."""
+    kv = _kv((2, 8, 3, 24), seed=6)                # F = 72: G=1, T=8
+    for pk in (kvcache.quantize_kv(kv),
+               kvcache.to_kernel_layout(kvcache.quantize_kv(kv))):
+        sl = kvcache.slice_tokens(pk, 2, 4)
+        assert kvcache.seq_capacity(sl) == 4
+        np.testing.assert_array_equal(
+            np.asarray(kvcache.dequantize_kv(sl, 3, 24), jnp.float32),
+            np.asarray(kvcache.dequantize_kv(pk, 3, 24)[:, 2:6], jnp.float32))
+        pad = kvcache.pad_tokens(pk, 12)
+        assert kvcache.seq_capacity(pad) == 12
+        np.testing.assert_array_equal(
+            np.asarray(kvcache.dequantize_kv(pad, 3, 24)[:, :8], jnp.float32),
+            np.asarray(kvcache.dequantize_kv(pk, 3, 24), jnp.float32))
