@@ -65,6 +65,31 @@ def check_serve_gates():
           f"{shown['packed_over_qdq_decode']}, hif4/bf16 KV decode = "
           f"{shown['hif4_over_bf16_kv_decode']}")
 
+    # mixed-policy rows (QuantPolicy presets): required whenever the sweep
+    # exercised the packed impl — a benchmark refactor that silently drops
+    # the per-site-policy comparison must fail here, not vanish
+    assert "policy_rows" in record, (
+        "BENCH_serve.json lacks `policy_rows` — serve_throughput must "
+        "record the mixed-policy (uniform:hif4 vs paper-iv) comparison")
+    rows = record["policy_rows"]
+    if rows is None:
+        assert "packed" not in impls, (
+            "BENCH_serve.json has `policy_rows` = null although the sweep "
+            "covered the packed impl — the policy comparison was skipped, "
+            "not inapplicable")
+        print("[policy rows] n/a (narrowed sweep)")
+    else:
+        for required in ("uniform:hif4", "paper-iv"):
+            assert required in rows, (
+                f"policy_rows lacks the `{required}` row — the mixed-policy "
+                f"comparison must cover it")
+            assert rows[required].get("decode_step_ms"), (
+                f"policy_rows[{required!r}] has no decode_step_ms")
+        print("[policy rows] " + ", ".join(
+            f"{name}: {r['decode_step_ms']} ms/step, "
+            f"{r['packed_sites']}/{r['n_sites']} packed"
+            for name, r in rows.items()))
+
 
 def main():
     ap = argparse.ArgumentParser()

@@ -18,6 +18,10 @@ bytes/token, and scan decode must amortize dispatch):
   * KV-cache bytes/token (measured from the real decode cache pytree) and
     the max-slot count a nominal HBM budget buys at full-arch scale —
     the serving-capacity term the packed cache exists to grow
+  * mixed-policy rows (repro.core.policy presets uniform:hif4 / paper-iv /
+    sensitive-fallback served through their resolved per-site plans):
+    decode-step latency + weight residency per policy, recorded as
+    ``policy_rows`` and required by benchmarks/run.py
 
 Emits ``BENCH_serve.json`` next to this file and prints a table.
 
@@ -34,7 +38,8 @@ import jax.numpy as jnp
 
 from repro.configs import get_arch
 from repro.core import kvcache
-from repro.core.qlinear import PACKABLE_KEYS, QuantConfig
+from repro.core.policy import PACKABLE_WEIGHT_KEYS, get_policy
+from repro.core.qlinear import QuantConfig
 from repro.models import lm
 from repro.models.common import ModelCtx
 from repro.runtime.serve_loop import (
@@ -63,7 +68,7 @@ def _dense_block_bytes(params) -> tuple[int, int]:
         if isinstance(node, dict):
             for k, v in node.items():
                 walk(v, k)
-        elif key in PACKABLE_KEYS and hasattr(node, "nbytes"):
+        elif key in PACKABLE_WEIGHT_KEYS and hasattr(node, "nbytes"):
             total += int(node.nbytes)
             values += int(node.size)
 
@@ -153,6 +158,88 @@ def kv_decode_step_comparison(cfg, serving_params, ctx, *, batch, prompt_len,
             best[kvf] = min(best[kvf], (time.perf_counter() - t0) / new_tokens)
             states[kvf] = (token, cache, done)
     return {kvf: round(t * 1e3, 4) for kvf, t in best.items()}
+
+
+POLICY_ROW_NAMES = ("uniform:hif4", "paper-iv", "sensitive-fallback")
+
+
+def policy_comparison(cfg, params, *, batch, prompt_len, new_tokens,
+                      repeats=7):
+    """Mixed-policy serving rows: decode-step latency + weight residency
+    per policy preset (uniform:hif4 vs the paper's §IV placement vs the
+    mixed hif4/bf16 sensitive-site fallback), each served through its own
+    resolved plan on the packed path. Latencies are measured INTERLEAVED
+    on the jitted decode scan, same methodology (and for the same noise
+    reasons) as ``kv_decode_step_comparison``.
+
+    NOTE the uniform:hif4 and paper-iv rows resolve to the SAME per-site
+    configs by design (the legacy global config already implemented the
+    paper's §IV placement) — asserted below, so their latency ratio is a
+    same-program identity check (expected ~1.0x), not a mixed-policy
+    result; sensitive-fallback is the genuinely mixed row.
+    """
+    from repro.runtime import serve_loop
+
+    prompts = {"tokens": jax.random.randint(
+        jax.random.PRNGKey(1), (batch, prompt_len), 0, cfg.vocab)}
+    uniform_plan = lm.quant_plan(cfg, get_policy("uniform:hif4",
+                                                 impl="packed"))
+    paper_plan = lm.quant_plan(cfg, get_policy("paper-iv", impl="packed"))
+    assert ([(s.path, s.cfg, s.packed) for s in uniform_plan.sites]
+            == [(s.path, s.cfg, s.packed) for s in paper_plan.sites]), (
+        "uniform:hif4 and paper-iv must resolve identically — the shim IS "
+        "the paper's placement; a drift here means a preset changed")
+
+    # whether the mixed preset actually un-packs sites on THIS arch: its
+    # fallback patterns target attn/mlp output projections, which mamba2
+    # has none of (and hybrid packs nothing at all) — the structural
+    # expectation the main() assertions check against
+    sens_plan = lm.quant_plan(cfg, get_policy("sensitive-fallback",
+                                              impl="packed"))
+    mixed_differs = sens_plan.packed_paths != uniform_plan.packed_paths
+
+    rows, states, steps, serving = {}, {}, {}, {}
+    for name in POLICY_ROW_NAMES:
+        plan = lm.quant_plan(cfg, get_policy(name, impl="packed"))
+        ctx = ModelCtx(quant=plan.base, plan=plan, remat=False,
+                       attn_q_chunk=32, attn_k_chunk=32)
+        sp = prepare_params_for_serving(params, cfg, plan)
+        packed_b, packed_v = packed_weight_bytes(sp)
+        dense_b, dense_v = _dense_block_bytes(sp)   # PackedW leaves skipped
+        sctx = serve_loop.serving_ctx(ctx)
+        prefill = serve_loop._jit_prefill(cfg, sctx)
+        step = serve_loop._jit_decode_scan(cfg, sctx, new_tokens, None)
+        logits, cache = prefill(sp, prompts)
+        cache = lm.pad_cache(cache, cfg, prompt_len + new_tokens)
+        token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        done = jnp.zeros(token.shape, bool)
+        toks, token, cache, done = step(sp, token, cache, done)
+        jax.block_until_ready(toks)                 # compile + warmup
+        serving[name], steps[name] = sp, step
+        states[name] = (token, cache, done)
+        total_b, total_v = packed_b + dense_b, packed_v + dense_v
+        rows[name] = {
+            "packed_sites": len(plan.packed_paths),
+            "n_sites": len(plan.sites),
+            "weight_bytes": total_b,
+            "packed_weight_bytes": packed_b,
+            "bytes_per_value": round(total_b / max(total_v, 1), 4),
+        }
+
+    best = {name: float("inf") for name in rows}
+    for _ in range(repeats):
+        for name in rows:
+            token, cache, done = states[name]
+            t0 = time.perf_counter()
+            toks, token, cache, done = steps[name](
+                serving[name], token, cache, done)
+            jax.block_until_ready(toks)
+            best[name] = min(best[name],
+                             (time.perf_counter() - t0) / new_tokens)
+            states[name] = (token, cache, done)
+    for name in rows:
+        rows[name]["decode_step_ms"] = round(best[name] * 1e3, 4)
+    return rows, mixed_differs
 
 
 def bench_impl(cfg, params, ctx, *, batch, prompt_len, new_tokens,
@@ -297,6 +384,26 @@ def main(argv=None):
         print(f"decode step ms by kv_format: {step_by_kv}  "
               f"(hif4/bf16 decode rate = {hif4_over_bf16}x)")
 
+    # Mixed-policy rows (per-site QuantPolicy presets on the packed path):
+    # decode-step latency + residency per preset. Only meaningful when the
+    # sweep exercises the packed impl; benchmarks/run.py fails loudly if
+    # the rows are absent while packed was swept.
+    policy_rows = None
+    paper_iv_over_uniform = None
+    mixed_differs = False
+    if "packed" in args.impl:
+        policy_rows, mixed_differs = policy_comparison(
+            cfg, params, batch=args.batch, prompt_len=args.prompt_len,
+            new_tokens=args.new_tokens)
+        paper_iv_over_uniform = round(
+            policy_rows["uniform:hif4"]["decode_step_ms"]
+            / policy_rows["paper-iv"]["decode_step_ms"], 3)
+        for name, r in policy_rows.items():
+            print(f"policy {name:20} decode {r['decode_step_ms']:8.3f} ms/step"
+                  f"   weights {r['weight_bytes']/2**20:6.2f} MiB "
+                  f"({r['bytes_per_value']:.4f} B/value, "
+                  f"{r['packed_sites']}/{r['n_sites']} sites packed)")
+
     record = {
         "arch": args.arch + "-smoke",
         "batch": args.batch,
@@ -309,6 +416,8 @@ def main(argv=None):
         "packed_over_qdq_decode": packed_over_qdq,
         "decode_step_ms_by_kv_format": step_by_kv,
         "hif4_over_bf16_kv_decode": hif4_over_bf16,
+        "policy_rows": policy_rows,
+        "paper_iv_over_uniform_decode": paper_iv_over_uniform,
         "results": results,
     }
     with open(OUT_PATH, "w") as f:
@@ -339,6 +448,20 @@ def main(argv=None):
             f"hif4-KV decode regressed to {hif4_over_bf16}x of bf16-KV "
             f"(gate: >= 0.9x — the fused decode-attention path exists to "
             f"hold this)")
+
+    # where the mixed preset structurally applies (its fallback patterns
+    # match sites on this arch), it must actually be mixed: fewer packed
+    # sites and correspondingly more resident bytes than uniform. mamba2
+    # has no attn/mlp output projections and hybrid packs nothing, so
+    # there the two legitimately coincide.
+    if policy_rows is not None and mixed_differs:
+        assert (policy_rows["sensitive-fallback"]["packed_sites"]
+                < policy_rows["uniform:hif4"]["packed_sites"]), policy_rows
+        assert (policy_rows["sensitive-fallback"]["weight_bytes"]
+                > policy_rows["uniform:hif4"]["weight_bytes"]), policy_rows
+    elif policy_rows is not None:
+        assert (policy_rows["sensitive-fallback"]["packed_sites"]
+                == policy_rows["uniform:hif4"]["packed_sites"]), policy_rows
 
     by_kv = {r["kv_format"]: r for r in results}
     if ("hif4" in by_kv and "bf16" in by_kv

@@ -79,6 +79,23 @@ def main():
           f"   [kv {kv_tok} B/token vs bf16 {kv_bf16} "
           f"-> {kv_bf16 / kv_tok:.2f}x slots]")
 
+    # MIXED per-site policy (repro.core.policy): the sensitive-fallback
+    # preset keeps the outlier-sensitive output/down projections bf16
+    # dense while the rest of the body serves packed — placement is a
+    # rule list resolved into a site plan, not a code edit.
+    from repro.core.policy import get_policy
+    from repro.models import lm
+    plan = lm.quant_plan(cfg, get_policy("sensitive-fallback", impl="packed"))
+    pctx = ModelCtx(quant=plan.base, plan=plan, remat=False,
+                    attn_q_chunk=32, attn_k_chunk=32)
+    mixed_params = prepare_params_for_serving(params, cfg, plan)
+    nbytes_m, nvals_m = packed_weight_bytes(mixed_params)
+    toks = serve(cfg, mixed_params, prompts, pctx, sc)
+    agree = float(jnp.mean(toks == ref)) * 100
+    print(f"{'policy: sens-fallback':22} {agree:19.1f}%"
+          f"   [{len(plan.packed_paths)}/{len(plan.sites)} sites packed, "
+          f"{nbytes_m / max(nvals_m, 1):.4f} B/value on packed sites]")
+
 
 if __name__ == "__main__":
     main()

@@ -91,13 +91,6 @@ def quantize_weight(w: jnp.ndarray, cfg: QuantConfig, axis: int = 0) -> jnp.ndar
     return _ste(w, fmt.qdq(w, axis=axis))
 
 
-# Block-weight keys eligible for offline PTQ / packing, and their
-# contraction axes (leading axis = stacked layers). Biases, norms, router
-# and scalar state are excluded (paper §IV placement).
-PACKABLE_KEYS = {"wq", "wk", "wv", "wo", "wg", "wu", "wi",
-                 "w_z", "w_x", "w_b", "w_c", "w_dt", "w_out"}
-
-
 def packable_contract_axes(key: str, ndim: int):
     """Contraction axes of a STACKED block weight (leading axis = layers).
 
@@ -109,41 +102,74 @@ def packable_contract_axes(key: str, ndim: int):
     return (1,) if ndim >= 3 else (0,)
 
 
-def quantize_params_offline(params, cfg: QuantConfig, *, contract_axis: int = 0):
+def _qdq_along(w, fmt, ca: tuple):
+    """QDQ ``w`` along contraction axes ``ca`` (multi-axis = attn wo:
+    flatten, qdq, restore). Returns ``w`` unchanged when the contraction
+    is not a whole number of 64-groups."""
+    import numpy as np
+
+    if len(ca) == 1:
+        if w.shape[ca[0]] % hif4.GROUP_SIZE:
+            return w
+        return fmt.qdq(w, axis=ca[0])
+    lead = w.shape[: ca[0]]
+    k_flat = int(np.prod([w.shape[a] for a in ca]))
+    if k_flat % hif4.GROUP_SIZE:
+        return w
+    w2 = w.reshape(lead + (k_flat,) + w.shape[ca[-1] + 1 :])
+    out = fmt.qdq(w2, axis=len(lead))
+    return out.reshape(w.shape)
+
+
+def quantize_params_offline(params, cfg: QuantConfig, *, contract_axis: int = 0,
+                            plan=None, prefix: str = ""):
     """One-time offline weight PTQ: QDQ exactly the matmul weights, along
-    their true contraction axes (same rules as the packed path). Use with
-    ``offline_weights=True`` at serve time.
+    their true contraction axes. Use with ``offline_weights=True`` at
+    serve time.
+
+    With ``plan`` (a resolved :class:`repro.core.policy.QuantPlan`) and
+    ``prefix`` (the collection this subtree sits under, e.g. "blocks"),
+    per-site decisions — WHICH sites quantize, to WHAT format, along
+    which axes — come from the plan; this is the same resolution
+    ``prepare_params_for_serving`` packs from, so the two predicates can
+    never drift. Without a plan, the legacy global-config behavior: the
+    default packable-site rules (``repro.core.policy.default_offline_axes``)
+    with ``cfg.fmt`` everywhere. ``PackedW`` leaves pass through untouched
+    (packing already IS the offline quantization).
     """
+    from repro.core.policy import default_offline_axes
+
     fmt = cfg.format()
-    if fmt is None:
+    if fmt is None and plan is None:
         return params
 
     def q(path, w):
+        if isinstance(w, PackedW):
+            return w
         key = None
         for part in reversed(path):
             k = getattr(part, "key", None)
             if isinstance(k, str):
                 key = k
                 break
-        if key not in PACKABLE_KEYS or w.ndim < 2:
-            return w
-        ca = packable_contract_axes(key, w.ndim)
-        if len(ca) == 1:
-            if w.shape[ca[0]] % hif4.GROUP_SIZE:
+        if plan is not None:
+            parts = [getattr(p, "key") for p in path
+                     if isinstance(getattr(p, "key", None), str)]
+            site_path = ".".join(([prefix] if prefix else []) + parts)
+            site = plan.get(site_path)
+            if site is None or site.packed or not site.quantize_offline:
                 return w
-            return fmt.qdq(w, axis=ca[0])
-        # multi-axis contraction (attn wo): flatten, qdq, restore
-        import numpy as np
-
-        lead = w.shape[: ca[0]]
-        k_flat = int(np.prod([w.shape[a] for a in ca]))
-        if k_flat % hif4.GROUP_SIZE:
+            site_fmt = site.cfg.format()
+            if site_fmt is None:
+                return w
+            return _qdq_along(w, site_fmt, site.contract_axes)
+        ca = default_offline_axes(key, w.ndim)
+        if ca is None:
             return w
-        w2 = w.reshape(lead + (k_flat,) + w.shape[ca[-1] + 1 :])
-        out = fmt.qdq(w2, axis=len(lead))
-        return out.reshape(w.shape)
+        return _qdq_along(w, fmt, ca)
 
-    return jax.tree_util.tree_map_with_path(q, params)
+    return jax.tree_util.tree_map_with_path(
+        q, params, is_leaf=lambda x: isinstance(x, PackedW))
 
 
 def qmatmul(
@@ -163,9 +189,10 @@ def qmatmul(
     the execution path (qdq / packed / pallas) and ``w`` may be a dense
     array or a :class:`PackedW`. Shapes: x (..., K) contracted with
     w (K, ...); arbitrary contract axes via ``contract_x`` / ``contract_w``.
-    Embedding/LM-head/router callers simply pass cfg=NO_QUANT (paper SS IV
-    exclusions). ``shard`` is the ShardCtx packed dequantization gathers
-    under (None = unsharded).
+    WHICH sites quantize (embedding/LM-head/router excluded by default —
+    paper SS IV) is per-site policy, resolved by repro.core.policy and
+    passed in as ``cfg``. ``shard`` is the ShardCtx packed dequantization
+    gathers under (None = unsharded).
 
     ``accum_dtype`` is the dot OUTPUT dtype (default: x.dtype). The MXU
     accumulates f32 internally either way; emitting bf16 makes the

@@ -128,10 +128,22 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool, quant: str = "hif
 
     pspecs = lm.abstract_params(cfg)
     if packed and shape.kind != "train":
+        # packing set = the uniform packed policy resolved for this arch
+        # (the same plan serving packs from; see repro.core.policy). The
+        # plan packs nothing for non-hif4 formats or hybrid archs — fall
+        # back to dense LOUDLY so the record never claims packed_weights
+        # for a dense lowering.
+        plan = lm.quant_plan(cfg, QuantConfig(fmt=quant, impl="packed"))
+        if not plan.packed_paths:
+            print(f"note: --packed has no packable sites for {arch} under "
+                  f"fmt={quant} (non-hif4 format or hybrid family); "
+                  f"lowering dense weights instead")
+            packed = False
+    if packed and shape.kind != "train":
         # HiF4 packed serving weights: 4.5 bits/value residency + transport.
         # The ShardCtx the packed dequantization gathers under now travels
         # inside the model context (engine dispatch) — no module-level hook.
-        pspecs = lm.packed_overlay(pspecs)
+        pspecs = lm.packed_overlay(pspecs, plan)
 
         def leaf(p):
             return jax.ShapeDtypeStruct(

@@ -1,8 +1,16 @@
 """Serving launcher: offline HiF4 packing/PTQ + batched scan decode.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --reduced \
-        --batch 4 --prompt-len 32 --new-tokens 16 --quant hif4 --impl packed \
-        --kv-format hif4
+        --batch 4 --prompt-len 32 --new-tokens 16 --policy paper-iv \
+        --impl packed --kv-format hif4
+
+``--policy`` selects the per-site quantization placement (see
+docs/EXECUTION.md §Policy resolution): a preset (``paper-iv``,
+``uniform:hif4``, ``nvfp4-baseline``, ``sensitive-fallback``) or a policy
+JSON file; the launcher prints the resolved plan — one line per site with
+its format, impl, and resident artifact — next to the fused-kernel and
+residency lines. Without ``--policy`` the legacy ``--quant``/``--impl``
+global config applies (identical to ``uniform:<fmt>``).
 
 ``--impl`` picks the execution path (see docs/EXECUTION.md): ``packed``
 (default) serves real 4.5-bit resident weights through the fused
@@ -10,7 +18,7 @@ dequantize-in-kernel matmul (Pallas on TPU, its XLA twin elsewhere);
 ``qdq`` is the fake-quant accuracy shape; ``pallas`` adds the fixed-point
 kernels for dense weights too (interpret mode off TPU — slow on CPU, use
 tiny shapes). ``--kv-format hif4`` additionally stores the decode KV cache
-at 4.5 bits/value (docs/FORMATS.md).
+at 4.5 bits/value (docs/FORMATS.md) — KV storage stays cache-global.
 """
 import argparse
 
@@ -19,7 +27,8 @@ import jax.numpy as jnp
 
 from repro.configs import get_arch
 from repro.core import kvcache
-from repro.core.qlinear import QuantConfig
+from repro.core.policy import get_policy
+from repro.core.qlinear import PackedW, QuantConfig
 from repro.launch.mesh import make_host_mesh
 from repro.models import lm
 from repro.models.common import ModelCtx
@@ -30,6 +39,39 @@ from repro.runtime.serve_loop import (
     resolve_kv_format,
 )
 from repro.sharding.rules import ShardCtx
+
+
+def _leaf_at(tree, path: str):
+    node = tree
+    for part in path.split("."):
+        if not isinstance(node, dict) or part not in node:
+            return None
+        node = node[part]
+    return node
+
+
+def _print_plan(plan, serving_params):
+    """The resolved policy plan, one line per site: what each weight site
+    quantizes to and what is actually resident for it."""
+    print(f"policy plan [{plan.policy.name}] "
+          f"({len(plan.packed_paths)}/{len(plan.sites)} sites packed):")
+    print(f"  {'site':<18} {'fmt':<10} {'impl':<7} {'resident artifact':<34} "
+          f"{'bytes':>12}")
+    for site in plan.sites:
+        leaf = _leaf_at(serving_params, site.path)
+        if isinstance(leaf, PackedW):
+            nbytes = leaf.nbytes_packed
+            art = f"PackedW 4.5-bit ({nbytes / leaf.n_values:.4f} B/value)"
+        elif leaf is None:
+            nbytes = 0
+            art = "(tied -> embed)" if site.path == "lm_head" else "(absent)"
+        else:
+            nbytes = int(leaf.nbytes)
+            art = (f"qdq {leaf.dtype} (offline PTQ)"
+                   if site.cfg.enabled and site.quantize_offline
+                   else str(leaf.dtype))
+        print(f"  {site.path:<18} {site.cfg.fmt:<10} {site.cfg.impl:<7} "
+              f"{art:<34} {nbytes:>12,}")
 
 
 def _print_kernel_dispatch(serving_params, ctx, args):
@@ -98,19 +140,34 @@ def main():
     ap.add_argument("--kv-format", default="bf16",
                     choices=list(kvcache.KV_FORMATS),
                     help="decode KV-cache storage (hif4 = 4.5 bits/value)")
+    ap.add_argument("--policy", default=None,
+                    help="per-site quantization policy: a preset name "
+                         "(paper-iv, uniform:<fmt>, nvfp4-baseline, "
+                         "sensitive-fallback) or a policy JSON file; "
+                         "overrides --quant")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
     mesh = make_host_mesh() if len(jax.devices()) > 1 else None
-    ctx = ModelCtx(quant=QuantConfig(fmt=args.quant, impl=args.impl,
-                                     kv=kvcache.KVCacheConfig(args.kv_format)),
+    kv = kvcache.KVCacheConfig(args.kv_format)
+    plan = None
+    if args.policy is not None:
+        policy = get_policy(args.policy, impl=args.impl, kv=kv)
+        plan = lm.quant_plan(cfg, policy)
+        quant = plan.base
+    else:
+        quant = QuantConfig(fmt=args.quant, impl=args.impl, kv=kv)
+    ctx = ModelCtx(quant=quant, plan=plan,
                    shard=ShardCtx(mesh=mesh), remat=False,
                    attn_q_chunk=32, attn_k_chunk=32)
 
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
-    serving_params = prepare_params_for_serving(params, cfg, ctx.quant)
+    serving_params = prepare_params_for_serving(params, cfg,
+                                                ctx.plan or ctx.quant)
+    if plan is not None:
+        _print_plan(plan, serving_params)
     nbytes, nvals = packed_weight_bytes(serving_params)
     if nvals:
         print(f"packed weight residency: {nbytes / 2**20:.2f} MiB for "

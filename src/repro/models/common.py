@@ -8,15 +8,29 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import engine
+from repro.core.policy import QuantPlan, uniform_site_config
 from repro.core.qlinear import NO_QUANT, QuantConfig
 from repro.sharding.rules import NO_SHARD, ShardCtx
 
 
 @dataclasses.dataclass(frozen=True)
 class ModelCtx:
-    """Everything a model forward needs besides params and inputs."""
+    """Everything a model forward needs besides params and inputs.
+
+    Quantization placement is PER SITE: every linear call site asks
+    :meth:`site_quant` for its config. With a resolved :class:`QuantPlan`
+    attached (``plan``), the answer comes from the policy; without one,
+    from the uniform shim over the global ``quant`` — which reproduces
+    the legacy behavior (body quantized, embed/lm_head/router excluded)
+    through the same rule machinery instead of hardcoded NO_QUANT calls.
+    ``scope`` is the param-tree prefix the current block runs under
+    ("blocks", "shared", "enc_blocks") — set via :meth:`scoped` by the
+    family forwards, so shared block code resolves the right sites.
+    """
 
     quant: QuantConfig = NO_QUANT
+    plan: Optional[QuantPlan] = None
+    scope: str = ""
     shard: ShardCtx = dataclasses.field(default_factory=lambda: NO_SHARD)
     param_dtype: jnp.dtype = jnp.bfloat16
     compute_dtype: jnp.dtype = jnp.bfloat16
@@ -27,6 +41,26 @@ class ModelCtx:
     # "vec_q" : q-chunk axis is a shardable data axis — use when the head
     #           count does not divide the TP axis (see attention.py §vec_q).
     attn_impl: str = "scan_q"
+
+    def __post_init__(self):
+        # A plan-carrying ctx left at the default quant derives it from the
+        # plan's attention-site config: KV-format resolution and packed-KV
+        # attention dispatch read ctx.quant, and silently running them off
+        # NO_QUANT while the sites follow the plan would drop the policy's
+        # kv/impl (ModelCtx(plan=plan) is the natural spelling).
+        if self.plan is not None and self.quant == NO_QUANT:
+            object.__setattr__(self, "quant", self.plan.base)
+
+    def scoped(self, prefix: str) -> "ModelCtx":
+        return dataclasses.replace(self, scope=prefix)
+
+    def site_quant(self, site: str) -> QuantConfig:
+        """The QuantConfig the linear layer at ``site`` executes under
+        (``site`` is relative to :attr:`scope`, e.g. "attn.wq")."""
+        path = f"{self.scope}.{site}" if self.scope else site
+        if self.plan is not None:
+            return self.plan.at(path)
+        return uniform_site_config(self.quant, path)
 
 
 DEFAULT_CTX = ModelCtx()
@@ -130,10 +164,12 @@ def dense(
 
     ``w`` is (d_in, ...) dense, or a :class:`PackedW` (HiF4 bit-packed
     serving weight, dequantized in-graph — 4.5 bits/value of residency and
-    FSDP-gather wire) — call sites accept either transparently. Callers
-    that must NOT be quantized (embedding, LM head, router — paper SS IV)
-    pass quant=NO_QUANT explicitly. ``shard`` (usually ctx.shard) reaches
-    packed dequantization so the gather moves the 4.5-bit payload.
+    FSDP-gather wire) — call sites accept either transparently. ``quant``
+    is the PER-SITE config (callers pass ``ctx.site_quant("attn.wq")``
+    etc.); the §IV exclusions (embed/lm_head/router) are default policy
+    rules, not hardcoded NO_QUANT arguments (repro.core.policy). ``shard``
+    (usually ctx.shard) reaches packed dequantization so the gather moves
+    the 4.5-bit payload.
     """
     ectx = engine.EngineCtx(quant=quant, shard=shard if shard is not None
                             else NO_SHARD)

@@ -196,7 +196,9 @@ def init_cache(cfg: ArchConfig, batch: int, seq: int,
 
 
 def embed_tokens(params: dict, tokens: jax.Array, cfg: ArchConfig, ctx: ModelCtx):
-    x = jnp.take(params["embed"], tokens, axis=0)       # NO quantization (§IV)
+    # the lookup is a gather, not a matmul: policy resolution clamps the
+    # "embed" site to fmt='none' (and §IV keeps it high-precision anyway)
+    x = jnp.take(params["embed"], tokens, axis=0)
     return x.astype(ctx.compute_dtype)
 
 
@@ -206,8 +208,10 @@ def lm_logits(params: dict, x: jax.Array, cfg: ArchConfig, ctx: ModelCtx):
         w = params["embed"].T                            # (d, V)
     else:
         w = params["lm_head"]
-    # NO quantization (§IV); f32 accumulation (loss-critical logits)
-    y = dense(x, w, accum_dtype=jnp.float32)
+    # per-site config ("lm_head"): fmt='none' under the default §IV rules,
+    # quantizable by an explicit policy rule; f32 accumulation either way
+    # (loss-critical logits)
+    y = dense(x, w, quant=ctx.site_quant("lm_head"), accum_dtype=jnp.float32)
     axes = ("batch", "act_seq", "vocab") if y.ndim == 3 else ("batch", "vocab")
     return ctx.shard.constrain(y.astype(jnp.float32), *axes)
 
@@ -246,11 +250,12 @@ def _scan_layers(body, x0, xs, remat: bool):
 def _transformer_forward(params, x, cfg, ctx, *, mode, caches=None, pos=None):
     """x (B,S,d). Returns (x, caches-or-None). mode: train|prefill|decode."""
     sp = ("batch", "act_seq", None) if x.shape[1] > 1 else ("batch", None, None)
+    bctx = ctx.scoped("blocks")
 
     if mode == "train":
         def body(h, p_layer):
             h = ctx.shard.constrain(h, *sp)
-            h, _ = _tblock_apply(p_layer, h, cfg, ctx, mode="train")
+            h, _ = _tblock_apply(p_layer, h, cfg, bctx, mode="train")
             return h, None
         x, _ = _scan_layers(body, x, params["blocks"], ctx.remat)
         return ctx.shard.constrain(x, *sp), None
@@ -258,7 +263,7 @@ def _transformer_forward(params, x, cfg, ctx, *, mode, caches=None, pos=None):
     if mode == "prefill":
         def body(h, p_layer):
             h = ctx.shard.constrain(h, *sp)
-            h, cache = _tblock_apply(p_layer, h, cfg, ctx, mode="prefill")
+            h, cache = _tblock_apply(p_layer, h, cfg, bctx, mode="prefill")
             return h, cache
         x, caches = _scan_layers(body, x, params["blocks"], False)
         return ctx.shard.constrain(x, *sp), caches
@@ -266,7 +271,7 @@ def _transformer_forward(params, x, cfg, ctx, *, mode, caches=None, pos=None):
     # decode
     def body(h, layer):
         p_layer, cache = layer
-        h, new_cache = _tblock_apply(p_layer, h, cfg, ctx, mode="decode",
+        h, new_cache = _tblock_apply(p_layer, h, cfg, bctx, mode="decode",
                                      cache=cache, pos=pos)
         return h, new_cache
     x, new_caches = jax.lax.scan(body, x, (params["blocks"], caches))
@@ -280,12 +285,13 @@ def _transformer_forward(params, x, cfg, ctx, *, mode, caches=None, pos=None):
 
 def _ssm_forward(params, x, cfg, ctx, *, mode, caches=None):
     sp = ("batch", "act_seq", None) if x.shape[1] > 1 else ("batch", None, None)
+    bctx = ctx.scoped("blocks")
     if mode in ("train", "prefill"):
         want_cache = mode == "prefill"
 
         def body(h, p_layer):
             h = ctx.shard.constrain(h, *sp)
-            out, cache = mamba2.mamba_full(p_layer, h, cfg, ctx,
+            out, cache = mamba2.mamba_full(p_layer, h, cfg, bctx,
                                            return_cache=want_cache)
             return h + out, cache
         remat = ctx.remat and mode == "train"
@@ -294,7 +300,7 @@ def _ssm_forward(params, x, cfg, ctx, *, mode, caches=None):
 
     def body(h, layer):
         p_layer, cache = layer
-        out, new_cache = mamba2.mamba_step(p_layer, h, cache, cfg, ctx)
+        out, new_cache = mamba2.mamba_step(p_layer, h, cache, cfg, bctx)
         return h + out, new_cache
     x, new_caches = jax.lax.scan(body, x, (params["blocks"], caches))
     return x, new_caches
@@ -308,17 +314,20 @@ def _ssm_forward(params, x, cfg, ctx, *, mode, caches=None):
 def _hybrid_forward(params, x, cfg, ctx, *, mode, caches=None, pos=None):
     shared = params["shared"]
     sp = ("batch", "act_seq", None) if x.shape[1] > 1 else ("batch", None, None)
+    sctx = ctx.scoped("shared")
+    bctx = ctx.scoped("blocks")
 
     def shared_apply(h, kv_cache):
         hn = tf.norm_apply(shared["norm1"], h, cfg)
         if mode == "decode":
-            a, new_kv = tf.attn_decode(shared["attn"], hn, kv_cache, pos, cfg, ctx)
+            a, new_kv = tf.attn_decode(shared["attn"], hn, kv_cache, pos, cfg,
+                                       sctx)
         else:
-            a, new_kv = tf.attn_full(shared["attn"], hn, cfg, ctx, causal=True,
+            a, new_kv = tf.attn_full(shared["attn"], hn, cfg, sctx, causal=True,
                                      return_cache=(mode == "prefill"))
         h = h + a
         h2 = tf.norm_apply(shared["norm2"], h, cfg)
-        return h + tf.mlp_apply(shared["mlp"], h2, cfg, ctx), new_kv
+        return h + tf.mlp_apply(shared["mlp"], h2, cfg, sctx), new_kv
 
     if mode in ("train", "prefill"):
         want_cache = mode == "prefill"
@@ -328,7 +337,7 @@ def _hybrid_forward(params, x, cfg, ctx, *, mode, caches=None, pos=None):
             h, kv = shared_apply(h, None)
 
             def inner(hh, p_layer):
-                out, mc = mamba2.mamba_full(p_layer, hh, cfg, ctx,
+                out, mc = mamba2.mamba_full(p_layer, hh, cfg, bctx,
                                             return_cache=want_cache)
                 return hh + out, mc
             h, mcaches = jax.lax.scan(inner, h, p_super)
@@ -347,7 +356,7 @@ def _hybrid_forward(params, x, cfg, ctx, *, mode, caches=None, pos=None):
 
         def inner(hh, layer):
             p_layer, mc = layer
-            out, new_mc = mamba2.mamba_step(p_layer, hh, mc, cfg, ctx)
+            out, new_mc = mamba2.mamba_step(p_layer, hh, mc, cfg, bctx)
             return hh + out, new_mc
         h, new_mc = jax.lax.scan(inner, h, (p_super, mcache))
         return h, (new_mc, new_kv)
@@ -370,15 +379,16 @@ def _encode(params, frames, cfg, ctx):
         ctx.compute_dtype
     )
     sp = ("batch", "act_seq", None)
+    ectx = ctx.scoped("enc_blocks")
 
     def body(h, p_layer):
         h = ctx.shard.constrain(h, *sp)
         hn = tf.norm_apply(p_layer["norm1"], h, cfg)
-        a, _ = tf.attn_full(p_layer["attn"], hn, cfg, ctx, causal=False,
+        a, _ = tf.attn_full(p_layer["attn"], hn, cfg, ectx, causal=False,
                             use_rope=False)
         h = h + a
         h2 = tf.norm_apply(p_layer["norm2"], h, cfg)
-        return h + tf.mlp_apply(p_layer["mlp"], h2, cfg, ctx), None
+        return h + tf.mlp_apply(p_layer["mlp"], h2, cfg, ectx), None
 
     x, _ = _scan_layers(body, x, params["enc_blocks"], ctx.remat)
     return tf.norm_apply(params["enc_norm"], x, cfg)
@@ -389,12 +399,16 @@ def _cross_kv(params, enc, cfg, ctx):
     a = cfg.attn
     B, S, d = enc.shape
 
+    bctx = ctx.scoped("blocks")
+
     def body(_, p_layer):
         pa = p_layer["xattn"]
-        k = dense(enc, pa["wk"].reshape(d, -1), quant=ctx.quant, shard=ctx.shard).reshape(
+        k = dense(enc, pa["wk"].reshape(d, -1),
+                  quant=bctx.site_quant("xattn.wk"), shard=ctx.shard).reshape(
             B, S, a.n_kv_heads, a.d_head
         )
-        v = dense(enc, pa["wv"].reshape(d, -1), quant=ctx.quant, shard=ctx.shard).reshape(
+        v = dense(enc, pa["wv"].reshape(d, -1),
+                  quant=bctx.site_quant("xattn.wv"), shard=ctx.shard).reshape(
             B, S, a.n_kv_heads, a.d_head
         )
         if a.qkv_bias:
@@ -420,12 +434,13 @@ def _dec_block_apply(p, x, cfg, ctx, *, mode, self_cache, cross_kv, pos):
     hx = tf.norm_apply(p["norm_x"], x, cfg)
     if mode == "decode":
         a, _ = tf.attn_decode(p["xattn"], hx, cross_kv, pos, cfg, ctx,
-                              use_rope=False, cross=True)
+                              use_rope=False, cross=True, site="xattn")
     else:
         # full-sequence cross attention against the encoder output KV
         B, S, d = hx.shape
         aa = cfg.attn
-        q = dense(hx, p["xattn"]["wq"].reshape(d, -1), quant=ctx.quant, shard=ctx.shard).reshape(
+        q = dense(hx, p["xattn"]["wq"].reshape(d, -1),
+                  quant=ctx.site_quant("xattn.wq"), shard=ctx.shard).reshape(
             B, S, aa.n_heads, aa.d_head
         )
         if aa.qkv_bias:
@@ -437,7 +452,7 @@ def _dec_block_apply(p, x, cfg, ctx, *, mode, self_cache, cross_kv, pos):
                                   k_chunk=min(ctx.attn_k_chunk, cross_kv["k"].shape[1])),
         )
         a = dense(o.reshape(B, S, -1), p["xattn"]["wo"].reshape(-1, d),
-                  quant=ctx.quant, shard=ctx.shard)
+                  quant=ctx.site_quant("xattn.wo"), shard=ctx.shard)
     x = x + a
 
     h2 = tf.norm_apply(p["norm2"], x, cfg)
@@ -448,6 +463,7 @@ def _audio_forward(params, dec_x, cfg, ctx, *, mode, frames=None, caches=None,
                    pos=None):
     """dec_x (B, S_dec, d) embedded decoder input."""
     sp = ("batch", "act_seq", None) if dec_x.shape[1] > 1 else ("batch", None, None)
+    bctx = ctx.scoped("blocks")
     if mode in ("train", "prefill"):
         enc = _encode(params, frames, cfg, ctx)
         cross = _cross_kv(params, enc, cfg, ctx)        # (L, B, S_enc, Hkv, Dh)
@@ -455,7 +471,7 @@ def _audio_forward(params, dec_x, cfg, ctx, *, mode, frames=None, caches=None,
         def body(h, layer):
             p_layer, ckv = layer
             h = ctx.shard.constrain(h, *sp)
-            h, self_cache = _dec_block_apply(p_layer, h, cfg, ctx, mode=mode,
+            h, self_cache = _dec_block_apply(p_layer, h, cfg, bctx, mode=mode,
                                              self_cache=None, cross_kv=ckv,
                                              pos=None)
             return h, self_cache
@@ -468,7 +484,7 @@ def _audio_forward(params, dec_x, cfg, ctx, *, mode, frames=None, caches=None,
 
     def body(h, layer):
         p_layer, self_cache, ckv = layer
-        h, new_self = _dec_block_apply(p_layer, h, cfg, ctx, mode="decode",
+        h, new_self = _dec_block_apply(p_layer, h, cfg, bctx, mode="decode",
                                        self_cache=self_cache, cross_kv=ckv,
                                        pos=pos)
         return h, new_self
@@ -642,16 +658,45 @@ def decode_step(params: dict, token: jax.Array, cache: dict, cfg: ArchConfig,
 # Packed-weight serving overlay (HiF4 4.5-bit deployment artifact)
 # ---------------------------------------------------------------------------
 
-from repro.core.qlinear import PACKABLE_KEYS, packable_contract_axes
+from repro.core.policy import STACKED_COLLECTIONS, QuantPlan, QuantPolicy
+from repro.core.qlinear import QuantConfig
 
 
-def _packed_contract_axes(key: str, p: PSpec):
-    """Contraction axes of a stacked block weight (leading axis = layers)."""
-    return packable_contract_axes(key, len(p.shape))
+def quant_plan(cfg: ArchConfig, policy) -> QuantPlan:
+    """Resolve a policy (or a legacy global QuantConfig, via the uniform
+    shim) against this architecture's param specs — the explicit
+    site -> QuantConfig plan everything serving-side packs and QDQs from."""
+    if isinstance(policy, QuantPlan):
+        return policy
+    if isinstance(policy, QuantConfig):
+        policy = QuantPolicy.uniform(policy)
+    return policy.resolve(abstract_params(cfg), family=cfg.family)
 
 
-def packed_overlay(specs: dict) -> dict:
-    """Replace packable block-weight PSpecs with packed codes/meta PSpecs.
+def _default_packed_plan(cfg: ArchConfig) -> QuantPlan:
+    """The historical packing set: uniform hif4/packed over the default
+    packable sites (used when callers pack without an explicit policy)."""
+    return quant_plan(cfg, QuantConfig(fmt="hif4", impl="packed"))
+
+
+def _marker_geometry(site, axes: tuple):
+    """(k, n, L, out_name, c_name) of a packed STACKED site spec."""
+    import numpy as np
+
+    ca = site.contract_axes
+    nd = len(site.shape)
+    out_axes = tuple(a for a in range(1, nd) if a not in ca)
+    k = int(np.prod([site.shape[a] for a in ca]))
+    n = int(np.prod([site.shape[a] for a in out_axes])) if out_axes else 1
+    out_name = next((axes[a] for a in out_axes if axes[a] is not None), None)
+    c_name = next((axes[a] for a in ca if axes[a] is not None), None)
+    return k, n, site.shape[0], out_name, c_name
+
+
+def packed_overlay(specs: dict, plan: QuantPlan) -> dict:
+    """Replace the block-weight PSpecs the PLAN marks packed with packed
+    codes/meta PSpecs — the overlay packs exactly the policy's site set,
+    nothing else.
 
     Returned leaves for a packed weight: a dict
         {"__packed__": True, "codes": PSpec, "meta": PSpec,
@@ -659,26 +704,13 @@ def packed_overlay(specs: dict) -> dict:
     which launch/runtime code converts into :class:`PackedW` nodes (with
     ShapeDtypeStructs for the dry-run, real buffers for serving).
     """
-    import numpy as np
 
-    def walk(node, key=None, parent=None):
+    def walk(node, parts):
         if isinstance(node, PSpec):
-            # MoE expert weights flow through the batched-expert einsum
-            # (qbmm), which has no packed dispatch; router excluded anyway.
-            if parent == "moe" or key not in PACKABLE_KEYS or len(node.shape) < 2:
+            site = plan.get(".".join(parts))
+            if site is None or not site.packed:
                 return node
-            ca = _packed_contract_axes(key, node)
-            nd = len(node.shape)
-            out_axes = tuple(a for a in range(1, nd) if a not in ca)
-            k = int(np.prod([node.shape[a] for a in ca]))
-            if k % 64 != 0:
-                return node
-            n = int(np.prod([node.shape[a] for a in out_axes])) if out_axes else 1
-            L = node.shape[0]
-            out_name = next((node.axes[a] for a in out_axes
-                             if node.axes[a] is not None), None)
-            c_name = next((node.axes[a] for a in ca
-                           if node.axes[a] is not None), None)
+            k, n, L, out_name, c_name = _marker_geometry(site, node.axes)
             return {
                 "__packed__": True,
                 "codes": PSpec((L, n, k // 64, 32),
@@ -692,13 +724,13 @@ def packed_overlay(specs: dict) -> dict:
                 "axes2d": (out_name, c_name),
             }
         if isinstance(node, dict):
-            return {kk: walk(vv, kk, key) for kk, vv in node.items()}
+            return {kk: walk(vv, parts + (kk,)) for kk, vv in node.items()}
         return node
 
     out = dict(specs)
-    for blk in ("blocks", "shared", "enc_blocks"):
+    for blk in STACKED_COLLECTIONS:
         if blk in out:
-            out[blk] = walk(out[blk])
+            out[blk] = walk(out[blk], (blk,))
     return out
 
 
@@ -727,46 +759,44 @@ def realize_packed(tree, leaf_fn):
     return walk(tree)
 
 
-def pack_params_for_serving(params: dict, cfg: ArchConfig) -> dict:
-    """Offline conversion of real trained weights into PackedW nodes."""
-    from repro.core.qlinear import PackedW
-    import numpy as np
+def pack_params_for_serving(params: dict, cfg: ArchConfig,
+                            plan: Optional[QuantPlan] = None) -> dict:
+    """Offline conversion of real trained weights into PackedW nodes.
 
+    Packs EXACTLY the sites ``plan`` marks packed (default: the uniform
+    hif4/packed plan — the historical behavior). A policy rule flipping
+    one site to bf16/qdq leaves that site's weight dense here, and the
+    engine serves it through the matching non-packed path.
+    """
+    from repro.core.qlinear import PackedW
+
+    if plan is None:
+        plan = _default_packed_plan(cfg)
     specs = abstract_params(cfg)
 
-    def walk(p_node, s_node, key=None, parent=None):
+    def walk(p_node, s_node, parts):
         if isinstance(s_node, PSpec):
-            # same eligibility rules as packed_overlay: MoE expert weights
-            # flow through the batched-expert einsum (no packed dispatch)
-            if (parent != "moe" and key in PACKABLE_KEYS
-                    and len(s_node.shape) >= 2):
-                ca = _packed_contract_axes(key, s_node)
-                k = int(np.prod([s_node.shape[a] for a in ca]))
-                if k % 64 == 0:
-                    nd = len(s_node.shape)
-                    out_axes = tuple(a for a in range(1, nd) if a not in ca)
-                    out_name = next((s_node.axes[a] for a in out_axes
-                                     if s_node.axes[a] is not None), None)
-                    c_name = next((s_node.axes[a] for a in ca
-                                   if s_node.axes[a] is not None), None)
-                    # per-layer pack, stacked along L
-                    stacked = [
-                        PackedW.from_dense(p_node[i],
-                                           tuple(a - 1 for a in ca))
-                        for i in range(p_node.shape[0])
-                    ]
-                    codes = jnp.stack([s.codes for s in stacked])
-                    meta = jnp.stack([s.meta for s in stacked])
-                    return PackedW(codes, meta, stacked[0].shape2d,
-                                   p_node.dtype, (out_name, c_name))
-            return p_node
+            site = plan.get(".".join(parts))
+            if site is None or not site.packed:
+                return p_node
+            ca = site.contract_axes
+            _, _, _, out_name, c_name = _marker_geometry(site, s_node.axes)
+            # per-layer pack, stacked along L
+            stacked = [
+                PackedW.from_dense(p_node[i], tuple(a - 1 for a in ca))
+                for i in range(p_node.shape[0])
+            ]
+            codes = jnp.stack([s.codes for s in stacked])
+            meta = jnp.stack([s.meta for s in stacked])
+            return PackedW(codes, meta, stacked[0].shape2d,
+                           p_node.dtype, (out_name, c_name))
         if isinstance(s_node, dict):
-            return {kk: walk(p_node[kk], vv, kk, key)
+            return {kk: walk(p_node[kk], vv, parts + (kk,))
                     for kk, vv in s_node.items()}
         return p_node
 
     out = dict(params)
-    for blk in ("blocks", "shared", "enc_blocks"):
+    for blk in STACKED_COLLECTIONS:
         if blk in out:
-            out[blk] = walk(params[blk], specs[blk])
+            out[blk] = walk(params[blk], specs[blk], (blk,))
     return out

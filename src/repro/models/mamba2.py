@@ -176,14 +176,14 @@ def ssd_step(
 def _in_proj(p, h, cfg: ArchConfig, ctx: ModelCtx):
     """Shared by full/step: project residual h -> z, x, B, C, dt."""
     di, H, G, N, P, K = dims(cfg)
-    z = dense(h, p["w_z"], quant=ctx.quant, shard=ctx.shard)
-    xin = dense(h, p["w_x"], quant=ctx.quant, shard=ctx.shard)
+    z = dense(h, p["w_z"], quant=ctx.site_quant("w_z"), shard=ctx.shard)
+    xin = dense(h, p["w_x"], quant=ctx.site_quant("w_x"), shard=ctx.shard)
     bc = jnp.concatenate(
-        [dense(h, p["w_b"], quant=ctx.quant, shard=ctx.shard),
-         dense(h, p["w_c"], quant=ctx.quant, shard=ctx.shard)],
+        [dense(h, p["w_b"], quant=ctx.site_quant("w_b"), shard=ctx.shard),
+         dense(h, p["w_c"], quant=ctx.site_quant("w_c"), shard=ctx.shard)],
         axis=-1,
     )
-    dt = dense(h, p["w_dt"], quant=ctx.quant, shard=ctx.shard).astype(jnp.float32)
+    dt = dense(h, p["w_dt"], quant=ctx.site_quant("w_dt"), shard=ctx.shard).astype(jnp.float32)
     dt = jax.nn.softplus(dt + p["dt_bias"])
     return z, xin, bc, dt
 
@@ -215,7 +215,7 @@ def mamba_full(
     y = y.reshape(B, S, di)
     y = rms_norm((y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype),
                  p["gate_norm"], eps=cfg.norm_eps)
-    out = dense(y, p["w_out"], quant=ctx.quant, shard=ctx.shard)
+    out = dense(y, p["w_out"], quant=ctx.site_quant("w_out"), shard=ctx.shard)
     if return_cache:
         cache = {
             "conv_x": _tail(xin, K - 1),
@@ -259,6 +259,6 @@ def mamba_step(
     y = y.reshape(B, di)
     y = rms_norm((y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype),
                  p["gate_norm"], eps=cfg.norm_eps)
-    out = dense(y, p["w_out"], quant=ctx.quant, shard=ctx.shard)[:, None]        # (B, 1, d)
+    out = dense(y, p["w_out"], quant=ctx.site_quant("w_out"), shard=ctx.shard)[:, None]        # (B, 1, d)
     new_cache = {"conv_x": conv_x, "conv_bc": conv_bc, "ssd": ssd_state}
     return out, new_cache

@@ -6,9 +6,10 @@ TPU-native formulation (no scatter). Expert weights are sharded over the
 "model" mesh axis (expert parallelism); the dispatched activations carry an
 "experts" sharding constraint so XLA inserts the all-to-all.
 
-The router (gating network) is NEVER quantized — paper §IV-C excludes it.
-Expert matmuls are quantized along the contraction dim like every other
-linear layer.
+The router (gating network) is excluded from quantization by the default
+policy rules (paper §IV-C; see repro.core.policy). Expert matmuls are
+quantized along the contraction dim like every other linear layer, each
+under its own resolved site config ("moe.wg", "moe.wo", ...).
 """
 from __future__ import annotations
 
@@ -74,8 +75,10 @@ def moe_apply(p: dict, x: jax.Array, cfg: ArchConfig, ctx: ModelCtx) -> jax.Arra
     B, S, d = x.shape
     E, C = m.n_experts, capacity(cfg, S)
 
-    # --- routing (unquantized, f32) ---
-    logits = dense(x, p["router"]).astype(jnp.float32)        # (B,S,E), NO quant
+    # --- routing (f32; excluded from quantization by the default policy
+    # rules — paper §IV-C — but a per-site rule CAN now opt it in) ---
+    logits = dense(x, p["router"],
+                   quant=ctx.site_quant("moe.router")).astype(jnp.float32)
     probs = jax.nn.softmax(logits, axis=-1)
     gates, idx = jax.lax.top_k(probs, m.top_k)                # (B,S,k)
     gates = gates / jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
@@ -86,23 +89,23 @@ def moe_apply(p: dict, x: jax.Array, cfg: ArchConfig, ctx: ModelCtx) -> jax.Arra
     xe = jnp.einsum("bsec,bsd->becd", dispatch.astype(x.dtype), x)
     xe = ctx.shard.constrain(xe, "batch", "experts", None, None)
 
-    # --- expert FFN (quantized like any linear layer; engine qdq path —
-    # batched-expert weights have no packed/pallas dispatch, see
-    # docs/EXECUTION.md) ---
-    ectx = engine.EngineCtx(quant=ctx.quant, shard=ctx.shard)
+    # --- expert FFN (quantized like any linear layer, each projection
+    # under its own policy site; engine qdq path — batched-expert weights
+    # have no packed/pallas dispatch, see docs/EXECUTION.md) ---
 
-    def qbmm(a, w, a_axis=-1, w_axis=1):
+    def qbmm(a, w, site, a_axis=-1, w_axis=1):
         """Batched-expert einsum with A-W quantization on the contraction."""
+        ectx = engine.EngineCtx(quant=ctx.site_quant(site), shard=ctx.shard)
         return engine.qdq_einsum("becd,edf->becf", a, w, ectx,
                                  a_axis=a_axis, w_axis=w_axis)
 
     if cfg.activation == "swiglu":
-        h = jax.nn.silu(qbmm(xe, p["wg"]).astype(jnp.float32))
-        h = (h * qbmm(xe, p["wu"]).astype(jnp.float32)).astype(x.dtype)
+        h = jax.nn.silu(qbmm(xe, p["wg"], "moe.wg").astype(jnp.float32))
+        h = (h * qbmm(xe, p["wu"], "moe.wu").astype(jnp.float32)).astype(x.dtype)
     else:
-        h = jax.nn.gelu(qbmm(xe, p["wi"]).astype(jnp.float32)).astype(x.dtype)
+        h = jax.nn.gelu(qbmm(xe, p["wi"], "moe.wi").astype(jnp.float32)).astype(x.dtype)
     h = ctx.shard.constrain(h, "batch", "experts", None, None)
-    ye = qbmm(h, p["wo"])                                      # (B,E,C,d)
+    ye = qbmm(h, p["wo"], "moe.wo")                            # (B,E,C,d)
     ye = ctx.shard.constrain(ye, "batch", "experts", None, None)
 
     # --- combine: expert-major -> token-major ---

@@ -1,9 +1,10 @@
 """Transformer blocks: GQA attention (qk-norm, QKV-bias) + dense MLPs.
 
-All linear layers run through :func:`repro.models.common.dense`, which
-applies the configured BFP quantization (HiF4/NVFP4/MXFP4) along the
-contraction dimension — the paper's A-W PTQ placement (§IV). Norms,
-softmax, RoPE stay high-precision.
+All linear layers run through :func:`repro.models.common.dense` with a
+PER-SITE quantization config (``ctx.site_quant("attn.wq")`` etc., resolved
+by the :mod:`repro.core.policy` rules) applied along the contraction
+dimension — the paper's A-W PTQ placement (§IV) is the default rule set.
+Norms, softmax, RoPE stay high-precision.
 
 Three attention execution modes:
   * full    — flash attention over the whole sequence (train / encoder)
@@ -74,18 +75,27 @@ def attn_specs(cfg: ArchConfig) -> dict:
     return specs
 
 
-def _proj_qkv(p: dict, x: jax.Array, cfg: ArchConfig, ctx: ModelCtx):
-    """x (..., d) -> q (..., H, Dh), k/v (..., Hkv, Dh), RoPE NOT yet applied."""
+def _proj_qkv(p: dict, x: jax.Array, cfg: ArchConfig, ctx: ModelCtx,
+              site: str = "attn"):
+    """x (..., d) -> q (..., H, Dh), k/v (..., Hkv, Dh), RoPE NOT yet applied.
+
+    ``site`` names the param subtree relative to ctx.scope ("attn" or the
+    audio decoder's "xattn") so each projection resolves its own policy
+    site (e.g. "blocks.xattn.wq").
+    """
     a = cfg.attn
     d = cfg.d_model
     lead = x.shape[:-1]
-    q = dense(x, p["wq"].reshape(d, -1), quant=ctx.quant, shard=ctx.shard).reshape(
+    q = dense(x, p["wq"].reshape(d, -1), quant=ctx.site_quant(f"{site}.wq"),
+              shard=ctx.shard).reshape(
         lead + (a.n_heads, a.d_head)
     )
-    k = dense(x, p["wk"].reshape(d, -1), quant=ctx.quant, shard=ctx.shard).reshape(
+    k = dense(x, p["wk"].reshape(d, -1), quant=ctx.site_quant(f"{site}.wk"),
+              shard=ctx.shard).reshape(
         lead + (a.n_kv_heads, a.d_head)
     )
-    v = dense(x, p["wv"].reshape(d, -1), quant=ctx.quant, shard=ctx.shard).reshape(
+    v = dense(x, p["wv"].reshape(d, -1), quant=ctx.site_quant(f"{site}.wv"),
+              shard=ctx.shard).reshape(
         lead + (a.n_kv_heads, a.d_head)
     )
     if a.qkv_bias:
@@ -98,11 +108,13 @@ def _proj_qkv(p: dict, x: jax.Array, cfg: ArchConfig, ctx: ModelCtx):
     return q, k, v
 
 
-def _out_proj(p: dict, o: jax.Array, cfg: ArchConfig, ctx: ModelCtx) -> jax.Array:
+def _out_proj(p: dict, o: jax.Array, cfg: ArchConfig, ctx: ModelCtx,
+              site: str = "attn") -> jax.Array:
     a = cfg.attn
     lead = o.shape[:-2]
     o = o.reshape(lead + (a.n_heads * a.d_head,))
-    return dense(o, p["wo"].reshape(-1, cfg.d_model), quant=ctx.quant, shard=ctx.shard)
+    return dense(o, p["wo"].reshape(-1, cfg.d_model),
+                 quant=ctx.site_quant(f"{site}.wo"), shard=ctx.shard)
 
 
 def attn_full(
@@ -114,10 +126,11 @@ def attn_full(
     causal: bool = True,
     use_rope: bool = True,
     return_cache: bool = False,
+    site: str = "attn",
 ):
     """Full-sequence attention; optionally returns the KV cache (prefill)."""
     B, S, _ = x.shape
-    q, k, v = _proj_qkv(p, x, cfg, ctx)
+    q, k, v = _proj_qkv(p, x, cfg, ctx, site=site)
     if use_rope:
         positions = jnp.arange(S)
         q = apply_rope(q, positions, cfg.attn.rope_theta)
@@ -142,7 +155,7 @@ def attn_full(
         k = ctx.shard.constrain(k, "batch", None, "kv_heads", None)
         v = ctx.shard.constrain(v, "batch", None, "kv_heads", None)
         o = flash_attention(q, k, v, causal=causal, chunking=chunking)
-    y = _out_proj(p, o, cfg, ctx)
+    y = _out_proj(p, o, cfg, ctx, site=site)
     if return_cache:
         return y, {"k": k, "v": v}
     return y, None
@@ -174,11 +187,12 @@ def attn_decode(
     *,
     use_rope: bool = True,
     cross: bool = False,          # cross-attention: read-only cache, no append
+    site: str = "attn",
 ):
     """One-token attention against (and, unless cross, appending to) a cache."""
     B = x.shape[0]
     per_slot = jnp.ndim(pos) == 1
-    q, k_new, v_new = _proj_qkv(p, x, cfg, ctx)        # (B, 1, H/Hkv, Dh)
+    q, k_new, v_new = _proj_qkv(p, x, cfg, ctx, site=site)  # (B, 1, H/Hkv, Dh)
     if use_rope:
         positions = pos[:, None] if per_slot else pos + jnp.arange(1)
         q = apply_rope(q, positions, cfg.attn.rope_theta)
@@ -219,7 +233,7 @@ def attn_decode(
                                      cfg.attn.d_head, ectx)
     else:
         o = decode_attention(q[:, 0], new_cache["k"], new_cache["v"], length)
-    y = _out_proj(p, o[:, None], cfg, ctx)             # (B, 1, d)
+    y = _out_proj(p, o[:, None], cfg, ctx, site=site)  # (B, 1, d)
     return y, new_cache
 
 
@@ -278,11 +292,14 @@ def mlp_specs(cfg: ArchConfig) -> dict:
 
 def mlp_apply(p: dict, x: jax.Array, cfg: ArchConfig, ctx: ModelCtx) -> jax.Array:
     if cfg.activation == "swiglu":
-        h = jax.nn.silu(dense(x, p["wg"], quant=ctx.quant, shard=ctx.shard).astype(jnp.float32))
-        h = (h * dense(x, p["wu"], quant=ctx.quant, shard=ctx.shard).astype(jnp.float32)).astype(x.dtype)
+        h = jax.nn.silu(dense(x, p["wg"], quant=ctx.site_quant("mlp.wg"),
+                              shard=ctx.shard).astype(jnp.float32))
+        h = (h * dense(x, p["wu"], quant=ctx.site_quant("mlp.wu"),
+                       shard=ctx.shard).astype(jnp.float32)).astype(x.dtype)
     else:
-        h = dense(x, p["wi"], quant=ctx.quant, shard=ctx.shard).astype(jnp.float32)
+        h = dense(x, p["wi"], quant=ctx.site_quant("mlp.wi"),
+                  shard=ctx.shard).astype(jnp.float32)
         h = jnp.square(jax.nn.relu(h)) if cfg.activation == "squared_relu" else jax.nn.gelu(h)
         h = h.astype(x.dtype)
     h = ctx.shard.constrain(h, "batch", None, "ff")
-    return dense(h, p["wo"], quant=ctx.quant, shard=ctx.shard)
+    return dense(h, p["wo"], quant=ctx.site_quant("mlp.wo"), shard=ctx.shard)

@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.core.policy import STACKED_COLLECTIONS, QuantPlan
 from repro.core.qlinear import QuantConfig, quantize_params_offline
 from repro.models import lm
 from repro.models.common import ModelCtx
@@ -70,34 +71,114 @@ def _to_kernel_layout(params):
 
 
 def prepare_params_for_serving(params: dict, cfg: ArchConfig,
-                               quant: QuantConfig) -> dict:
+                               quant, *, kernel_layout: bool = True) -> dict:
     """One-time offline conversion of block weights into the serving artifact.
 
-    embed/head/router stay full precision (paper §IV exclusions). The
-    packed/pallas impls get true 4.5-bit PackedW buffers in the K-major
-    kernel layout the fused matmul consumes (docs/FORMATS.md); qdq keeps
-    the fake-quant bf16 weights of the accuracy experiments.
+    ``quant`` is a legacy global :class:`QuantConfig` (converted via the
+    uniform-policy shim), a :class:`~repro.core.policy.QuantPolicy`, or an
+    already-resolved :class:`~repro.core.policy.QuantPlan`. Per site, the
+    resolved plan decides the artifact — there is no other packing
+    predicate:
+
+    * sites the plan marks ``packed`` become 4.5-bit PackedW buffers in
+      the K-major kernel layout the fused matmul consumes
+      (docs/FORMATS.md);
+    * quantized-but-not-packed sites (qdq impl, non-HiF4 formats, or
+      sites a rule flipped away from the packed path) get the offline
+      fake-quant QDQ artifact along their true contraction axes;
+    * everything else (embed/head/router under the default §IV rules,
+      fmt='none' sites) stays full precision.
+
+    ``kernel_layout=False`` keeps PackedW leaves in the artifact
+    (output-major, on-disk) layout — what :func:`save_serving_artifact`
+    checkpoints; serving always re-lays-out K-major once.
     """
-    if not quant.enabled:
+    plan = lm.quant_plan(cfg, quant)
+    if not plan.enabled:
         return params
     if packed_weight_bytes(params)[1]:
-        return _to_kernel_layout(params)   # already packed (idempotent)
-    # hybrid's doubly-stacked mamba blocks don't fit the single leading
-    # layer axis PackedW assumes; they keep the QDQ artifact for now.
-    if quant.impl in ("packed", "pallas") and cfg.family != "hybrid":
-        return _to_kernel_layout(lm.pack_params_for_serving(params, cfg))
+        # already packed (idempotent); honor the layout request — there is
+        # no kernel->artifact inverse, so callers needing the artifact
+        # layout must start from raw weights (save_serving_artifact asserts)
+        return _to_kernel_layout(params) if kernel_layout else params
     out = dict(params)
-    for key in ("blocks", "shared", "enc_blocks"):
+    if plan.packed_paths:
+        out = lm.pack_params_for_serving(out, cfg, plan)
+    for key in STACKED_COLLECTIONS:
         if key in out:
-            out[key] = quantize_params_offline(out[key], quant)
+            out[key] = quantize_params_offline(out[key], plan.base,
+                                               plan=plan, prefix=key)
+    # top-level untied head: a policy that quantizes it gets a real
+    # offline artifact too (the uniform shim resolves it to fmt='none')
+    site = plan.get("lm_head")
+    if (site is not None and "lm_head" in out and site.quantize_offline
+            and site.cfg.format() is not None):
+        from repro.core.qlinear import _qdq_along
+
+        out["lm_head"] = _qdq_along(out["lm_head"], site.cfg.format(),
+                                    site.contract_axes)
+    if plan.packed_paths and kernel_layout:
+        return _to_kernel_layout(out)
     return out
 
 
 def serving_ctx(ctx: ModelCtx) -> ModelCtx:
     """The model context decode runs under: weights already quantized
-    offline (skip in-graph weight QDQ), no remat."""
+    offline (skip in-graph weight QDQ), no remat. With a policy plan
+    attached, every site config gets the same offline flip."""
     qcfg = dataclasses.replace(ctx.quant, offline_weights=True)
-    return dataclasses.replace(ctx, quant=qcfg, remat=False)
+    plan = ctx.plan.with_offline_weights() if ctx.plan is not None else None
+    return dataclasses.replace(ctx, quant=qcfg, plan=plan, remat=False)
+
+
+def save_serving_artifact(directory: str, params: dict, cfg: ArchConfig,
+                          policy) -> str:
+    """Write the deployment artifact: the policy-converted weights (PackedW
+    leaves in the on-disk artifact layout, QDQ'd bf16 elsewhere) PLUS the
+    policy itself, serialized into the checkpoint's ``extra.json`` — so an
+    artifact can never be served under a different placement than it was
+    packed with. ``params`` are the RAW trained weights; ``policy`` is a
+    QuantPolicy/QuantPlan (or a legacy QuantConfig via the uniform shim).
+    """
+    from repro.checkpoint import save_checkpoint
+
+    assert not packed_weight_bytes(params)[1], (
+        "save_serving_artifact expects RAW (unpacked) weights: an "
+        "already-packed tree may be in the kernel layout, which has no "
+        "inverse back to the on-disk artifact layout")
+    plan = lm.quant_plan(cfg, policy)
+    artifact = prepare_params_for_serving(params, cfg, plan,
+                                          kernel_layout=False)
+    extra = {"family": cfg.family,
+             "quant_policy": plan.policy.to_json_dict()}
+    return save_checkpoint(directory, 0, artifact, extra)
+
+
+def load_serving_artifact(directory: str, cfg: ArchConfig):
+    """Restore (serving_params, policy) written by
+    :func:`save_serving_artifact`. The policy is read FIRST and its
+    resolved plan rebuilds the packed/dense tree structure the arrays load
+    into; pass the params straight to :func:`serve` with a plan-carrying
+    ModelCtx (prepare is idempotent on the packed tree and only re-lays-out
+    K-major).
+    """
+    import json
+    import os
+
+    from repro.checkpoint import latest_step, load_checkpoint
+    from repro.core.policy import QuantPolicy
+
+    step = latest_step(directory)
+    assert step is not None, f"no serving artifact under {directory!r}"
+    with open(os.path.join(directory, f"step_{step:08d}", "extra.json")) as f:
+        extra = json.load(f)
+    policy = QuantPolicy.from_json_dict(extra["quant_policy"])
+    plan = lm.quant_plan(cfg, policy)
+    specs = lm.packed_overlay(lm.abstract_params(cfg), plan)
+    target = lm.realize_packed(
+        specs, lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype))
+    params, _ = load_checkpoint(directory, step, target)
+    return params, policy
 
 
 def packed_weight_bytes(params) -> tuple[int, int]:
@@ -189,7 +270,7 @@ def _ctx_cache_key(ctx: ModelCtx):
     mesh_key = None if shard.mesh is None else (
         tuple(shard.mesh.shape.items()), id(shard.mesh)
     )
-    return (ctx.quant, mesh_key,
+    return (ctx.quant, ctx.plan, ctx.scope, mesh_key,
             tuple(sorted((k, tuple(v)) for k, v in shard.rules.items())),
             str(ctx.param_dtype), str(ctx.compute_dtype), ctx.remat,
             ctx.attn_q_chunk, ctx.attn_k_chunk, ctx.attn_impl)
@@ -241,7 +322,7 @@ def serve(
     token. For heterogeneous request streams use :func:`serve_requests`.
     """
     sctx = serving_ctx(ctx)
-    params = prepare_params_for_serving(params, cfg, ctx.quant)
+    params = prepare_params_for_serving(params, cfg, ctx.plan or ctx.quant)
     kv_fmt = resolve_kv_format(cfg, ctx.quant, serve_cfg)
 
     logits, cache = _jit_prefill(cfg, sctx)(params, batch)
@@ -339,7 +420,7 @@ def serve_requests(
         f"continuous batching supports KV-cache families, got {cfg.family!r}"
     )
     sctx = serving_ctx(ctx)
-    params = prepare_params_for_serving(params, cfg, ctx.quant)
+    params = prepare_params_for_serving(params, cfg, ctx.plan or ctx.quant)
     kv_fmt = resolve_kv_format(cfg, ctx.quant, serve_cfg)
     prefill = _jit_prefill(cfg, sctx)
 

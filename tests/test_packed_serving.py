@@ -51,7 +51,7 @@ def test_packed_serving_matches_offline_qdq():
     packed_params = lm.pack_params_for_serving(params, CFG)
     logits, cache = lm.prefill(packed_params, {"tokens": tokens}, CFG, CTX)
 
-    # packed weights only cover the PACKABLE_KEYS matmuls; biases/norms are
+    # packed weights only cover the default-packable matmuls; biases/norms are
     # identical, so logits should agree to bf16 tolerance
     np.testing.assert_allclose(np.asarray(logits), np.asarray(ref_logits),
                                rtol=0.02, atol=0.02)

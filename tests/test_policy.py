@@ -1,0 +1,319 @@
+"""QuantPolicy resolution: rule precedence, glob matching against real
+param trees, preset goldens, policy-driven packing, and the back-compat
+guarantee — a uniform policy is BITWISE identical to the legacy global
+QuantConfig on every impl."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core.policy import (
+    PRESETS,
+    QuantPolicy,
+    QuantRule,
+    get_policy,
+    known_policy_spec,
+)
+from repro.core.qlinear import PackedW, QuantConfig, quantize_params_offline
+from repro.models import lm
+from repro.models.common import ModelCtx
+from repro.runtime.serve_loop import (
+    ServeConfig,
+    load_serving_artifact,
+    prepare_params_for_serving,
+    save_serving_artifact,
+    serve,
+    serving_ctx,
+)
+
+CFG = get_arch("qwen1.5-0.5b").reduced()            # dense family
+MOE_CFG = get_arch("phi3.5-moe-42b-a6.6b").reduced()
+
+
+def _ctx(plan=None, quant=None):
+    return ModelCtx(quant=quant if quant is not None else plan.base,
+                    plan=plan, remat=False, attn_q_chunk=32, attn_k_chunk=32)
+
+
+# ---------------------------------------------------------------------------
+# Rule semantics
+# ---------------------------------------------------------------------------
+
+
+def test_rule_precedence_later_wins():
+    pol = QuantPolicy(rules=(
+        QuantRule("*", fmt="hif4", impl="packed"),
+        QuantRule("*.attn.*", fmt="nvfp4"),
+        QuantRule("*.attn.wq", fmt="none"),
+    ))
+    assert pol.config_at("blocks.mlp.wg").fmt == "hif4"
+    assert pol.config_at("blocks.attn.wk").fmt == "nvfp4"
+    assert pol.config_at("blocks.attn.wq").fmt == "none"
+    # unset fields inherit from earlier rules
+    assert pol.config_at("blocks.attn.wq").impl == "packed"
+    # unmatched sites stay unquantized
+    assert not QuantPolicy(rules=(QuantRule("mlp.*", fmt="hif4"),)
+                           ).config_at("blocks.attn.wq").enabled
+
+
+def test_pattern_matches_trailing_subpath():
+    r = QuantRule("attn.wq")
+    assert r.matches("blocks.attn.wq") and r.matches("attn.wq")
+    assert not r.matches("blocks.xattn.wq")        # 'xattn' != '.attn'
+    assert QuantRule("moe.*").matches("blocks.moe.wg")
+    assert QuantRule("lm_head").matches("lm_head")
+    assert not QuantRule("lm_head").matches("blocks.attn.wq")
+
+
+# ---------------------------------------------------------------------------
+# Resolution against real param trees
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_dense_tree_sites_and_packing():
+    plan = lm.quant_plan(CFG, QuantConfig(fmt="hif4", impl="packed"))
+    paths = {s.path for s in plan.sites}
+    assert {"blocks.attn.wq", "blocks.attn.wo", "blocks.mlp.wg",
+            "blocks.mlp.wo", "embed", "lm_head"} <= paths
+    assert plan.packed_paths == {
+        "blocks.attn.wq", "blocks.attn.wk", "blocks.attn.wv",
+        "blocks.attn.wo", "blocks.mlp.wg", "blocks.mlp.wu", "blocks.mlp.wo",
+    }
+    # §IV default rules: sensitive sites unquantized, embed clamped
+    assert plan.at("lm_head").fmt == "none"
+    assert plan.at("embed").fmt == "none"
+    # tied embeddings: the lm_head site exists but has no offline artifact
+    assert CFG.tie_embeddings and not plan.site("lm_head").quantize_offline
+
+
+def test_resolve_moe_tree_excludes_experts_from_packing():
+    plan = lm.quant_plan(MOE_CFG, QuantConfig(fmt="hif4", impl="packed"))
+    assert plan.at("blocks.moe.router").fmt == "none"    # §IV-C default rule
+    assert plan.at("blocks.moe.wg").fmt == "hif4"        # experts quantize...
+    assert "blocks.moe.wg" not in plan.packed_paths      # ...but never pack
+    assert "blocks.attn.wq" in plan.packed_paths
+    # glob over the moe subtree flips the experts off in one rule
+    pol = QuantPolicy(rules=(QuantRule("*", fmt="hif4", impl="packed"),
+                             QuantRule("moe.*", fmt="none")))
+    plan2 = pol.resolve(lm.abstract_params(MOE_CFG), family=MOE_CFG.family)
+    assert plan2.at("blocks.moe.wg").fmt == "none"
+    assert plan2.at("blocks.attn.wq").fmt == "hif4"
+
+
+def test_preset_goldens():
+    for name in PRESETS:
+        assert known_policy_spec(name)
+    assert known_policy_spec("uniform:hif4")
+    assert not known_policy_spec("uniform:bogus")
+    assert not known_policy_spec("no-such-preset")
+
+    plan = lm.quant_plan(CFG, get_policy("paper-iv", impl="packed"))
+    assert plan.at("blocks.attn.wq").fmt == "hif4"
+    assert plan.at("blocks.attn.wq").impl == "packed"
+    assert plan.at("lm_head").fmt == "none"
+    assert plan.at("embed").fmt == "none"
+
+    plan = lm.quant_plan(CFG, get_policy("sensitive-fallback", impl="packed"))
+    assert plan.at("blocks.attn.wo").fmt == "none"
+    assert plan.at("blocks.mlp.wo").fmt == "none"
+    assert plan.at("blocks.attn.wq").fmt == "hif4"
+    assert "blocks.attn.wo" not in plan.packed_paths
+    assert "blocks.attn.wq" in plan.packed_paths
+
+    plan = lm.quant_plan(CFG, get_policy("nvfp4-baseline"))
+    assert plan.at("blocks.attn.wq").fmt == "nvfp4_pts"
+    assert not plan.packed_paths                   # no packed container
+
+    with pytest.raises(ValueError):
+        get_policy("no-such-preset")
+
+
+def test_policy_json_roundtrip():
+    pol = get_policy("sensitive-fallback", impl="pallas")
+    back = QuantPolicy.from_json_dict(
+        json.loads(json.dumps(pol.to_json_dict())))
+    assert back == pol
+
+
+def test_get_policy_json_file_honors_impl_and_kv(tmp_path):
+    """A policy file that only sets fmt must still serve under the
+    launcher's --impl/--kv-format: impl arrives as a base catch-all rule
+    (file rules still win) and kv fills in only when the file is silent."""
+    from repro.core.kvcache import KVCacheConfig
+
+    path = tmp_path / "pol.json"
+    path.write_text(json.dumps({"name": "file-pol", "rules": [
+        {"pattern": "*", "fmt": "hif4"},
+        {"pattern": "*.mlp.*", "fmt": "hif4", "impl": "qdq"},
+    ]}))
+    pol = get_policy(str(path), impl="packed", kv=KVCacheConfig("hif4"))
+    assert pol.config_at("blocks.attn.wq").impl == "packed"
+    assert pol.config_at("blocks.mlp.wg").impl == "qdq"   # file rule wins
+    assert pol.kv.kv_format == "hif4"
+    path.write_text(json.dumps({"name": "file-pol", "kv_format": "bf16",
+                                "rules": [{"pattern": "*", "fmt": "hif4"}]}))
+    assert get_policy(str(path), kv=KVCacheConfig("hif4")).kv.kv_format == "bf16"
+
+
+def test_plan_ctx_derives_quant_from_plan():
+    """ModelCtx(plan=plan) without an explicit quant must dispatch KV and
+    packed attention off the plan's attention-site config, not NO_QUANT."""
+    from repro.core.kvcache import KVCacheConfig
+
+    plan = lm.quant_plan(CFG, get_policy("paper-iv", impl="packed",
+                                         kv=KVCacheConfig("hif4")))
+    ctx = ModelCtx(plan=plan)
+    assert ctx.quant == plan.base
+    assert ctx.quant.impl == "packed" and ctx.quant.kv.kv_format == "hif4"
+
+
+# ---------------------------------------------------------------------------
+# Back-compat: uniform policy == legacy global config, bitwise, per impl
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("impl", ["qdq", "packed", "pallas"])
+def test_uniform_policy_bitwise_equals_legacy(impl):
+    """The uniform shim must reproduce the pre-policy paths exactly: same
+    serving artifact, same prefill logits, same decode-step logits — to
+    the bit, on every impl."""
+    qc = QuantConfig(fmt="hif4", impl=impl)
+    params = lm.init_params(CFG, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (2, 8), 0, CFG.vocab)
+
+    legacy_params = prepare_params_for_serving(params, CFG, qc)
+    plan = lm.quant_plan(CFG, QuantPolicy.uniform(qc))
+    policy_params = prepare_params_for_serving(params, CFG, plan)
+    for a, b in zip(jax.tree_util.tree_leaves(legacy_params),
+                    jax.tree_util.tree_leaves(policy_params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    lctx = serving_ctx(_ctx(quant=qc))
+    pctx = serving_ctx(_ctx(plan=plan))
+    l_logits, l_cache = lm.prefill(legacy_params, {"tokens": tokens}, CFG, lctx)
+    p_logits, p_cache = lm.prefill(policy_params, {"tokens": tokens}, CFG, pctx)
+    np.testing.assert_array_equal(np.asarray(l_logits), np.asarray(p_logits))
+
+    tok = jnp.argmax(l_logits, -1).astype(jnp.int32)
+    l_cache = lm.pad_cache(l_cache, CFG, 12)
+    p_cache = lm.pad_cache(p_cache, CFG, 12)
+    l2, _ = lm.decode_step(legacy_params, tok, l_cache, CFG, lctx)
+    p2, _ = lm.decode_step(policy_params, tok, p_cache, CFG, pctx)
+    np.testing.assert_array_equal(np.asarray(l2), np.asarray(p2))
+
+
+@pytest.mark.parametrize("impl", ["qdq", "packed"])
+def test_uniform_policy_serve_tokens_match_legacy(impl):
+    qc = QuantConfig(fmt="hif4", impl=impl)
+    params = lm.init_params(CFG, jax.random.PRNGKey(0))
+    prompts = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 8),
+                                            0, CFG.vocab)}
+    plan = lm.quant_plan(CFG, QuantPolicy.uniform(qc))
+    t_legacy = serve(CFG, params, prompts, _ctx(quant=qc),
+                     ServeConfig(max_new_tokens=6))
+    t_policy = serve(CFG, params, prompts, _ctx(plan=plan),
+                     ServeConfig(max_new_tokens=6))
+    np.testing.assert_array_equal(np.asarray(t_legacy), np.asarray(t_policy))
+
+
+# ---------------------------------------------------------------------------
+# Policy-driven packing + mixed-policy serving
+# ---------------------------------------------------------------------------
+
+
+def test_packing_decided_solely_by_policy():
+    """A rule flipping one site away from hif4/packed must un-pack exactly
+    that site — the packed leaf set IS the plan's packed set."""
+    params = lm.init_params(CFG, jax.random.PRNGKey(0))
+    plan = lm.quant_plan(CFG, get_policy("sensitive-fallback", impl="packed"))
+    sp = prepare_params_for_serving(params, CFG, plan)
+
+    def packed_leaf_paths(tree, prefix=()):
+        out = set()
+        for k, v in tree.items():
+            if isinstance(v, PackedW):
+                out.add(".".join(prefix + (k,)))
+            elif isinstance(v, dict):
+                out |= packed_leaf_paths(v, prefix + (k,))
+        return out
+
+    assert packed_leaf_paths(sp) == plan.packed_paths
+    # the bf16-fallback sites keep their ORIGINAL dense weights
+    np.testing.assert_array_equal(
+        np.asarray(sp["blocks"]["attn"]["wo"]),
+        np.asarray(params["blocks"]["attn"]["wo"]))
+    # and the mixed artifact serves end-to-end through the packed path
+    prompts = {"tokens": jax.random.randint(jax.random.PRNGKey(4), (2, 8),
+                                            0, CFG.vocab)}
+    toks = serve(CFG, sp, prompts, _ctx(plan=plan),
+                 ServeConfig(max_new_tokens=4))
+    assert toks.shape == (2, 4) and bool(jnp.all(toks >= 0))
+
+
+def test_paper_iv_serves_end_to_end_packed():
+    params = lm.init_params(CFG, jax.random.PRNGKey(0))
+    plan = lm.quant_plan(CFG, get_policy("paper-iv", impl="packed"))
+    sp = prepare_params_for_serving(params, CFG, plan)
+    assert isinstance(sp["blocks"]["attn"]["wq"], PackedW)
+    assert not isinstance(sp["embed"], PackedW)
+    prompts = {"tokens": jax.random.randint(jax.random.PRNGKey(4), (2, 8),
+                                            0, CFG.vocab)}
+    toks = serve(CFG, sp, prompts, _ctx(plan=plan),
+                 ServeConfig(max_new_tokens=4))
+    assert toks.shape == (2, 4)
+
+
+def test_offline_qdq_routes_through_plan():
+    """Satellite: the offline-PTQ predicate and the packing predicate are
+    one resolution — plan-driven quantize_params_offline must equal the
+    legacy structural path for the uniform policy."""
+    params = lm.init_params(CFG, jax.random.PRNGKey(0))
+    qc = QuantConfig(fmt="hif4", impl="qdq")
+    legacy = quantize_params_offline(params["blocks"], qc)
+    plan = lm.quant_plan(CFG, QuantPolicy.uniform(qc))
+    via_plan = quantize_params_offline(params["blocks"], qc, plan=plan,
+                                       prefix="blocks")
+    for a, b in zip(jax.tree_util.tree_leaves(legacy),
+                    jax.tree_util.tree_leaves(via_plan)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # ...and a per-site fmt flip reaches the offline artifact
+    pol = QuantPolicy(rules=(QuantRule("*", fmt="hif4", impl="qdq"),
+                             QuantRule("*.mlp.wg", fmt="none")))
+    plan2 = lm.quant_plan(CFG, pol)
+    mixed = quantize_params_offline(params["blocks"], qc, plan=plan2,
+                                    prefix="blocks")
+    np.testing.assert_array_equal(                  # flipped site untouched
+        np.asarray(mixed["mlp"]["wg"]), np.asarray(params["blocks"]["mlp"]["wg"]))
+    assert not np.array_equal(                      # quantized site changed
+        np.asarray(mixed["attn"]["wq"]), np.asarray(params["blocks"]["attn"]["wq"]))
+
+
+# ---------------------------------------------------------------------------
+# Artifact serialization: the policy rides inside the checkpoint
+# ---------------------------------------------------------------------------
+
+
+def test_serving_artifact_roundtrip(tmp_path):
+    params = lm.init_params(CFG, jax.random.PRNGKey(0))
+    policy = get_policy("sensitive-fallback", impl="packed")
+    # packed trees may already be in the (irreversible) kernel layout —
+    # the artifact writer must refuse them instead of corrupting the disk
+    with pytest.raises(AssertionError):
+        save_serving_artifact(str(tmp_path),
+                              prepare_params_for_serving(params, CFG, policy),
+                              CFG, policy)
+    save_serving_artifact(str(tmp_path), params, CFG, policy)
+    loaded, loaded_policy = load_serving_artifact(str(tmp_path), CFG)
+    assert loaded_policy == policy
+
+    plan = lm.quant_plan(CFG, loaded_policy)
+    prompts = {"tokens": jax.random.randint(jax.random.PRNGKey(4), (2, 8),
+                                            0, CFG.vocab)}
+    t_loaded = serve(CFG, loaded, prompts, _ctx(plan=plan),
+                     ServeConfig(max_new_tokens=4))
+    t_direct = serve(CFG, prepare_params_for_serving(params, CFG, plan),
+                     prompts, _ctx(plan=plan), ServeConfig(max_new_tokens=4))
+    np.testing.assert_array_equal(np.asarray(t_loaded), np.asarray(t_direct))

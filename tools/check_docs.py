@@ -11,7 +11,12 @@ whose prose makes cross-module claims about layouts and test anchors) for
     getattr — a renamed function or deleted module fails the lint;
   * repo-relative file references (``docs/FORMATS.md``,
     ``benchmarks/serve_throughput.py``, ``tests/test_engine.py``, ...):
-    the path must exist.
+    the path must exist;
+  * quantization-policy preset references (``--policy paper-iv``,
+    backticked ``uniform:<fmt>`` spellings, and backticked hyphenated
+    names on lines that mention a policy/preset): the name must resolve
+    in the ``repro.core.policy`` preset registry — docs advertising a
+    renamed or deleted preset fail CI.
 
 Runs as a section of ``benchmarks/run.py`` and as the tier-1 test
 ``tests/test_docs.py``, so stale docs break CI instead of readers.
@@ -37,6 +42,26 @@ SYMBOL_RE = re.compile(r"\brepro(?:\.[A-Za-z_][A-Za-z0-9_]*)+")
 PATH_RE = re.compile(
     r"\b(?:docs|tests|benchmarks|examples|tools|src)/[\w./-]+\.(?:py|md|json)\b"
 )
+
+# policy-preset references: `--policy <name>` CLI spellings anywhere, plus
+# backticked preset-shaped tokens (`uniform:<fmt>` always; hyphenated
+# names only on lines that talk about a policy/preset, so `--kv-format`
+# prose doesn't false-positive). JSON paths are policy files, not presets.
+POLICY_FLAG_RE = re.compile(r"--policy[ =]+([A-Za-z0-9_:.\-/]+)")
+POLICY_UNIFORM_RE = re.compile(r"`(uniform:[A-Za-z0-9_]+)`")
+POLICY_NAME_RE = re.compile(r"`([a-z0-9]+(?:-[a-z0-9]+)+)`")
+
+
+def _policy_candidates(text: str) -> set:
+    cands = set(POLICY_FLAG_RE.findall(text))
+    cands |= set(POLICY_UNIFORM_RE.findall(text))
+    for line in text.splitlines():
+        if "policy" in line.lower() or "preset" in line.lower():
+            for name in POLICY_NAME_RE.findall(line):
+                if not name.startswith("--"):
+                    cands.add(name)
+    return {c for c in cands
+            if not c.endswith(".json") and "/" not in c and "<" not in c}
 
 
 # Code packages whose MODULE DOCSTRINGS are linted like prose docs: kernel
@@ -117,6 +142,13 @@ def check_file(path: str, docstring_only: bool = False) -> list[str]:
     for ref in sorted(set(PATH_RE.findall(text))):
         if not os.path.exists(os.path.join(REPO, ref)):
             errors.append(f"{rel}: dead file reference `{ref}`")
+    from repro.core.policy import known_policy_spec
+
+    for name in sorted(_policy_candidates(text)):
+        if not known_policy_spec(name):
+            errors.append(
+                f"{rel}: unknown policy preset `{name}` (not in the "
+                f"repro.core.policy registry)")
     return errors
 
 
