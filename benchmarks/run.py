@@ -11,9 +11,12 @@
                                       kernel path — decode-step latency
                                       per kv_format — hif4 KV gated
                                       >= 0.9x bf16 on the fused
-                                      decode-attention path — prefill
-                                      latency, 4.5-bit weight + KV-cache
-                                      residency -> BENCH_serve.json)
+                                      decode-attention path — paged
+                                      scheduler gated >= 2x slot admission
+                                      at equal KV bytes, bitwise vs solo —
+                                      prefill latency, 4.5-bit weight +
+                                      KV-cache residency
+                                      -> BENCH_serve.json)
   roofline         -> §Roofline      (aggregates experiments/dryrun/*.json)
   check_docs       -> repo lint      (README/docs must not reference dead
                                       symbols or files)
@@ -89,6 +92,37 @@ def check_serve_gates():
             f"{name}: {r['decode_step_ms']} ms/step, "
             f"{r['packed_sites']}/{r['n_sites']} packed"
             for name, r in rows.items()))
+
+    # paged continuous batching: required whenever the sweep covered the
+    # packed impl with real hif4 KV — the page-pool capacity claim (>= 2x
+    # admission at equal KV bytes, bitwise vs solo) must be recorded and
+    # passing, not silently dropped by a benchmark refactor
+    assert "paged_serve" in record, (
+        "BENCH_serve.json lacks `paged_serve` — serve_throughput must "
+        "record the paged-vs-slot scheduler comparison")
+    paged = record["paged_serve"]
+    if paged is None:
+        assert "hif4" not in packed_kvs, (
+            "BENCH_serve.json has `paged_serve` = null although the sweep "
+            "covered packed + hif4 KV — the paged comparison was skipped, "
+            "not inapplicable")
+        print("[paged serve] n/a (narrowed sweep)")
+    else:
+        assert paged.get("bitwise_vs_solo") is True, (
+            "paged_serve.bitwise_vs_solo is not true — paged scheduling "
+            "must be bit-identical to solo serving")
+        ratio = paged.get("admission_ratio")
+        assert ratio is not None and ratio >= 2.0, (
+            f"paged_serve.admission_ratio = {ratio!r} (gate: >= 2x the "
+            f"slot scheduler's concurrency at the same KV byte budget)")
+        assert not paged.get("kv_format_fallback"), (
+            "paged_serve ran on a fallen-back KV format — the pool is "
+            "HiF4-only, this row is mislabeled")
+        print(f"[paged serve] {paged['max_concurrent_paged']} vs "
+              f"{paged['max_concurrent_slot']} concurrent "
+              f"({ratio}x) at {paged['pool_bytes']} KV bytes, "
+              f"{paged['shared_page_hits']} shared-page hits, "
+              f"{paged['preemptions']} preemptions, bitwise vs solo")
 
 
 def main():

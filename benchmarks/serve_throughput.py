@@ -22,6 +22,10 @@ bytes/token, and scan decode must amortize dispatch):
     sensitive-fallback served through their resolved per-site plans):
     decode-step latency + weight residency per policy, recorded as
     ``policy_rows`` and required by benchmarks/run.py
+  * paged continuous batching (``paged_serve``): the page-pool scheduler
+    vs the whole-slot scheduler on a mixed-length shared-prefix trace at
+    the SAME KV byte budget — must admit >= 2x the concurrent sequences,
+    bitwise-identically to solo serving; required by benchmarks/run.py
 
 Emits ``BENCH_serve.json`` next to this file and prints a table.
 
@@ -45,10 +49,12 @@ from repro.models.common import ModelCtx
 from repro.runtime.serve_loop import (
     ServeConfig,
     kv_cache_bytes,
+    kv_format_fallback,
     packed_weight_bytes,
     prepare_params_for_serving,
     resolve_kv_format,
     serve,
+    serve_requests,
 )
 
 OUT_PATH = os.path.join(os.path.dirname(__file__), "BENCH_serve.json")
@@ -242,6 +248,95 @@ def policy_comparison(cfg, params, *, batch, prompt_len, new_tokens,
     return rows, mixed_differs
 
 
+PAGED_TRACE = {
+    "page_tokens": 16,
+    "budget": 8,
+    "prefix_len": 24,
+    "tail_lens": (8, 12, 16, 8, 12, 16, 80),   # mixed lengths, long one last
+    "slot_slots": 2,                            # whole-slot byte baseline
+    "decode_chunk": 2,
+}
+
+
+def paged_serve_comparison(cfg, params, ctx):
+    """Paged-vs-slot scheduler on a mixed-length shared-prefix trace, at the
+    SAME KV byte budget (the claim the page pool exists for).
+
+    The whole-slot scheduler must reserve max-capacity slots, so a 2-slot
+    budget serves 2 sequences at a time no matter how short most prompts
+    are. The paged scheduler gets exactly those bytes as a page pool and
+    admits by actual page demand, sharing the common 24-token prefix pages
+    COW; concurrency is counted post-provisioning (sequences really
+    decoding together). Per-request outputs are checked BITWISE against
+    solo serving (same page-size KV tiling) — paging must buy admission,
+    never bits.
+    """
+    import dataclasses
+
+    t = PAGED_TRACE
+    P, budget = t["page_tokens"], t["budget"]
+    # mixed prompt lengths (32/36/40/104) need a flash chunk dividing them
+    # all; the same ctx serves slot, paged, AND solo — parity stays bitwise
+    ctx = dataclasses.replace(ctx, attn_q_chunk=4, attn_k_chunk=4)
+    prefix = jax.random.randint(jax.random.PRNGKey(7), (t["prefix_len"],),
+                                0, cfg.vocab)
+    reqs = [jnp.concatenate([prefix, jax.random.randint(
+        jax.random.PRNGKey(40 + i), (n,), 0, cfg.vocab)])
+        for i, n in enumerate(t["tail_lens"])]
+    cap = max(int(r.shape[0]) for r in reqs) + budget
+    a = cfg.attn
+    per_tok = kvcache.kv_bytes_per_token(
+        a.n_kv_heads, a.d_head, "hif4") * cfg.n_layers
+    page_bytes = kvcache.page_nbytes(a.n_kv_heads, a.d_head, P, cfg.n_layers)
+    slot_bytes = t["slot_slots"] * cap * per_tok
+    kv_pages = slot_bytes // page_bytes
+    assert kv_pages * page_bytes == slot_bytes, (
+        "trace sizing must make the byte budgets exactly equal")
+
+    sc_slot = ServeConfig(max_new_tokens=budget,
+                          decode_chunk=t["decode_chunk"], kv_format="hif4",
+                          cache_capacity=cap)
+    slot_stats: dict = {}
+    serve_requests(cfg, params, reqs, ctx, sc_slot,
+                   slots=t["slot_slots"], stats=slot_stats)
+
+    sc_paged = dataclasses.replace(sc_slot, kv_pages=int(kv_pages),
+                                   kv_page_tokens=P)
+    paged_stats: dict = {}
+    res_paged = serve_requests(cfg, params, reqs, ctx, sc_paged,
+                               slots=len(reqs), stats=paged_stats)
+
+    # bitwise parity vs solo serving under the same KV-tile partition
+    # (tiles = pages; capacity is already a page multiple here)
+    assert cap % P == 0
+    solo_ctx = dataclasses.replace(ctx, attn_kv_block=P)
+    sc_solo = ServeConfig(max_new_tokens=budget, kv_format="hif4",
+                          cache_capacity=cap)
+    bitwise = True
+    for i, r in enumerate(reqs):
+        solo = serve(cfg, params, {"tokens": r[None]}, solo_ctx, sc_solo)
+        bitwise = bitwise and bool(jnp.array_equal(res_paged[i], solo[0]))
+
+    return {
+        "page_tokens": P,
+        "kv_pages": int(kv_pages),
+        "pool_bytes": int(slot_bytes),
+        "prompt_lens": [int(r.shape[0]) for r in reqs],
+        "shared_prefix_len": t["prefix_len"],
+        "new_tokens": budget,
+        "max_concurrent_slot": slot_stats["max_concurrent"],
+        "max_concurrent_paged": paged_stats["max_concurrent"],
+        "admission_ratio": round(paged_stats["max_concurrent"]
+                                 / max(slot_stats["max_concurrent"], 1), 3),
+        "shared_page_hits": paged_stats["shared_page_hits"],
+        "preemptions": paged_stats["preemptions"],
+        "lru_evictions": paged_stats["evictions"],
+        "peak_live_pages": paged_stats["peak_live_pages"],
+        "bitwise_vs_solo": bitwise,
+        "kv_format_fallback": kv_format_fallback(cfg, ctx.quant, sc_paged),
+    }
+
+
 def bench_impl(cfg, params, ctx, *, batch, prompt_len, new_tokens,
                kv_format="bf16", full_cfg=None):
     impl = ctx.quant.impl
@@ -326,18 +421,24 @@ def main(argv=None):
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
 
     results = []
+    kv_fallbacks = []
     for impl in args.impl:
         ctx = ModelCtx(quant=QuantConfig(fmt="hif4", impl=impl), remat=False,
                        attn_q_chunk=32, attn_k_chunk=32)
         # hif4 rides the packed impl only, and only where resolve_kv_format
         # (the single source of truth on family support) makes it real —
-        # a falling-back combination must not emit a mislabeled row
-        kv_formats = args.kv_format if impl == "packed" else ["bf16"]
-        kv_formats = [
-            kvf for kvf in kv_formats
-            if resolve_kv_format(cfg, ctx.quant,
-                                 ServeConfig(kv_format=kvf)) == kvf
-        ]
+        # a falling-back combination must not emit a mislabeled row, and
+        # every dropped combination is recorded + printed loudly
+        kv_formats = []
+        for kvf in (args.kv_format if impl == "packed" else ["bf16"]):
+            resolved = resolve_kv_format(cfg, ctx.quant,
+                                         ServeConfig(kv_format=kvf),
+                                         verbose=True)
+            if resolved == kvf:
+                kv_formats.append(kvf)
+            else:
+                kv_fallbacks.append({"impl": impl, "requested": kvf,
+                                     "resolved": resolved})
         for kvf in kv_formats:
             r = bench_impl(cfg, params, ctx, batch=args.batch,
                            prompt_len=args.prompt_len,
@@ -404,6 +505,26 @@ def main(argv=None):
                   f"({r['bytes_per_value']:.4f} B/value, "
                   f"{r['packed_sites']}/{r['n_sites']} sites packed)")
 
+    # Paged continuous batching on a mixed-length shared-prefix trace:
+    # the page pool must buy >= 2x the whole-slot scheduler's concurrency
+    # at the same KV byte budget, bitwise-identically to solo serving.
+    # Only meaningful with the packed impl + real hif4 KV; benchmarks/run.py
+    # fails loudly if the row is absent while both were swept.
+    paged_serve = None
+    if any(r["impl"] == "packed" and r["kv_format"] == "hif4"
+           for r in results):
+        ctx = ModelCtx(quant=QuantConfig(fmt="hif4", impl="packed"),
+                       remat=False, attn_q_chunk=32, attn_k_chunk=32)
+        serving_params = prepare_params_for_serving(params, cfg, ctx.quant)
+        paged_serve = paged_serve_comparison(cfg, serving_params, ctx)
+        print(f"paged serve: {paged_serve['max_concurrent_paged']} vs "
+              f"{paged_serve['max_concurrent_slot']} concurrent "
+              f"({paged_serve['admission_ratio']}x) at "
+              f"{paged_serve['pool_bytes']} KV bytes, "
+              f"{paged_serve['shared_page_hits']} shared-page hits, "
+              f"{paged_serve['preemptions']} preemptions, "
+              f"bitwise_vs_solo={paged_serve['bitwise_vs_solo']}")
+
     record = {
         "arch": args.arch + "-smoke",
         "batch": args.batch,
@@ -418,6 +539,8 @@ def main(argv=None):
         "hif4_over_bf16_kv_decode": hif4_over_bf16,
         "policy_rows": policy_rows,
         "paper_iv_over_uniform_decode": paper_iv_over_uniform,
+        "paged_serve": paged_serve,
+        "kv_format_fallbacks": kv_fallbacks,
         "results": results,
     }
     with open(OUT_PATH, "w") as f:
@@ -462,6 +585,17 @@ def main(argv=None):
     elif policy_rows is not None:
         assert (policy_rows["sensitive-fallback"]["packed_sites"]
                 == policy_rows["uniform:hif4"]["packed_sites"]), policy_rows
+
+    # capacity + exactness gate on the paged scheduler: same KV bytes must
+    # admit at least 2x the sequences, and paging must never change bits
+    if paged_serve is not None:
+        assert paged_serve["bitwise_vs_solo"], (
+            "paged continuous batching diverged from solo serving — paging "
+            "must buy admission, never bits")
+        assert paged_serve["admission_ratio"] >= 2.0, (
+            f"paged scheduler admitted only "
+            f"{paged_serve['admission_ratio']}x the slot scheduler's "
+            f"sequences at the same byte budget (gate: >= 2x)")
 
     by_kv = {r["kv_format"]: r for r in results}
     if ("hif4" in by_kv and "bf16" in by_kv

@@ -79,6 +79,8 @@ from repro.kernels.bfp_matmul import bfp_matmul_quantized, select_block_sizes
 from repro.kernels.fused_attention import (
     fused_decode_attention,
     fused_decode_attention_xla,
+    fused_paged_decode_attention,
+    fused_paged_decode_attention_xla,
     kernel_compatible,
     select_kv_block,
 )
@@ -291,6 +293,9 @@ def attention_decode(
     n_kv_heads: int,
     d_head: int,
     ectx: EngineCtx = DEFAULT_ENGINE,
+    *,
+    pages: Optional[jnp.ndarray] = None,   # (B, max_pages) page table
+    block_kv: Optional[int] = None,        # contiguous KV tile override
 ) -> jnp.ndarray:
     """Decode attention against a PACKED KV cache, dispatched like matmul.
 
@@ -301,14 +306,32 @@ def attention_decode(
     XLA twin, whose bf16 working set is still ONE KV tile, never the cache.
     bf16 caches never reach this function (``attn_decode`` keeps the dense
     path untouched). See docs/EXECUTION.md for the full matrix.
+
+    With ``pages`` set, ``k_cache``/``v_cache`` are page-POOL leaves
+    ((n_pages, F, P), ``repro.core.kvcache.init_page_pool``) and the same
+    dispatch picks the paged kernel / paged XLA twin — the KV-tile grid
+    axis walks the page table instead of a contiguous token axis.
+    ``block_kv`` overrides the contiguous tile size (the paged tile IS
+    the page size); serving threads it from ``ModelCtx.attn_kv_block`` so
+    a solo reference run can align its tile partition with a paged run
+    for bitwise comparison.
     """
-    if (_fused_attn_ok(ectx.quant, k_cache, n_kv_heads, d_head)
-            and not ectx.resolved_interpret()):
+    fused = (_fused_attn_ok(ectx.quant, k_cache, n_kv_heads, d_head)
+             and not ectx.resolved_interpret())
+    if pages is not None:
+        if fused:
+            return fused_paged_decode_attention(
+                q, k_cache, v_cache, pages, length,
+                n_kv_heads=n_kv_heads, d_head=d_head, interpret=False)
+        return fused_paged_decode_attention_xla(
+            q, k_cache, v_cache, pages, length, n_kv_heads, d_head)
+    if fused:
         return fused_decode_attention(
             q, k_cache, v_cache, length,
-            n_kv_heads=n_kv_heads, d_head=d_head, interpret=False)
+            n_kv_heads=n_kv_heads, d_head=d_head, block_kv=block_kv,
+            interpret=False)
     return fused_decode_attention_xla(
-        q, k_cache, v_cache, length, n_kv_heads, d_head)
+        q, k_cache, v_cache, length, n_kv_heads, d_head, block_kv=block_kv)
 
 
 def attention_dispatch_info(quant: QuantConfig, k_cache: dict, *,

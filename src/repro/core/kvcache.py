@@ -46,11 +46,39 @@ Dequantize-on-read is exact in bf16 (the HiF4 reconstruction product
 carries <= 6 significant bits; see :func:`repro.core.hif4.dequantize_groups`),
 so a packed cache decodes exactly like a bf16 cache holding the quantized
 values.
+
+Paged pool
+----------
+
+On top of the contiguous kernel-tile cache this module provides a PAGED
+pool (docs/FORMATS.md "Paged KV-cache pool"): pages are ``page_tokens``-
+wide blocks of the token axis of the kernel-tile layout, so one page is a
+self-contained run of packed 64-groups + meta + tail columns for
+``page_tokens`` tokens of one sequence, across all layers:
+
+    codes (L, n_pages, G*32, P) uint8
+    meta  (L, n_pages, G,    P) uint32
+    tail  (L, n_pages, T,    P) bf16
+
+Per-token grouping means a page's bytes depend only on its own tokens'
+K/V vectors — two sequences with the same token prefix produce the SAME
+page bytes, which is what makes copy-on-write prefix sharing exact
+(shared prefixes are shared bytes, verified byte-for-byte at share time).
+Device-side helpers (:func:`init_page_pool`, :func:`split_pages`,
+:func:`gather_pages`, :func:`scatter_pages`, :func:`copy_page`,
+:func:`append_token_paged`) are pure jit-safe array ops; the host-side
+:class:`PagePool` tracks allocation, refcounts, the full-page token-hash
+index, the partial-tail registry, and the LRU cache of retired prefix
+pages. Page id 0 is RESERVED as a scratch page: retired decode slots keep
+a zero page table, so their (masked, never read) appends land in page 0
+instead of corrupting reallocated pages.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
+from collections import OrderedDict
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -289,6 +317,267 @@ def append_token(pcache: dict, kv_new: jnp.ndarray, pos: jnp.ndarray) -> dict:
             return jax.lax.dynamic_update_slice(full, one.astype(full.dtype), idx)
 
     return {key: write(pcache[key], new[key]) for key in ("codes", "meta", "tail")}
+
+
+# ---------------------------------------------------------------------------
+# Paged pool: device-side helpers (pure array ops, jit-safe)
+# ---------------------------------------------------------------------------
+
+DEFAULT_PAGE_TOKENS = 64
+
+
+def pages_for_tokens(n_tokens: int, page_tokens: int) -> int:
+    """Pages needed to hold ``n_tokens`` token columns."""
+    return -(-n_tokens // page_tokens)
+
+
+def page_nbytes(n_kv_heads: int, d_head: int, page_tokens: int,
+                n_layers: int) -> int:
+    """Resident bytes of ONE pool page (K + V, all layers)."""
+    return n_layers * page_tokens * kv_bytes_per_token(
+        n_kv_heads, d_head, "hif4")
+
+
+def init_page_pool(n_layers: int, n_kv_heads: int, d_head: int,
+                   n_pages: int, page_tokens: int) -> dict:
+    """Zero-initialized fixed-size page pool {"k","v"} of packed leaves.
+
+    Leaves are kernel-tile blocks with a leading page axis:
+    codes (L, n_pages, G*32, P), meta (L, n_pages, G, P),
+    tail (L, n_pages, T, P). Page 0 is the reserved scratch page
+    (:class:`PagePool` never allocates it); zero pages decode to zeros,
+    which masked positions never read.
+    """
+    g, t = split_features(n_kv_heads, d_head)
+
+    def leaves():
+        return {
+            "codes": jnp.zeros((n_layers, n_pages, g * 32, page_tokens),
+                               jnp.uint8),
+            "meta": jnp.zeros((n_layers, n_pages, g, page_tokens),
+                              jnp.uint32),
+            "tail": jnp.zeros((n_layers, n_pages, t, page_tokens),
+                              jnp.bfloat16),
+        }
+
+    return {"k": leaves(), "v": leaves()}
+
+
+def pool_page_tokens(pool_t: dict) -> int:
+    """Tokens per page P of pool leaves (any leading axes, tokens last)."""
+    return pool_t["meta"].shape[-1]
+
+
+def pool_n_pages(pool_t: dict) -> int:
+    """Total pages in a (L, n_pages, ..., P) pool tensor."""
+    return pool_t["meta"].shape[1]
+
+
+def split_pages(pk: dict, page_tokens: int) -> dict:
+    """Contiguous kernel-layout leaves (L, 1, F, S) -> pages (L, n, F, P).
+
+    The single-sequence packed cache a prefill produces, cut into
+    page-pool blocks (token axis padded to a page multiple with zeros —
+    inert under the length mask). A pure bit move: page j holds exactly
+    token columns [j*P, (j+1)*P).
+    """
+    pk = to_kernel_layout(pk)
+
+    def cut(a):
+        l, b, f, s = a.shape
+        assert b == 1, "split_pages takes a single-sequence (B=1) cache"
+        n = pages_for_tokens(s, page_tokens)
+        pad = n * page_tokens - s
+        a = a[:, 0]
+        if pad:
+            a = jnp.pad(a, ((0, 0), (0, 0), (0, pad)))
+        return jnp.moveaxis(
+            a.reshape(l, f, n, page_tokens), 2, 1)       # (L, n, F, P)
+
+    return {key: cut(pk[key]) for key in ("codes", "meta", "tail")}
+
+
+def gather_pages(pool_t: dict, page_ids: jnp.ndarray) -> dict:
+    """Pool leaves (L, NP, F, P) -> the selected pages (L, n, F, P)."""
+    return {key: jnp.take(a, page_ids, axis=1)
+            for key, a in pool_t.items()}
+
+
+def scatter_pages(pool_t: dict, pages: dict, page_ids: jnp.ndarray) -> dict:
+    """Write page blocks (L, n, F, P) into the pool at ``page_ids``."""
+    return {key: pool_t[key].at[:, page_ids].set(
+        pages[key].astype(pool_t[key].dtype))
+        for key in ("codes", "meta", "tail")}
+
+
+def copy_page(pool_t: dict, src: int, dst) -> dict:
+    """Duplicate one page's bytes (the copy-on-write primitive)."""
+    return {key: a.at[:, dst].set(a[:, src]) for key, a in pool_t.items()}
+
+
+def append_token_paged(pool_t: dict, kv_new: jnp.ndarray, pos: jnp.ndarray,
+                       pages: jnp.ndarray) -> dict:
+    """Quantize kv_new (B, 1, Hkv, Dh) and write one token column through
+    the page table.
+
+    ``pool_t`` is the PER-LAYER pool view (NP, F, P) the layer scan sees;
+    ``pages`` (B, max_pages) maps each slot's logical page index to a pool
+    page id; ``pos`` (B,) is the slot's token count. The write lands at
+    (pages[b, pos_b // P], :, pos_b % P). Logical indices beyond the table
+    clamp to its last entry — retired slots keep an all-zero table, so
+    their (masked, never read) writes land in the reserved scratch page 0.
+    The scheduler guarantees every ACTIVE slot appends into a page it
+    exclusively owns (copy-on-write happens before the chunk), so scatter
+    indices of live slots never collide.
+    """
+    p = pool_page_tokens(pool_t)
+    maxp = pages.shape[1]
+    new = to_kernel_layout(quantize_kv(kv_new))          # (B, F, 1) leaves
+    idx = jnp.minimum(pos // p, maxp - 1)
+    pids = jnp.take_along_axis(pages, idx[:, None], axis=1)[:, 0]   # (B,)
+    offs = pos % p
+
+    def write(full, one):
+        return full.at[pids, :, offs].set(one[..., 0].astype(full.dtype))
+
+    return {key: write(pool_t[key], new[key])
+            for key in ("codes", "meta", "tail")}
+
+
+# ---------------------------------------------------------------------------
+# Paged pool: host-side allocator / sharing metadata
+# ---------------------------------------------------------------------------
+
+
+class PagePool:
+    """Host-side bookkeeping for the fixed-size device page pool.
+
+    Tracks, per pool page id:
+
+    * a free list and per-page refcounts (``alloc`` / ``retain`` /
+      ``release``);
+    * ``owner`` — the one holder allowed to append IN PLACE (appends by
+      any other holder, or into any page with refcount > 1 it does not
+      own, must copy-on-write first);
+    * the FULL-page token-hash index (``register_full`` /
+      ``lookup_full``): key = the cumulative token tuple through the end
+      of the page, so equal keys imply equal page bytes (per-token
+      grouping) and chained prefixes dedup page-by-page;
+    * the partial-tail registry (``register_partial`` /
+      ``lookup_partial``): live, still-appendable tail pages keyed by
+      their cumulative prefix + current contents, so a new prompt whose
+      tail is a prefix of a live page's contents can share it (and COW
+      on its first divergent append);
+    * the LRU cache of retired hashed pages (``cached``): a released
+      full page parks here instead of freeing, is revived by a later
+      prefix hit, and is evicted least-recently-used when ``alloc`` runs
+      dry.
+
+    Page id 0 is reserved as the scratch page retired decode slots write
+    into (their page tables are zeroed); it is never handed out.
+    """
+
+    def __init__(self, n_pages: int, page_tokens: int):
+        assert n_pages >= 2, "pool needs the scratch page + 1 usable page"
+        self.n_pages = n_pages
+        self.page_tokens = page_tokens
+        self.free: list[int] = list(range(n_pages - 1, 0, -1))
+        self.ref: dict[int, int] = {}
+        self.owner: dict[int, object] = {}
+        self.full_hash: dict[tuple, int] = {}
+        self.key_of: dict[int, tuple] = {}
+        self.partials: dict[int, dict] = {}      # pid -> {"key", "toks"}
+        self.cached: "OrderedDict[int, None]" = OrderedDict()
+        self.evictions = 0
+        self.shared_hits = 0
+
+    # -- capacity -----------------------------------------------------------
+
+    @property
+    def usable_pages(self) -> int:
+        return self.n_pages - 1                  # minus the scratch page
+
+    def available(self) -> int:
+        """Pages an alloc() could return right now (free + evictable)."""
+        return len(self.free) + len(self.cached)
+
+    def live_pages(self) -> int:
+        return len(self.ref)
+
+    # -- alloc / refcount ---------------------------------------------------
+
+    def alloc(self, owner=None) -> Optional[int]:
+        """Take a page: free list first, else evict the LRU cached page."""
+        if self.free:
+            pid = self.free.pop()
+        elif self.cached:
+            pid, _ = self.cached.popitem(last=False)
+            key = self.key_of.pop(pid, None)
+            if key is not None:
+                self.full_hash.pop(key, None)
+            self.evictions += 1
+        else:
+            return None
+        self.ref[pid] = 1
+        self.partials.pop(pid, None)
+        if owner is not None:
+            self.owner[pid] = owner
+        return pid
+
+    def retain(self, pid: int):
+        """Add a holder; revives a page parked in the retired-LRU cache."""
+        if pid in self.cached:
+            del self.cached[pid]
+            self.ref[pid] = 1
+        else:
+            self.ref[pid] += 1
+
+    def release(self, pid: int, keep_cached: bool = True):
+        """Drop a holder. A hashed full page with no holders parks in the
+        LRU cache (still shareable, evictable); anything else frees."""
+        self.ref[pid] -= 1
+        if self.ref[pid] > 0:
+            return
+        del self.ref[pid]
+        self.owner.pop(pid, None)
+        self.partials.pop(pid, None)
+        if keep_cached and pid in self.key_of:
+            self.cached[pid] = None
+        else:
+            key = self.key_of.pop(pid, None)
+            if key is not None:
+                self.full_hash.pop(key, None)
+            self.free.append(pid)
+
+    # -- sharing indexes ----------------------------------------------------
+
+    def register_full(self, pid: int, key: tuple):
+        """Index an immutable full page by its cumulative token key
+        (first writer wins; duplicates simply stay unshared)."""
+        self.partials.pop(pid, None)
+        if key in self.full_hash or pid in self.key_of:
+            return
+        self.full_hash[key] = pid
+        self.key_of[pid] = key
+
+    def lookup_full(self, key: tuple) -> Optional[int]:
+        return self.full_hash.get(key)
+
+    def register_partial(self, pid: int, prefix_key: tuple, toks: list):
+        """(Re)index a live tail page: ``prefix_key`` is the cumulative
+        token tuple before the page, ``toks`` its current contents."""
+        if pid not in self.key_of:
+            self.partials[pid] = {"key": prefix_key, "toks": list(toks)}
+
+    def lookup_partial(self, prefix_key: tuple,
+                       seg: list) -> Optional[int]:
+        """A live page whose prefix matches and whose contents start with
+        ``seg`` (the new prompt's tail) — shareable with COW on append."""
+        for pid, ent in self.partials.items():
+            if (ent["key"] == prefix_key and len(seg) <= len(ent["toks"])
+                    and ent["toks"][: len(seg)] == list(seg)):
+                return pid
+        return None
 
 
 # ---------------------------------------------------------------------------

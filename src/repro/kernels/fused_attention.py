@@ -41,6 +41,21 @@ dot, in that order — and the three paths are BITWISE equal there
 sums and are float-close, mirroring the single-K-step anchor of
 ``tests/test_fused_matmul.py``). NaN metadata (E6M2 0xFF) propagates
 identically on every path.
+
+PAGED variant: when the KV cache lives in the fixed-size page pool of
+``repro.core.kvcache`` (leaves (n_pages, F, P), per-slot page table — see
+docs/FORMATS.md "Paged KV-cache pool"), the same recurrence runs with the
+KV-tile grid axis walking the page table instead of a contiguous token
+axis. :func:`fused_paged_decode_attention` prefetches the (B, max_pages)
+table as a scalar-prefetch operand and gathers each tile's pool page in
+the BlockSpec index map; :func:`fused_paged_decode_attention_xla` is its
+bitwise twin (a scan whose tile loader is a page gather instead of a
+token slice). Because a fully masked tile is an exact no-op of the
+recurrence (``exp(NEG_INF - m)`` underflows to f32 zero and the
+correction factor is exactly 1.0), paged attention over pages of P
+tokens is BITWISE equal to the contiguous kernel/twin run with
+``block_kv=P`` on a capacity padded to a page multiple — the parity
+``tests/test_paged_kv.py`` pins.
 """
 from __future__ import annotations
 
@@ -251,6 +266,159 @@ def fused_decode_attention_xla(
         s = jnp.einsum("bgrd,bkgd->bgrk", qf, kblk,
                        preferred_element_type=jnp.float32) / (d_head ** 0.5)
         valid = (ki * ck + positions)[None, :] < length[:, None]     # (B, ck)
+        s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        corr = jnp.exp(m - m_new)
+        e = jnp.exp(s - m_new)
+        l_new = l * corr + jnp.sum(e, axis=-1, keepdims=True)
+        p = (e / l_new).astype(vblk.dtype)
+        pv = jnp.einsum("bgrk,bkgd->bgrd", p, vblk,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * (l * corr / l_new) + pv
+        return (m_new, l_new, acc_new), None
+
+    init = (
+        jnp.full((B, n_kv_heads, rep, 1), NEG_INF, jnp.float32),
+        jnp.zeros((B, n_kv_heads, rep, 1), jnp.float32),
+        jnp.zeros((B, n_kv_heads, rep, D), jnp.float32),
+    )
+    if n_tiles == 1:
+        (_, _, acc), _ = tile(init, 0)
+    else:
+        (_, _, acc), _ = jax.lax.scan(tile, init, jnp.arange(n_tiles))
+    return acc.reshape(B, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Paged variant: the KV-tile grid axis walks a per-slot page table
+# ---------------------------------------------------------------------------
+
+
+def _fused_paged_kernel(pt_ref, q_ref, len_ref, kc_ref, km_ref, vc_ref,
+                        vm_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                        d_head: int, n_tiles: int, block_kv: int):
+    # Scalar-prefetch kernels receive the prefetched operand first; the
+    # page-table gather happened in the BlockSpec index maps, so the body
+    # is EXACTLY the contiguous kernel (same ops, same order -> bitwise).
+    del pt_ref
+    _fused_decode_kernel(q_ref, len_ref, kc_ref, km_ref, vc_ref, vm_ref,
+                         o_ref, m_ref, l_ref, acc_ref, d_head=d_head,
+                         n_tiles=n_tiles, block_kv=block_kv)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_kv_heads", "d_head", "interpret"),
+)
+def fused_paged_decode_attention(
+    q: jax.Array,            # (B, H, D) bf16 — the single query token
+    k_pool: dict,            # page-pool packed leaves (n_pages, F, P)
+    v_pool: dict,
+    pages: jax.Array,        # (B, max_pages) int32 per-slot page table
+    length: jax.Array,       # (B,) valid cache prefix per slot
+    *,
+    n_kv_heads: int,
+    d_head: int,
+    interpret: bool = False,
+) -> jax.Array:
+    """Flash decode-attention off the PAGED 4.5-bit pool -> (B, H, D).
+
+    Grid (slot, head block, logical page): the page table rides in as a
+    scalar-prefetch operand and the KV BlockSpec index maps read
+    ``pages[b, k]`` to pick tile k's pool page, so each grid step DMAs
+    one page's packed payload — a gather walk over the table instead of
+    a contiguous token axis. The tile width IS the page size, logical
+    page index k supplies the positions for the length mask, and unused
+    trailing table entries (zeros -> the scratch page) are fully masked
+    exact no-ops, so the result is bitwise equal to the contiguous
+    kernel at ``block_kv=P`` on a page-multiple capacity.
+    """
+    B, H, D = q.shape
+    assert D == d_head and kernel_compatible(k_pool, n_kv_heads, d_head)
+    P = kvcache.pool_page_tokens(k_pool)
+    n_tiles = pages.shape[1]
+    rep = H // n_kv_heads
+    hb = heads_per_block(d_head)
+    grid = (B, n_kv_heads // hb, n_tiles)
+    assert KV_GRID_AXIS == len(grid) - 1
+
+    qf = q.reshape(B, n_kv_heads, rep, D)
+    len2 = length.astype(jnp.int32).reshape(B, 1)
+    kernel = functools.partial(_fused_paged_kernel, d_head=d_head,
+                               n_tiles=n_tiles, block_kv=P)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, hb, rep, D), lambda b, h, k, pt: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1), lambda b, h, k, pt: (b, 0)),
+            pl.BlockSpec((1, hb * D // 2, P),
+                         lambda b, h, k, pt: (pt[b, k], h, 0)),
+            pl.BlockSpec((1, hb * D // 64, P),
+                         lambda b, h, k, pt: (pt[b, k], h, 0)),
+            pl.BlockSpec((1, hb * D // 2, P),
+                         lambda b, h, k, pt: (pt[b, k], h, 0)),
+            pl.BlockSpec((1, hb * D // 64, P),
+                         lambda b, h, k, pt: (pt[b, k], h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, hb, rep, D),
+                               lambda b, h, k, pt: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((hb, rep, 128), jnp.float32),     # running max
+            pltpu.VMEM((hb, rep, 128), jnp.float32),     # running denom
+            pltpu.VMEM((hb, rep, D), jnp.float32),       # normalized acc
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, n_kv_heads, rep, D), jnp.float32),
+        interpret=interpret,
+    )(pages.astype(jnp.int32), qf, len2, k_pool["codes"], k_pool["meta"],
+      v_pool["codes"], v_pool["meta"])
+    return out.reshape(B, H, D).astype(q.dtype)
+
+
+def fused_paged_decode_attention_xla(
+    q: jax.Array,            # (B, H, D)
+    k_pool: dict,            # page-pool packed leaves (n_pages, F, P)
+    v_pool: dict,
+    pages: jax.Array,        # (B, max_pages) int32 per-slot page table
+    length: jax.Array,       # (B,)
+    n_kv_heads: int,
+    d_head: int,
+) -> jax.Array:
+    """The paged kernel's recurrence as straight-line XLA: the off-TPU
+    serving twin, and the executable form for staging-tail pools.
+
+    Identical to :func:`fused_decode_attention_xla` except the tile
+    loader: each scan step GATHERS tile k's pool page per slot
+    (``pool[pages[:, k]]``) instead of slicing a contiguous token axis.
+    The gathered bytes feed the same shared K-major decode and the same
+    per-tile ops, so kernel (interpret) and twin agree bitwise, and both
+    agree bitwise with the contiguous paths at ``block_kv=P``.
+    """
+    B, H, D = q.shape
+    assert D == d_head
+    P = kvcache.pool_page_tokens(k_pool)
+    n_tiles = pages.shape[1]
+    rep = H // n_kv_heads
+    qf = q.reshape(B, n_kv_heads, rep, D)
+    positions = jnp.arange(P)
+
+    def gather(pool_t, pids):
+        return {key: jnp.take(a, pids, axis=0) for key, a in pool_t.items()}
+
+    def tile(carry, ki):
+        m, l, acc = carry
+        pids = jax.lax.dynamic_index_in_dim(pages, ki, axis=1,
+                                            keepdims=False)       # (B,)
+        kblk = kvcache.dequantize_kv(gather(k_pool, pids),
+                                     n_kv_heads, d_head)
+        vblk = kvcache.dequantize_kv(gather(v_pool, pids),
+                                     n_kv_heads, d_head)
+        s = jnp.einsum("bgrd,bkgd->bgrk", qf, kblk,
+                       preferred_element_type=jnp.float32) / (d_head ** 0.5)
+        valid = (ki * P + positions)[None, :] < length[:, None]    # (B, P)
         s = jnp.where(valid[:, None, None, :], s, NEG_INF)
         m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
         corr = jnp.exp(m - m_new)

@@ -227,6 +227,16 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool, quant: str = "hif
         "model_flops": model_flops,
         "useful_flops_ratio": model_flops / max(hlo_global_flops, 1.0),
     }
+    if shape.kind == "decode":
+        # A hif4 serve of this cell may silently narrow to bf16 KV (SSM /
+        # audio caches have no packed layout); the record carries the
+        # resolution so a fallen-back cell is visible in artifacts.
+        from repro.runtime.serve_loop import (ServeConfig, kv_format_fallback,
+                                              resolve_kv_format)
+
+        req = ServeConfig(kv_format="hif4" if quant == "hif4" else None)
+        record["kv_format"] = resolve_kv_format(cfg, ctx.quant, req)
+        record["kv_format_fallback"] = kv_format_fallback(cfg, ctx.quant, req)
     return record, compiled
 
 

@@ -19,6 +19,13 @@ dequantize-in-kernel matmul (Pallas on TPU, its XLA twin elsewhere);
 kernels for dense weights too (interpret mode off TPU — slow on CPU, use
 tiny shapes). ``--kv-format hif4`` additionally stores the decode KV cache
 at 4.5 bits/value (docs/FORMATS.md) — KV storage stays cache-global.
+
+``--kv-pages N`` (requires ``--kv-format hif4``) swaps the whole-slot
+decode cache for the fixed page pool: requests are served through the
+paged continuous-batching scheduler (page-granular admission, COW prefix
+sharing, LRU eviction / preemption — docs/EXECUTION.md) and the launcher
+prints pool residency and scheduler counters instead of the dense
+slots x capacity line. ``--kv-page-tokens`` sets the page size.
 """
 import argparse
 
@@ -37,6 +44,7 @@ from repro.runtime.serve_loop import (
     packed_weight_bytes,
     prepare_params_for_serving,
     resolve_kv_format,
+    serve_requests,
 )
 from repro.sharding.rules import ShardCtx
 
@@ -140,6 +148,13 @@ def main():
     ap.add_argument("--kv-format", default="bf16",
                     choices=list(kvcache.KV_FORMATS),
                     help="decode KV-cache storage (hif4 = 4.5 bits/value)")
+    ap.add_argument("--kv-pages", type=int, default=0,
+                    help="> 0: paged KV pool with this many pages "
+                         "(page-granular admission + COW prefix sharing; "
+                         "requires --kv-format hif4)")
+    ap.add_argument("--kv-page-tokens", type=int,
+                    default=kvcache.DEFAULT_PAGE_TOKENS,
+                    help="tokens per KV pool page")
     ap.add_argument("--policy", default=None,
                     help="per-site quantization policy: a preset name "
                          "(paper-iv, uniform:<fmt>, nvfp4-baseline, "
@@ -179,32 +194,60 @@ def main():
               f"(fake-quant bf16 artifact)")
 
     sc = ServeConfig(max_new_tokens=args.new_tokens,
-                     decode_chunk=args.decode_chunk)
+                     decode_chunk=args.decode_chunk,
+                     kv_pages=args.kv_pages,
+                     kv_page_tokens=args.kv_page_tokens)
     a = cfg.attn
+    kv_fmt = None
     if a is None:
         print("kv cache residency: n/a (attention-free family)")
     else:
-        kv_fmt = resolve_kv_format(cfg, ctx.quant, sc)   # bf16 fallback for
-        #                                                  hybrid/audio
+        # verbose: the hybrid/audio bf16 fallback prints loudly here
+        kv_fmt = resolve_kv_format(cfg, ctx.quant, sc, verbose=True)
         cap = args.prompt_len + args.new_tokens
         per_tok = kvcache.kv_bytes_per_token(
             a.n_kv_heads, a.d_head, kv_fmt) * cfg.n_layers
         bf16_tok = kvcache.kv_bytes_per_token(
             a.n_kv_heads, a.d_head, "bf16") * cfg.n_layers
-        total = per_tok * cap * args.batch
-        print(f"kv cache residency [{kv_fmt}]: {per_tok} B/token "
-              f"(bf16: {bf16_tok}) x {cap} capacity x {args.batch} slots "
-              f"= {total / 2**20:.2f} MiB"
-              + (f"  [{bf16_tok / per_tok:.2f}x more slots per byte]"
-                 if kv_fmt == "hif4" else ""))
+        if args.kv_pages:
+            pg = kvcache.page_nbytes(a.n_kv_heads, a.d_head,
+                                     args.kv_page_tokens, cfg.n_layers)
+            print(f"kv page pool [{kv_fmt}]: {args.kv_pages} pages x "
+                  f"{args.kv_page_tokens} tokens ({pg} B/page) = "
+                  f"{args.kv_pages * pg / 2**20:.2f} MiB "
+                  f"(whole-slot equivalent: "
+                  f"{per_tok * cap * args.batch / 2**20:.2f} MiB for "
+                  f"{args.batch} slots x {cap} capacity)")
+        else:
+            total = per_tok * cap * args.batch
+            print(f"kv cache residency [{kv_fmt}]: {per_tok} B/token "
+                  f"(bf16: {bf16_tok}) x {cap} capacity x {args.batch} slots "
+                  f"= {total / 2**20:.2f} MiB"
+                  + (f"  [{bf16_tok / per_tok:.2f}x more slots per byte]"
+                     if kv_fmt == "hif4" else ""))
         if kv_fmt == "hif4":
             _print_attention_dispatch(cfg, ctx, cap)
 
-    prompts = {"tokens": jax.random.randint(
-        jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab)}
+    tokens = jax.random.randint(
+        jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab)
     # packed impls reuse the converted tree (prepare is idempotent on it);
     # the qdq artifact is re-derived inside serve from the raw weights
-    toks = serve(cfg, serving_params if nvals else params, prompts, ctx, sc)
+    sparams = serving_params if nvals else params
+    if args.kv_pages:
+        assert kv_fmt == "hif4", (
+            "--kv-pages requires --kv-format hif4 on a KV-cache family "
+            "(the page pool stores packed HiF4 pages)")
+        stats: dict = {}
+        res = serve_requests(cfg, sparams, list(tokens), ctx, sc,
+                             slots=args.batch, stats=stats)
+        print(f"paged scheduler: max {stats['max_concurrent']} concurrent, "
+              f"{stats['shared_page_hits']} shared-page hits, "
+              f"{stats['preemptions']} preemptions, "
+              f"{stats['evictions']} LRU evictions, peak "
+              f"{stats['peak_live_pages']}/{args.kv_pages} pages live")
+        toks = jnp.stack(res)
+    else:
+        toks = serve(cfg, sparams, {"tokens": tokens}, ctx, sc)
     for i in range(args.batch):
         print(f"request {i}: {toks[i].tolist()}")
 

@@ -41,6 +41,11 @@ class ModelCtx:
     # "vec_q" : q-chunk axis is a shardable data axis — use when the head
     #           count does not divide the TP axis (see attention.py §vec_q).
     attn_impl: str = "scan_q"
+    # Decode KV-tile override for the packed attention paths (None = the
+    # kernel's own select_kv_block). Bitwise parity between a paged run
+    # (tiles = pages) and a contiguous reference depends on the PARTITION
+    # of tokens into tiles, so solo references set this to the page size.
+    attn_kv_block: Optional[int] = None
 
     def __post_init__(self):
         # A plan-carrying ctx left at the default quant derives it from the

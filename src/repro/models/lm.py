@@ -190,6 +190,29 @@ def init_cache(cfg: ArchConfig, batch: int, seq: int,
                            jax.random.PRNGKey(0))
 
 
+def init_paged_cache(cfg: ArchConfig, batch: int, n_pages: int,
+                     page_tokens: int, max_pages_per_slot: int) -> dict:
+    """Zero-initialized PAGED decode cache for the page-pool scheduler.
+
+    ``kv`` holds the fixed-size HiF4 page pool shared by all slots
+    (repro.core.kvcache.init_page_pool — leaves (L, n_pages, F, P));
+    ``pages`` (B, max_pages_per_slot) int32 is the per-slot page table
+    (all-zero rows point at the reserved scratch page) and ``pos`` (B,)
+    the per-slot token counts. Transformer families only — the pool IS
+    the self-attention KV cache.
+    """
+    from repro.core import kvcache
+
+    assert cfg.family in ("dense", "vlm", "moe"), cfg.family
+    a = cfg.attn
+    return {
+        "kv": kvcache.init_page_pool(cfg.n_layers, a.n_kv_heads, a.d_head,
+                                     n_pages, page_tokens),
+        "pages": jnp.zeros((batch, max_pages_per_slot), jnp.int32),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
 # ---------------------------------------------------------------------------
 # Embedding / head
 # ---------------------------------------------------------------------------
@@ -222,11 +245,11 @@ def lm_logits(params: dict, x: jax.Array, cfg: ArchConfig, ctx: ModelCtx):
 
 
 def _tblock_apply(p, x, cfg, ctx, *, mode, cache=None, pos=None,
-                  causal=True, use_rope=True):
+                  causal=True, use_rope=True, pages=None):
     h = tf.norm_apply(p["norm1"], x, cfg)
     if mode == "decode":
         a, new_cache = tf.attn_decode(p["attn"], h, cache, pos, cfg, ctx,
-                                      use_rope=use_rope)
+                                      use_rope=use_rope, pages=pages)
     else:
         a, new_cache = tf.attn_full(
             p["attn"], h, cfg, ctx, causal=causal, use_rope=use_rope,
@@ -247,7 +270,8 @@ def _scan_layers(body, x0, xs, remat: bool):
     return jax.lax.scan(body, x0, xs)
 
 
-def _transformer_forward(params, x, cfg, ctx, *, mode, caches=None, pos=None):
+def _transformer_forward(params, x, cfg, ctx, *, mode, caches=None, pos=None,
+                         pages=None):
     """x (B,S,d). Returns (x, caches-or-None). mode: train|prefill|decode."""
     sp = ("batch", "act_seq", None) if x.shape[1] > 1 else ("batch", None, None)
     bctx = ctx.scoped("blocks")
@@ -268,11 +292,12 @@ def _transformer_forward(params, x, cfg, ctx, *, mode, caches=None, pos=None):
         x, caches = _scan_layers(body, x, params["blocks"], False)
         return ctx.shard.constrain(x, *sp), caches
 
-    # decode
+    # decode (``pages`` is loop-invariant: the page table is closure-
+    # captured while the per-layer pool leaves ride the scan xs)
     def body(h, layer):
         p_layer, cache = layer
         h, new_cache = _tblock_apply(p_layer, h, cfg, bctx, mode="decode",
-                                     cache=cache, pos=pos)
+                                     cache=cache, pos=pos, pages=pages)
         return h, new_cache
     x, new_caches = jax.lax.scan(body, x, (params["blocks"], caches))
     return x, new_caches
@@ -499,11 +524,13 @@ def _audio_forward(params, dec_x, cfg, ctx, *, mode, frames=None, caches=None,
 # ---------------------------------------------------------------------------
 
 
-def _backbone(params, x, cfg, ctx, *, mode, caches=None, pos=None, frames=None):
+def _backbone(params, x, cfg, ctx, *, mode, caches=None, pos=None,
+              frames=None, pages=None):
     fam = cfg.family
     if fam in ("dense", "vlm", "moe"):
         return _transformer_forward(params, x, cfg, ctx, mode=mode,
-                                    caches=caches, pos=pos)
+                                    caches=caches, pos=pos, pages=pages)
+    assert pages is None, f"paged KV pool is transformer-only, got {fam!r}"
     if fam == "ssm":
         return _ssm_forward(params, x, cfg, ctx, mode=mode,
                             caches=caches)
@@ -647,9 +674,12 @@ def decode_step(params: dict, token: jax.Array, cache: dict, cfg: ArchConfig,
                            pos=pos)
         new_cache = {"layers": new["layers"], "kv": new["kv"], "pos": pos + 1}
     else:
+        pages = cache.get("pages")
         h, new = _backbone(params, x, cfg, ctx, mode="decode",
-                           caches=cache["kv"], pos=pos)
+                           caches=cache["kv"], pos=pos, pages=pages)
         new_cache = {"kv": new, "pos": pos + 1}
+        if pages is not None:
+            new_cache["pages"] = pages
     logits = lm_logits(params, h[:, -1:], cfg, ctx)[:, 0]
     return logits, new_cache
 

@@ -188,6 +188,7 @@ def attn_decode(
     use_rope: bool = True,
     cross: bool = False,          # cross-attention: read-only cache, no append
     site: str = "attn",
+    pages=None,                   # (B, max_pages) page table: paged pool cache
 ):
     """One-token attention against (and, unless cross, appending to) a cache."""
     B = x.shape[0]
@@ -201,6 +202,18 @@ def attn_decode(
     if cross:
         new_cache = cache
         length = jnp.full((B,), cache["k"].shape[1], jnp.int32)
+    elif pages is not None:
+        # paged HiF4 pool (repro.core.kvcache.init_page_pool): per-layer
+        # leaves (n_pages, F, P); the one token's bytes land through the
+        # page table at (pages[b, pos//P], pos % P). The scheduler owns
+        # allocation/COW, so live slots always write an exclusive page.
+        assert kvcache.is_packed_kv(cache["k"]), "page pool is HiF4-only"
+        assert per_slot, "paged decode uses per-slot positions"
+        new_cache = {
+            "k": kvcache.append_token_paged(cache["k"], k_new, pos, pages),
+            "v": kvcache.append_token_paged(cache["v"], v_new, pos, pages),
+        }
+        length = pos + 1
     elif kvcache.is_packed_kv(cache["k"]):
         # HiF4-packed cache (repro.core.kvcache): quantize the one new
         # token into its own 64-groups + tail and write only those bytes;
@@ -230,7 +243,8 @@ def attn_decode(
         ectx = qengine.EngineCtx(quant=ctx.quant, shard=ctx.shard)
         o = qengine.attention_decode(q[:, 0], new_cache["k"], new_cache["v"],
                                      length, cfg.attn.n_kv_heads,
-                                     cfg.attn.d_head, ectx)
+                                     cfg.attn.d_head, ectx, pages=pages,
+                                     block_kv=ctx.attn_kv_block)
     else:
         o = decode_attention(q[:, 0], new_cache["k"], new_cache["v"], length)
     y = _out_proj(p, o[:, None], cfg, ctx, site=site)  # (B, 1, d)

@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.core import kvcache
 from repro.core.policy import STACKED_COLLECTIONS, QuantPlan
 from repro.core.qlinear import QuantConfig, quantize_params_offline
 from repro.models import lm
@@ -40,21 +41,40 @@ class ServeConfig:
     eos_id: Optional[int] = None           # stop a request at this token
     kv_format: Optional[str] = None        # 'bf16' | 'hif4' KV cache storage;
     #                                        None = ctx.quant.kv.kv_format
+    kv_pages: int = 0                      # > 0: page-pool scheduler with this
+    #                                        many pool pages (hif4 KV only)
+    kv_page_tokens: int = 64               # tokens per pool page
+    prefix_sharing: bool = True            # hash-share prompt-prefix pages
 
 
 def resolve_kv_format(cfg: ArchConfig, quant: QuantConfig,
-                      serve_cfg: ServeConfig) -> str:
+                      serve_cfg: ServeConfig, *, verbose: bool = False) -> str:
     """The KV storage this serve actually runs: ServeConfig overrides the
     QuantConfig KVCacheConfig; non-transformer families fall back to bf16
     (SSM state / audio cross caches have no packed layout — see the
-    docs/EXECUTION.md matrix)."""
+    docs/EXECUTION.md matrix). ``verbose=True`` (the serve/launch entry
+    points) prints the fallback instead of narrowing silently; benchmark
+    and dryrun records carry it as ``kv_format_fallback``."""
     from repro.core import kvcache
 
     fmt = serve_cfg.kv_format or quant.kv.kv_format
     assert fmt in kvcache.KV_FORMATS, fmt
     if fmt == "hif4" and cfg.family not in ("dense", "vlm", "moe"):
+        if verbose:
+            print(f"[serve] note: kv_format=hif4 has no packed layout for "
+                  f"family {cfg.family!r} (SSM state / audio cross caches) "
+                  f"— serving falls back to bf16 KV")
         return "bf16"
     return fmt
+
+
+def kv_format_fallback(cfg: ArchConfig, quant: QuantConfig,
+                       serve_cfg: ServeConfig) -> bool:
+    """True when the requested KV format was narrowed by family fallback —
+    the flag benchmark/dryrun records carry so a silently-bf16 run is
+    visible in artifacts, not just stdout."""
+    requested = serve_cfg.kv_format or quant.kv.kv_format
+    return resolve_kv_format(cfg, quant, serve_cfg) != requested
 
 
 def _to_kernel_layout(params):
@@ -273,7 +293,8 @@ def _ctx_cache_key(ctx: ModelCtx):
     return (ctx.quant, ctx.plan, ctx.scope, mesh_key,
             tuple(sorted((k, tuple(v)) for k, v in shard.rules.items())),
             str(ctx.param_dtype), str(ctx.compute_dtype), ctx.remat,
-            ctx.attn_q_chunk, ctx.attn_k_chunk, ctx.attn_impl)
+            ctx.attn_q_chunk, ctx.attn_k_chunk, ctx.attn_impl,
+            ctx.attn_kv_block)
 
 
 def _jit_prefill(cfg: ArchConfig, sctx: ModelCtx):
@@ -323,7 +344,7 @@ def serve(
     """
     sctx = serving_ctx(ctx)
     params = prepare_params_for_serving(params, cfg, ctx.plan or ctx.quant)
-    kv_fmt = resolve_kv_format(cfg, ctx.quant, serve_cfg)
+    kv_fmt = resolve_kv_format(cfg, ctx.quant, serve_cfg, verbose=True)
 
     logits, cache = _jit_prefill(cfg, sctx)(params, batch)
     if kv_fmt == "hif4":
@@ -391,6 +412,19 @@ _insert_slot_jit = jax.jit(_insert_slot, static_argnums=(4,),
                            donate_argnums=(0,))
 
 
+def _finalize_result(toks: list, budget: int, eos_id: Optional[int]):
+    """Trim a slot's emitted tokens to the request's (budget,) result: drop
+    over-emission past the budget, and past eos replace everything with eos
+    padding (a finished request keeps emitting eos inside the chunked scan).
+    """
+    toks = toks[:budget]
+    if eos_id is not None and eos_id in toks:
+        stop = toks.index(eos_id) + 1
+        toks = toks + [eos_id] * (budget - len(toks))
+        toks = toks[:stop] + [eos_id] * (budget - stop)
+    return jnp.asarray(toks, jnp.int32)
+
+
 def serve_requests(
     cfg: ArchConfig,
     params: dict,
@@ -399,6 +433,7 @@ def serve_requests(
     serve_cfg: ServeConfig = ServeConfig(),
     *,
     slots: int = 4,
+    stats: Optional[dict] = None,      # filled with scheduler counters
 ) -> list:
     """Continuous-batching scheduler: serve ``requests`` through a fixed
     number of decode ``slots``.
@@ -412,6 +447,13 @@ def serve_requests(
     batch elements never mix, and invalid cache tail slots are masked by
     the per-slot length.
 
+    With ``serve_cfg.kv_pages > 0`` (hif4 KV only) the whole-slot cache is
+    replaced by the paged pool scheduler (:func:`_serve_requests_paged`):
+    admission is by page availability instead of slot count, identical
+    prompt-prefix pages are shared copy-on-write, and pool exhaustion
+    preempts the youngest sequence instead of rejecting the queue — see the
+    docs/EXECUTION.md admission matrix.
+
     Transformer families only (the per-slot position clock lives in the KV
     cache); returns a list of (max_new_tokens,) int32 arrays, one per
     request, in submission order.
@@ -421,8 +463,21 @@ def serve_requests(
     )
     sctx = serving_ctx(ctx)
     params = prepare_params_for_serving(params, cfg, ctx.plan or ctx.quant)
-    kv_fmt = resolve_kv_format(cfg, ctx.quant, serve_cfg)
+    kv_fmt = resolve_kv_format(cfg, ctx.quant, serve_cfg, verbose=True)
+    # Resolve the jitted entry points ONCE per serve call — admission runs
+    # between every decode chunk, and a dict probe per admitted request
+    # (plus the partial/jit wrapper construction on a miss) is avoidable
+    # scheduler overhead.
     prefill = _jit_prefill(cfg, sctx)
+    quantize = _jit_quantize_kv(cfg) if kv_fmt == "hif4" else None
+
+    if serve_cfg.kv_pages:
+        assert kv_fmt == "hif4", (
+            "the paged KV pool stores packed HiF4 pages; bf16 serving (or a "
+            "family fallback) must use the whole-slot scheduler")
+        return _serve_requests_paged(
+            cfg, params, requests, sctx, serve_cfg,
+            slots=slots, prefill=prefill, quantize=quantize, stats=stats)
 
     budget = serve_cfg.max_new_tokens
     max_prompt = max(int(r.shape[-1]) for r in requests)
@@ -439,13 +494,14 @@ def serve_requests(
     slot_req = [None] * B                        # request id per slot
     slot_toks: list[list] = [[] for _ in range(B)]
     results: list = [None] * len(requests)
+    max_concurrent = 0
 
     def admit(b: int, cache, token):
         rid = queue.pop(0)
         prompt = jnp.asarray(requests[rid], jnp.int32).reshape(1, -1)
         logits, slot_cache = prefill(params, {"tokens": prompt})
-        if kv_fmt == "hif4":
-            slot_cache = _jit_quantize_kv(cfg)(slot_cache)
+        if quantize is not None:
+            slot_cache = quantize(slot_cache)
         slot_cache = lm.pad_cache(slot_cache, cfg, cap)
         first = jnp.argmax(logits, axis=-1).astype(jnp.int32)[0]
         cache, token = _insert_slot_jit(cache, slot_cache, token, first, b)
@@ -457,13 +513,8 @@ def serve_requests(
     step = _jit_decode_scan(cfg, sctx, chunk, serve_cfg.eos_id)
 
     def retire(b: int):
-        rid = slot_req[b]
-        toks = slot_toks[b][:budget]
-        if serve_cfg.eos_id is not None and serve_cfg.eos_id in toks:
-            stop = toks.index(serve_cfg.eos_id) + 1
-            toks = toks + [serve_cfg.eos_id] * (budget - len(toks))
-            toks = toks[:stop] + [serve_cfg.eos_id] * (budget - stop)
-        results[rid] = jnp.asarray(toks, jnp.int32)
+        results[slot_req[b]] = _finalize_result(slot_toks[b], budget,
+                                                serve_cfg.eos_id)
         slot_req[b] = None
 
     while queue or any(r is not None for r in slot_req):
@@ -475,6 +526,8 @@ def serve_requests(
                     serve_cfg.eos_id is not None
                     and slot_toks[b][0] == serve_cfg.eos_id
                 )
+        max_concurrent = max(max_concurrent,
+                             sum(r is not None for r in slot_req))
         active = jnp.asarray([r is not None for r in slot_req])
         toks, token, cache, done = step(params, token, cache, done | ~active)
         host_toks = jax.device_get(toks)
@@ -488,4 +541,384 @@ def serve_requests(
             )
             if finished:
                 retire(b)
+    if stats is not None:
+        stats.update(scheduler="slots", max_concurrent=max_concurrent,
+                     preemptions=0, shared_page_hits=0, evictions=0)
+    return results
+
+
+# ---------------------------------------------------------------------------
+# Paged continuous batching: page-pool admission + COW prefix sharing
+# ---------------------------------------------------------------------------
+
+
+def _pool_gather(pool, ids):
+    return {"k": kvcache.gather_pages(pool["k"], ids),
+            "v": kvcache.gather_pages(pool["v"], ids)}
+
+
+_pool_gather_jit = jax.jit(_pool_gather)
+
+
+def _pool_scatter(pool, pages_k, pages_v, src, dst):
+    """Write logical pages ``src`` of the (L, n, F, P) blocks into pool
+    pages ``dst`` (K and V together, pool donated)."""
+
+    def sel(t):
+        return {key: jnp.take(a, src, axis=1) for key, a in t.items()}
+
+    return {"k": kvcache.scatter_pages(pool["k"], sel(pages_k), dst),
+            "v": kvcache.scatter_pages(pool["v"], sel(pages_v), dst)}
+
+
+_pool_scatter_jit = jax.jit(_pool_scatter, donate_argnums=(0,))
+
+
+def _pool_copy(pool, src, dst):
+    return {"k": kvcache.copy_page(pool["k"], src, dst),
+            "v": kvcache.copy_page(pool["v"], src, dst)}
+
+
+_pool_copy_jit = jax.jit(_pool_copy, donate_argnums=(0,))
+
+
+def _page_prefix_equal(pool, pid, page_k, page_v, count):
+    """True iff pool page ``pid`` matches the candidate page blocks
+    (L, F, P) byte-for-byte on the first ``count`` token columns — the
+    share-time verification that makes prefix sharing exact by
+    construction rather than by trust in the hash."""
+    cols = jnp.arange(page_k["meta"].shape[-1]) < count
+
+    def eq(pool_t, page):
+        oks = [jnp.all(jnp.where(cols, pool_t[key][:, pid] == page[key],
+                                 True))
+               for key in ("codes", "meta", "tail")]
+        return jnp.all(jnp.stack(oks))
+
+    return jnp.logical_and(eq(pool["k"], page_k), eq(pool["v"], page_v))
+
+
+_page_equal_jit = jax.jit(_page_prefix_equal)
+
+
+def _serve_requests_paged(
+    cfg: ArchConfig,
+    params: dict,
+    requests: Sequence[jnp.ndarray],
+    sctx: ModelCtx,
+    serve_cfg: ServeConfig,
+    *,
+    slots: int,
+    prefill,
+    quantize,
+    stats: Optional[dict] = None,
+) -> list:
+    """Page-pool continuous batching (the :func:`serve_requests` backend
+    for ``serve_cfg.kv_pages > 0``).
+
+    The whole-slot contiguous cache is replaced by a fixed pool of
+    ``kv_pages`` HiF4 pages of ``kv_page_tokens`` tokens each
+    (repro.core.kvcache); per-slot page tables map logical page indices to
+    pool pages and the decode step streams KV tiles through the table
+    (repro.kernels.fused_attention paged grid). Scheduling:
+
+    * **admission** — a queued request is admitted when its PROMPT pages
+      fit (prompt pages shared with resident requests do not count), not
+      when a whole max-capacity slot is free: memory is committed
+      page-by-page as sequences actually grow;
+    * **prefix sharing** — prompt pages whose cumulative token key hits
+      the full-page hash (or whose tail matches a live partial page) are
+      shared by refcount after byte-for-byte verification; a sharer that
+      must append into a shared page copies it first (copy-on-write), so
+      sharing never changes any request's bytes;
+    * **eviction / preemption** — retired requests' full pages park in an
+      LRU cache (free prefix hits for followers) and are evicted when the
+      pool runs dry; if the pool is dry with no evictable page, the
+      YOUNGEST resident request is preempted: its page bytes are
+      snapshotted to host, its pages freed, and it re-enters the queue
+      front to be restored verbatim later (decode-token KV cannot be
+      re-prefilled, so bytes — not tokens — are what's saved).
+
+    Per-request outputs remain bit-identical to solo serving with the same
+    page-size KV tiling: pages partition the token axis exactly like the
+    kernel's KV tiles, appends land in exclusively-owned pages, and fully
+    masked tiles are exact no-ops in the online softmax.
+    """
+    P = serve_cfg.kv_page_tokens
+    budget = serve_cfg.max_new_tokens
+    eos = serve_cfg.eos_id
+    n_req = len(requests)
+    prompts = [jax.device_get(jnp.asarray(r, jnp.int32)).ravel().tolist()
+               for r in requests]
+    max_prompt = max(len(p) for p in prompts)
+    cap = serve_cfg.cache_capacity or max_prompt + budget
+    for p_toks in prompts:
+        assert len(p_toks) + budget <= cap, (
+            f"prompt {len(p_toks)} + budget {budget} exceeds capacity {cap}")
+    maxp = kvcache.pages_for_tokens(cap, P)
+    pool = kvcache.PagePool(serve_cfg.kv_pages, P)
+    assert maxp <= pool.usable_pages, (
+        f"one max-length sequence needs {maxp} pages but the pool has only "
+        f"{pool.usable_pages} usable (kv_pages={serve_cfg.kv_pages} minus "
+        f"the scratch page)")
+    B = min(slots, n_req)
+
+    cache = lm.init_paged_cache(cfg, B, serve_cfg.kv_pages, P, maxp)
+    token = jnp.zeros((B,), jnp.int32)
+    done = jnp.ones((B,), bool)
+
+    chunk = serve_cfg.decode_chunk or max(1, budget // 4)
+    step = _jit_decode_scan(cfg, sctx, chunk, eos)
+
+    queue = list(range(n_req))
+    suspended: dict = {}               # rid -> preemption byte snapshot
+    slot_req = [None] * B
+    slot_toks: list[list] = [[] for _ in range(B)]
+    slot_written: list[list] = [[] for _ in range(B)]  # tokens whose KV is
+    #                                                    resident, in order
+    slot_pages: list[list] = [[] for _ in range(B)]    # pool ids, logical
+    admit_clock = [0] * B
+    results: list = [None] * n_req
+    clock = 0
+    preempt_count = 0
+    max_concurrent = 0
+    peak_live = 0
+
+    def set_table_row(b, pids):
+        row = jnp.zeros((maxp,), jnp.int32)
+        if pids:
+            row = row.at[: len(pids)].set(jnp.asarray(pids, jnp.int32))
+        cache["pages"] = cache["pages"].at[b].set(row)
+
+    def refresh_metadata(b):
+        """Index slot ``b``'s OWNED pages for sharing: completed pages by
+        their cumulative token key, the live tail page in the partial
+        registry. The last table entry (logical page maxp-1) is never
+        indexed: over-emission inside a request's final chunk clamps into
+        it (masked, discarded tokens), so its bytes are not trusted."""
+        rid = slot_req[b]
+        written = slot_written[b]
+        for j, pid in enumerate(slot_pages[b]):
+            if j == maxp - 1 or pool.owner.get(pid) != rid:
+                continue
+            seg = written[j * P:(j + 1) * P]
+            if len(seg) == P:
+                pool.register_full(pid, tuple(written[: (j + 1) * P]))
+            elif seg:
+                pool.register_partial(pid, tuple(written[: j * P]), seg)
+
+    def pick_victim():
+        live = [b for b in range(B) if slot_req[b] is not None]
+        if not live:
+            return None
+        return max(live, key=lambda b: admit_clock[b])
+
+    def preempt(b):
+        nonlocal preempt_count
+        rid = slot_req[b]
+        ids = jnp.asarray(slot_pages[b], jnp.int32)
+        snap = jax.device_get(_pool_gather_jit(cache["kv"], ids))
+        suspended[rid] = {
+            "pages": snap,                      # page BYTES, not tokens
+            "token": int(jax.device_get(token[b])),
+            "toks": slot_toks[b],
+            "written": slot_written[b],
+        }
+        for pid in slot_pages[b]:
+            pool.release(pid)
+        slot_pages[b] = []
+        slot_req[b] = None
+        slot_toks[b] = []
+        slot_written[b] = []
+        set_table_row(b, [])                    # writes -> scratch page 0
+        queue.insert(0, rid)
+        preempt_count += 1
+
+    def alloc_page(rid, requester_slot):
+        """Allocate, preempting youngest-first when the pool is dry.
+        Returns None when the requester itself was the victim."""
+        while True:
+            pid = pool.alloc(owner=rid)
+            if pid is not None:
+                return pid
+            victim = pick_victim()
+            if victim is None:
+                raise RuntimeError(
+                    f"KV page pool exhausted: {pool.usable_pages} usable "
+                    f"pages cannot hold even one resident sequence")
+            preempt(victim)
+            if victim == requester_slot:
+                return None
+
+    def try_admit(b, rid):
+        nonlocal token, done, clock
+        if rid in suspended:
+            snap = suspended[rid]
+            n = snap["pages"]["k"]["meta"].shape[1]
+            if pool.available() < n:
+                return False
+            pids = [pool.alloc(owner=rid) for _ in range(n)]
+            cache["kv"] = _pool_scatter_jit(
+                cache["kv"], snap["pages"]["k"], snap["pages"]["v"],
+                jnp.arange(n, dtype=jnp.int32),
+                jnp.asarray(pids, jnp.int32))
+            del suspended[rid]
+            token = token.at[b].set(snap["token"])
+            cache["pos"] = cache["pos"].at[b].set(len(snap["written"]))
+            done = done.at[b].set(False)
+            slot_toks[b] = snap["toks"]
+            slot_written[b] = snap["written"]
+        else:
+            toks = prompts[rid]
+            n_tok = len(toks)
+            logits, slot_cache = prefill(
+                params, {"tokens": jnp.asarray(toks, jnp.int32).reshape(1, -1)})
+            slot_cache = quantize(slot_cache)
+            kp = kvcache.split_pages(slot_cache["kv"]["k"], P)
+            vp = kvcache.split_pages(slot_cache["kv"]["v"], P)
+            n_pg = kvcache.pages_for_tokens(n_tok, P)
+            share = [None] * n_pg
+            if serve_cfg.prefix_sharing:
+                for j in range(n_pg):
+                    seg = toks[j * P:(j + 1) * P]
+                    if len(seg) == P:
+                        cand = pool.lookup_full(tuple(toks[: (j + 1) * P]))
+                    else:
+                        cand = pool.lookup_partial(tuple(toks[: j * P]), seg)
+                    if cand is None:
+                        continue
+                    page_k = {key: a[:, j] for key, a in kp.items()}
+                    page_v = {key: a[:, j] for key, a in vp.items()}
+                    if bool(jax.device_get(_page_equal_jit(
+                            cache["kv"], cand, page_k, page_v, len(seg)))):
+                        share[j] = cand
+            n_new = sum(1 for s in share if s is None)
+            n_revive = sum(1 for s in share
+                           if s is not None and s in pool.cached)
+            if pool.available() < n_new + n_revive:
+                return False
+            # retain every shared page BEFORE allocating: alloc may evict
+            # from the LRU cache, and a not-yet-retained candidate must
+            # not be its victim
+            for s in share:
+                if s is not None:
+                    pool.retain(s)
+                    pool.shared_hits += 1
+            pids = []
+            own_src, own_dst = [], []
+            for j in range(n_pg):
+                if share[j] is not None:
+                    pids.append(share[j])
+                else:
+                    pid = pool.alloc(owner=rid)
+                    own_src.append(j)
+                    own_dst.append(pid)
+                    pids.append(pid)
+            if own_dst:
+                cache["kv"] = _pool_scatter_jit(
+                    cache["kv"], kp, vp,
+                    jnp.asarray(own_src, jnp.int32),
+                    jnp.asarray(own_dst, jnp.int32))
+            first = int(jax.device_get(jnp.argmax(logits, axis=-1))[0])
+            token = token.at[b].set(first)
+            cache["pos"] = cache["pos"].at[b].set(n_tok)
+            done = done.at[b].set(eos is not None and first == eos)
+            slot_toks[b] = [first]
+            slot_written[b] = list(toks)
+        slot_req[b] = rid
+        slot_pages[b] = pids
+        set_table_row(b, pids)
+        clock += 1
+        admit_clock[b] = clock
+        refresh_metadata(b)
+        return True
+
+    def provision(b):
+        """Pre-chunk page work for slot ``b``: copy-on-write the page its
+        next append lands in if it is shared, then allocate pages through
+        the chunk horizon. Returns False if ``b`` itself got preempted."""
+        rid = slot_req[b]
+        pos_b = len(slot_written[b])
+        cur = pos_b // P
+        if cur < len(slot_pages[b]):
+            pid = slot_pages[b][cur]
+            if pool.owner.get(pid) != rid:
+                if pool.ref.get(pid, 0) > 1:
+                    new = alloc_page(rid, b)
+                    if new is None:
+                        return False
+                    cache["kv"] = _pool_copy_jit(cache["kv"], pid, new)
+                    pool.release(pid)
+                    slot_pages[b][cur] = new
+                    cache["pages"] = cache["pages"].at[b, cur].set(new)
+                else:
+                    pool.owner[pid] = rid      # sole holder adopts in place
+        last = min((pos_b + chunk - 1) // P, maxp - 1)
+        for j in range(len(slot_pages[b]), last + 1):
+            pid = alloc_page(rid, b)
+            if pid is None:
+                return False
+            slot_pages[b].append(pid)
+            cache["pages"] = cache["pages"].at[b, j].set(pid)
+        return True
+
+    def retire(b):
+        results[slot_req[b]] = _finalize_result(slot_toks[b], budget, eos)
+        for pid in slot_pages[b]:
+            pool.release(pid)                  # hashed full pages park LRU
+        slot_pages[b] = []
+        slot_req[b] = None
+        slot_toks[b] = []
+        slot_written[b] = []
+        set_table_row(b, [])
+
+    while queue or any(r is not None for r in slot_req):
+        # Admission: FIFO, page-fit driven — stop at the first request
+        # whose prompt pages do not fit (no skip-ahead; completion order
+        # stays deterministic).
+        while queue:
+            free_b = next((b for b in range(B) if slot_req[b] is None), None)
+            if free_b is None:
+                break
+            if not try_admit(free_b, queue[0]):
+                break
+            queue.pop(0)
+        if not any(r is not None for r in slot_req):
+            raise RuntimeError(
+                f"request {queue[0]!r} cannot be admitted into an empty "
+                f"pool ({pool.usable_pages} usable pages)")
+        for b in range(B):
+            if slot_req[b] is not None:
+                provision(b)
+        # counted AFTER provisioning: sequences actually decoding this
+        # chunk, not admissions that provisioning preempted right back out
+        max_concurrent = max(max_concurrent,
+                             sum(r is not None for r in slot_req))
+        peak_live = max(peak_live, pool.live_pages())
+        active = jnp.asarray([r is not None for r in slot_req])
+        toks, token, cache, done = step(params, token, cache, done | ~active)
+        host_toks = jax.device_get(toks)
+        for b in range(B):
+            if slot_req[b] is None:
+                continue
+            new = [int(t) for t in host_toks[b]]
+            # this chunk wrote KV for the previously pending token plus
+            # every emission except the newest (still pending)
+            pending = slot_toks[b][-1]
+            slot_written[b].extend([pending] + new[:-1])
+            slot_toks[b].extend(new)
+            refresh_metadata(b)
+            finished = len(slot_toks[b]) >= budget or (
+                eos is not None and eos in slot_toks[b])
+            if finished:
+                retire(b)
+    if stats is not None:
+        stats.update(
+            scheduler="paged", max_concurrent=max_concurrent,
+            preemptions=preempt_count, evictions=pool.evictions,
+            shared_page_hits=pool.shared_hits,
+            pages_total=serve_cfg.kv_pages, page_tokens=P,
+            peak_live_pages=peak_live,
+            pool_bytes=serve_cfg.kv_pages * kvcache.page_nbytes(
+                cfg.attn.n_kv_heads, cfg.attn.d_head, P, cfg.n_layers))
     return results
