@@ -1,14 +1,49 @@
-"""Roofline aggregation: experiments/dryrun/*.json -> §Roofline table.
+"""Roofline models: dryrun aggregation + the serve-matrix prediction.
 
-Reads the per-cell records the dry-run wrote (loop-aware FLOPs / HBM bytes
-/ modeled ICI wire bytes per device) and emits the markdown table for
-EXPERIMENTS.md, including the dominant term and MODEL_FLOPS/HLO ratio.
+Two consumers share this module:
+
+- :func:`main` reads the per-cell records the dry-run wrote (loop-aware
+  FLOPs / HBM bytes / modeled ICI wire bytes per device) and emits the
+  markdown table for EXPERIMENTS.md, including the dominant term and
+  MODEL_FLOPS/HLO ratio.
+- ``benchmarks/matrix.py`` uses :func:`measure_stream_bandwidth` +
+  :func:`predict_step_ms` to turn the scenario harness's EXACT payload
+  byte counts (``repro.runtime.scenario.decode_step_bytes``) into a
+  predicted decode-step time per matrix cell — decode at these sizes is
+  memory-bound, so bytes / stream-bandwidth is the floor, and the
+  achieved fraction is an arch-independent perf signal.
 """
 import glob
 import json
 import os
+import time
 
 DEFAULT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def measure_stream_bandwidth(nbytes: int = 1 << 27, repeats: int = 5) -> float:
+    """Measured stream bandwidth (bytes/s) of THIS backend: best-of-N on a
+    jitted elementwise map over ``nbytes`` of f32 (reads + writes the
+    array once each). The denominator every matrix-cell roofline
+    prediction shares — measured per run, so the predictions move with
+    the machine, while the achieved fraction stays comparable."""
+    import jax
+    import jax.numpy as jnp
+
+    x = jnp.zeros(nbytes // 4, jnp.float32)
+    f = jax.jit(lambda a: a * 1.0000001 + 1.0)
+    jax.block_until_ready(f(x))                      # compile
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(f(x))
+        best = min(best, time.perf_counter() - t0)
+    return 2 * x.nbytes / best
+
+
+def predict_step_ms(bytes_per_step: int, mem_bw: float) -> float:
+    """Memory-roofline decode-step time (ms): payload bytes / bandwidth."""
+    return bytes_per_step / mem_bw * 1e3
 
 
 def load_records(directory: str = DEFAULT_DIR):
@@ -26,8 +61,11 @@ def table(recs, mesh: str = "16x16", quant: str = "hif4"):
     for r in recs:
         if r["mesh"] != mesh or r.get("quant") != quant:
             continue
+        # the table compares like against like: only FSDP-sharded runs
+        # with an explicit seq_shard flag qualify (a record that disabled
+        # FSDP or predates the flag would skew the per-mesh comparison)
         if r.get("fsdp") is False or r.get("seq_shard") not in (True, False):
-            pass
+            continue
         ro = r["roofline"]
         step = max(ro["t_compute_s"], ro["t_memory_s"], ro["t_collective_s"])
         rows.append({

@@ -7,12 +7,13 @@ bytes/token, and scan decode must amortize dispatch):
 
   * prefill latency (s) per impl x kv_format
   * decode throughput (tokens/s aggregate over the batch) via the scan loop,
-    plus a per-impl decode comparison on identical geometry gated at
-    packed >= 0.9x qdq (the fused dequantize-in-kernel matmul's perf claim)
+    plus a per-impl decode comparison on identical geometry recorded as
+    ``packed_over_qdq_decode`` (the fused dequantize-in-kernel matmul)
   * per-kv_format decode-step latency, measured interleaved on the jitted
-    decode scan and gated at hif4-KV >= 0.9x bf16-KV (the fused
-    decode-attention perf claim: streaming packed KV tiles must not cost
-    the bandwidth win the format buys)
+    decode scan and recorded as ``hif4_over_bf16_kv_decode`` (the fused
+    decode-attention claim: streaming packed KV tiles must not cost the
+    bandwidth win the format buys). Both >= 0.9x thresholds are ENFORCED
+    by the scenario matrix (benchmarks/matrix.py), not here
   * weight bytes resident for the block matmul weights (bf16 vs packed),
     reported as B/value
   * KV-cache bytes/token (measured from the real decode cache pytree) and
@@ -557,20 +558,12 @@ def main(argv=None):
                 f"{r['impl']}: packed residency {r['bytes_per_value']} "
                 f"B/value != 4.5 bits/value")
 
-    # perf regression gate: the fused dequantize-in-kernel path must keep
-    # packed serving at least as fast as qdq (it was 0.32x before fusing)
-    if packed_over_qdq is not None:
-        assert packed_over_qdq >= 0.9, (
-            f"packed decode regressed to {packed_over_qdq}x of qdq "
-            f"(gate: >= 0.9x — the fused path exists to hold this)")
-
-    # perf regression gate: streaming the packed KV cache through the
-    # fused/twin decode path must keep hif4-KV decode >= 0.9x bf16-KV
-    if hif4_over_bf16 is not None:
-        assert hif4_over_bf16 >= 0.9, (
-            f"hif4-KV decode regressed to {hif4_over_bf16}x of bf16-KV "
-            f"(gate: >= 0.9x — the fused decode-attention path exists to "
-            f"hold this)")
+    # The two >= 0.9x decode-ratio THRESHOLDS now live in the scenario
+    # matrix (benchmarks/matrix.py, gates packed_over_qdq_decode and
+    # hif4_over_bf16_kv_decode, enforced by run.py::check_matrix_gates
+    # with interleaved timing). This module keeps RECORDING both ratios —
+    # check_serve_gates fails if either field goes missing or null while
+    # the sweep covered both sides.
 
     # where the mixed preset structurally applies (its fallback patterns
     # match sites on this arch), it must actually be mixed: fewer packed

@@ -336,16 +336,29 @@ def attention_decode(
 
 def attention_dispatch_info(quant: QuantConfig, k_cache: dict, *,
                             n_kv_heads: int, d_head: int,
-                            interpret: Optional[bool] = None):
+                            interpret: Optional[bool] = None,
+                            paged: bool = False):
     """What :func:`attention_decode` will run for this cache under
-    ``quant`` — the launcher prints it next to the fused-matmul line.
+    ``quant`` — the launcher prints it next to the fused-matmul line,
+    and the scenario matrix asserts it per cell.
 
     Returns ``fused`` (bool: the Pallas kernel), ``execution`` (human
-    string), and ``block_kv`` (the KV tile both executions stream).
+    string), ``block_kv`` (the KV tile both executions stream),
+    ``kernel_eligible`` (backend-NEUTRAL: the cache/impl combination the
+    fused kernel accepts — True still runs the bit-exact twin off-TPU),
+    and ``route`` (the exact function dispatch picks on THIS backend).
+    ``paged=True`` answers for a page-pool cache (``pages`` passed to
+    :func:`attention_decode`): the same eligibility picks the paged
+    kernel / paged twin pair instead.
     """
     ectx = EngineCtx(quant=quant, interpret=interpret)
-    block = select_kv_block(kvcache.seq_capacity(k_cache))
-    if not _fused_attn_ok(quant, k_cache, n_kv_heads, d_head):
+    block = (kvcache.pool_page_tokens(k_cache) if paged
+             else select_kv_block(kvcache.seq_capacity(k_cache)))
+    eligible = _fused_attn_ok(quant, k_cache, n_kv_heads, d_head)
+    routes = (("fused_paged_decode_attention", "fused_paged_decode_attention_xla")
+              if paged else
+              ("fused_decode_attention", "fused_decode_attention_xla"))
+    if not eligible:
         if quant.impl not in ("packed", "pallas"):
             why = f"impl={quant.impl}"
         elif not kvcache.is_kernel_layout(k_cache):
@@ -354,13 +367,15 @@ def attention_dispatch_info(quant: QuantConfig, k_cache: dict, *,
             # the only remaining kernel_compatible failure: F % 64 != 0
             # (a tail-free F always makes Hkv divisible by the head block)
             why = "staging tail"
-        return {"fused": False, "block_kv": block,
+        return {"fused": False, "block_kv": block, "kernel_eligible": False,
+                "route": routes[1],
                 "execution": f"XLA twin (chunked dequantize; {why})"}
     if ectx.resolved_interpret():
-        return {"fused": False, "block_kv": block,
+        return {"fused": False, "block_kv": block, "kernel_eligible": True,
+                "route": routes[1],
                 "execution": "XLA twin (chunked dequantize; off-TPU)"}
-    return {"fused": True, "block_kv": block,
-            "execution": "Pallas fused kernel"}
+    return {"fused": True, "block_kv": block, "kernel_eligible": True,
+            "route": routes[0], "execution": "Pallas fused kernel"}
 
 
 # ---------------------------------------------------------------------------

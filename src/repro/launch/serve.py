@@ -228,12 +228,19 @@ def main():
         if kv_fmt == "hif4":
             _print_attention_dispatch(cfg, ctx, cap)
 
-    tokens = jax.random.randint(
-        jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab)
+    # family-correct prefill inputs: audio takes encoder frames, vlm
+    # takes projected embeds, everything else token ids
+    from repro.runtime.scenario import prefill_batch
+
+    batch = prefill_batch(cfg, args.batch, args.prompt_len)
+    tokens = batch.get("tokens")
     # packed impls reuse the converted tree (prepare is idempotent on it);
     # the qdq artifact is re-derived inside serve from the raw weights
     sparams = serving_params if nvals else params
     if args.kv_pages:
+        assert tokens is not None, (
+            "--kv-pages serves token requests (dense/vlm-embeds not "
+            "supported by the paged scheduler entry)")
         assert kv_fmt == "hif4", (
             "--kv-pages requires --kv-format hif4 on a KV-cache family "
             "(the page pool stores packed HiF4 pages)")
@@ -247,7 +254,7 @@ def main():
               f"{stats['peak_live_pages']}/{args.kv_pages} pages live")
         toks = jnp.stack(res)
     else:
-        toks = serve(cfg, sparams, {"tokens": tokens}, ctx, sc)
+        toks = serve(cfg, sparams, batch, ctx, sc)
     for i in range(args.batch):
         print(f"request {i}: {toks[i].tolist()}")
 

@@ -145,9 +145,11 @@ def abstract_cache(cfg: ArchConfig, batch: int, seq: int,
                    kv_format: str = "bf16") -> dict:
     """Cache pytree spec for a decode step with capacity ``seq``.
 
-    kv_format="hif4" packs the self-attention KV cache at 4.5 bits/value
-    (repro.core.kvcache) for the transformer families; SSM state and the
-    audio/hybrid caches stay bf16 (documented fallback, docs/EXECUTION.md).
+    kv_format="hif4" packs the attention KV caches at 4.5 bits/value
+    (repro.core.kvcache) for the transformer families and the audio
+    decoder (both the growing "self" cache and the read-only encoder
+    "cross" cache); SSM state and the hybrid caches stay bf16
+    (documented fallback, docs/EXECUTION.md).
     """
     fam = cfg.family
     pos = PSpec((), (), dtype=jnp.int32, init="zeros")
@@ -174,9 +176,12 @@ def abstract_cache(cfg: ArchConfig, batch: int, seq: int,
         }
     if fam == "audio":
         return {
-            "self": stack_specs(tf.attn_cache_specs(cfg, batch, seq), cfg.n_layers),
+            "self": stack_specs(
+                tf.attn_cache_specs(cfg, batch, seq, kv_format), cfg.n_layers
+            ),
             "cross": stack_specs(
-                tf.attn_cache_specs(cfg, batch, ENC_FRAMES_DECODE), cfg.n_layers
+                tf.attn_cache_specs(cfg, batch, ENC_FRAMES_DECODE, kv_format),
+                cfg.n_layers,
             ),
             "pos": pos,
         }
@@ -640,18 +645,29 @@ def quantize_kv_cache(cache: dict, cfg: ArchConfig) -> dict:
     ``prepare_params_for_serving``, applied once at cache build. Grouping
     is per token and the re-layout is a pure bit move, so this bulk
     conversion is bit-identical to appending the same tokens one at a
-    time — the invariant continuous-batching parity rests on. Only the
-    transformer families' self-attention cache ("kv") converts; call
-    before :func:`pad_cache` (zero padding after packing stays inert).
+    time — the invariant continuous-batching parity rests on. The
+    transformer families convert their self-attention cache ("kv"); the
+    audio family converts both the decoder "self" cache and the
+    read-only encoder "cross" cache (the cross cache never grows, so it
+    is packed once here and only ever dequantized on read). Call before
+    :func:`pad_cache` (zero padding after packing stays inert).
     """
     from repro.core import kvcache
 
-    assert cfg.family in ("dense", "vlm", "moe"), cfg.family
+    assert cfg.family in ("dense", "vlm", "moe", "audio"), cfg.family
+
+    def pack(kv):
+        return {
+            "k": kvcache.to_kernel_layout(kvcache.quantize_kv(kv["k"])),
+            "v": kvcache.to_kernel_layout(kvcache.quantize_kv(kv["v"])),
+        }
+
     out = dict(cache)
-    out["kv"] = {
-        "k": kvcache.to_kernel_layout(kvcache.quantize_kv(cache["kv"]["k"])),
-        "v": kvcache.to_kernel_layout(kvcache.quantize_kv(cache["kv"]["v"])),
-    }
+    if cfg.family == "audio":
+        out["self"] = pack(cache["self"])
+        out["cross"] = pack(cache["cross"])
+    else:
+        out["kv"] = pack(cache["kv"])
     return out
 
 

@@ -200,8 +200,12 @@ def attn_decode(
         if not cross:
             k_new = apply_rope(k_new, positions, cfg.attn.rope_theta)
     if cross:
+        # read-only encoder cache: every position is valid, so length is
+        # the cache capacity whether dense (S axis) or HiF4-packed
         new_cache = cache
-        length = jnp.full((B,), cache["k"].shape[1], jnp.int32)
+        cap = (kvcache.seq_capacity(cache["k"])
+               if kvcache.is_packed_kv(cache["k"]) else cache["k"].shape[1])
+        length = jnp.full((B,), cap, jnp.int32)
     elif pages is not None:
         # paged HiF4 pool (repro.core.kvcache.init_page_pool): per-layer
         # leaves (n_pages, F, P); the one token's bytes land through the

@@ -1,0 +1,356 @@
+"""Scenario-matrix harness: declarative serve cells with dispatch probes.
+
+A :class:`Scenario` is ONE cell of the regression matrix
+(arch x impl x kv_format x policy x batch x seqlen), declared as data:
+what to serve, how to serve it, which engine routes the cell MUST take
+(``expect``), and how much measured-latency drift the stored trajectory
+tolerates (``rel_tol``). :func:`run_scenarios` executes every cell
+through the real ``repro.runtime.serve_loop`` stack — the same jitted
+prefill / quantize-KV / decode-scan (or page-pool ``serve_requests``)
+path production serving runs — and returns one record per cell carrying:
+
+- measured steady-state decode-step latency (interleaved best-of-N on
+  the jitted scan: the cells alternate inside one timing loop so
+  sustained machine-load phases hit every cell equally — sequential
+  phases were measured to swing CPU ratios 2.5-4x) and prefill latency;
+- a roofline byte count built from EXACT HiF4 payload sizes (0.5625
+  B/value packed weights, ``kvcache.kv_bytes_per_token`` for the cache)
+  — ``benchmarks/roofline.py`` turns it into a predicted step time
+  against the measured stream bandwidth;
+- the engine dispatch actually probed for the cell
+  (:func:`repro.core.engine.attention_dispatch_info` /
+  :func:`packed_dispatch_info` / :func:`resolve_kv_format`) checked
+  against the declared ``expect`` assertions.
+
+Dispatch is probed analytically rather than spied at runtime because the
+serve jit cache (``serve_loop._JIT_CACHE``) means repeated cells never
+re-trace; ``tests/test_scenario.py`` pins probe == actual execution.
+
+``benchmarks/matrix.py`` declares the cells and owns the stored
+``BENCH_matrix.json`` trajectory + gates; this module is the mechanism.
+"""
+import dataclasses
+import time
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.core import engine as qengine
+from repro.core import kvcache
+from repro.core.policy import get_policy
+from repro.core.qlinear import PackedW
+from repro.models import lm
+from repro.models.common import ModelCtx
+from repro.runtime import serve_loop
+from repro.runtime.serve_loop import (
+    ServeConfig,
+    build_decode_cache,
+    kv_format_fallback,
+    packed_weight_bytes,
+    resolve_kv_format,
+    serve_requests,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One declarative cell of the serve regression matrix."""
+
+    name: str                     # unique cell id in BENCH_matrix.json
+    arch: str                     # registry id; served .reduced()
+    impl: str                     # qdq | packed | pallas
+    kv_format: str                # REQUESTED cache format: bf16 | hif4
+    paged: bool = False           # page-pool serve_requests cell
+    policy: str = "uniform:hif4"  # QuantPolicy preset for weight sites
+    batch: int = 2
+    prompt_len: int = 16
+    new_tokens: int = 8
+    rel_tol: float = 3.0          # regression factor vs stored decode_step_ms
+    # expected-dispatch assertions, e.g. ("kv:hif4", "kv:no-fallback",
+    # "attn:fused_decode_attention", "matmul:fused") — see check_expect
+    expect: Sequence[str] = ()
+
+
+# expectation vocabulary -> how the probed dispatch must look. Routes are
+# backend-NEUTRAL: "attn:fused_decode_attention" means the cell is
+# kernel-eligible (the Pallas kernel on TPU, its bit-exact XLA twin
+# off-TPU); "attn:twin" means the chunked-dequantize twin is the ONLY
+# possible execution (qdq impl / layout), on every backend.
+_EXPECT_CHECKS = {
+    "kv:hif4": lambda d: d["kv_format_resolved"] == "hif4",
+    "kv:bf16": lambda d: d["kv_format_resolved"] == "bf16",
+    "kv:fallback": lambda d: d["kv_format_fallback"],
+    "kv:no-fallback": lambda d: not d["kv_format_fallback"],
+    "attn:fused_decode_attention":
+        lambda d: d["attn"].get("kernel_eligible") and not d["paged"],
+    "attn:fused_paged_decode_attention":
+        lambda d: d["attn"].get("kernel_eligible") and d["paged"],
+    "attn:twin":
+        lambda d: d["attn"]["route"] != "none"
+        and d["attn"].get("kernel_eligible") is False,
+    "attn:dense": lambda d: d["attn"]["route"] == "dense",
+    "attn:none": lambda d: d["attn"]["route"] == "none",
+    "matmul:fused": lambda d: d["matmul"]["route"] == "fused",
+    "matmul:dequant-dot": lambda d: d["matmul"]["route"] == "dequant-dot",
+    "matmul:qdq": lambda d: d["matmul"]["route"] == "qdq",
+}
+
+EXPECTATIONS = tuple(sorted(_EXPECT_CHECKS))
+
+
+def check_expect(expect: Sequence[str], dispatch: dict) -> list:
+    """The declared assertions a probed dispatch violates (empty = pass)."""
+    failed = []
+    for e in expect:
+        if e not in _EXPECT_CHECKS:
+            failed.append(f"{e} (unknown expectation)")
+        elif not _EXPECT_CHECKS[e](dispatch):
+            failed.append(e)
+    return failed
+
+
+def prefill_batch(cfg, batch: int, prompt_len: int, seed: int = 1) -> dict:
+    """The prefill inputs each family's serve entry takes."""
+    key = jax.random.PRNGKey(seed)
+    if cfg.family == "audio":
+        return {"frames": jax.random.normal(
+            key, (batch, prompt_len, cfg.d_model), jnp.float32)}
+    if cfg.embeds_input:
+        return {"embeds": jax.random.normal(
+            key, (batch, prompt_len, cfg.d_model), jnp.float32)}
+    return {"tokens": jax.random.randint(
+        key, (batch, prompt_len), 0, cfg.vocab)}
+
+
+def _first_packed(params) -> Optional[PackedW]:
+    for leaf in jax.tree_util.tree_leaves(
+            params, is_leaf=lambda x: isinstance(x, PackedW)):
+        if isinstance(leaf, PackedW):
+            return leaf
+    return None
+
+
+def probe_dispatch(cfg, quant, serve_cfg: ServeConfig, serving_params,
+                   *, paged: bool = False, batch: int = 1,
+                   prompt_len: int = 16) -> dict:
+    """Analytically resolve every dispatch decision this cell will hit.
+
+    Pure probes — no serving, no tracing: ``resolve_kv_format`` for the
+    cache format, :func:`repro.core.engine.attention_dispatch_info` on a
+    geometry-exact packed probe cache (page-pool shaped for paged cells),
+    and :func:`repro.core.engine.packed_dispatch_info` on the first real
+    ``PackedW`` of the serving params (all block matmuls share the
+    eligibility rule, which depends on impl/format, not shape).
+    """
+    a = cfg.attn
+    resolved = resolve_kv_format(cfg, quant, serve_cfg)
+    d = {
+        "kv_format_resolved": resolved,
+        "kv_format_fallback": kv_format_fallback(cfg, quant, serve_cfg),
+        "paged": paged,
+    }
+    if cfg.family == "ssm" or a is None:
+        d["attn"] = {"route": "none"}
+    elif resolved != "hif4":
+        d["attn"] = {"route": "dense"}
+    elif paged:
+        pool = kvcache.init_page_pool(cfg.n_layers, a.n_kv_heads, a.d_head,
+                                      2, serve_cfg.kv_page_tokens)
+        d["attn"] = qengine.attention_dispatch_info(
+            quant, pool["k"], n_kv_heads=a.n_kv_heads, d_head=a.d_head,
+            paged=True)
+    else:
+        probe = kvcache.to_kernel_layout(kvcache.quantize_kv(
+            jnp.zeros((1, 8, a.n_kv_heads, a.d_head), jnp.bfloat16)))
+        d["attn"] = qengine.attention_dispatch_info(
+            quant, probe, n_kv_heads=a.n_kv_heads, d_head=a.d_head)
+    w = _first_packed(serving_params)
+    if w is None:
+        # nothing packed (qdq plan / hybrid artifact): fake-quant dense dots
+        d["matmul"] = {"route": "qdq", "execution": "qdq dense dot"}
+    else:
+        info = qengine.packed_dispatch_info(
+            quant, w, decode_m=batch, prefill_m=batch * prompt_len)
+        info["route"] = "fused" if info["fused"] else "dequant-dot"
+        d["matmul"] = info
+    return d
+
+
+def _params_nbytes(params) -> int:
+    """Resident weight bytes, PackedW-aware (exact 4.5-bit payload)."""
+    packed_b, _ = packed_weight_bytes(params)
+    dense_b = sum(
+        leaf.nbytes for leaf in jax.tree_util.tree_leaves(
+            params, is_leaf=lambda x: isinstance(x, PackedW))
+        if not isinstance(leaf, PackedW))
+    return packed_b + int(dense_b)
+
+
+def decode_step_bytes(cfg, serving_params, cache, valid_len: int) -> dict:
+    """EXACT HBM traffic floor of one decode step, from payload sizes.
+
+    A decode step must stream every resident weight byte once (batch
+    reuses them) plus the valid prefix of every attention cache entry:
+    packed entries at their true 4.5-bit + meta + tail payload
+    (``kvcache.packed_kv_nbytes``), dense entries at 2 B/value. The
+    read-only cross cache is fully valid; recurrent ("layers") state is
+    read AND written every step. This is the roofline numerator —
+    dividing by measured stream bandwidth gives the predicted step time.
+    """
+    weight_bytes = _params_nbytes(serving_params)
+    kv_bytes = 0
+    for entry, frac_valid in (("kv", None), ("self", None), ("cross", 1.0)):
+        kv = cache.get(entry)
+        if kv is None:
+            continue
+        for tensor in (kv["k"], kv["v"]):
+            if kvcache.is_packed_kv(tensor):
+                total = kvcache.packed_kv_nbytes(tensor)
+                cap = kvcache.seq_capacity(tensor)
+            else:
+                total = int(tensor.nbytes)
+                cap = tensor.shape[2]          # (L, B, S, Hkv, Dh)
+            frac = 1.0 if frac_valid else min(valid_len / cap, 1.0)
+            kv_bytes += int(total * frac)
+    state_bytes = 0
+    if "layers" in cache:
+        state_bytes = 2 * int(sum(                 # read + write
+            leaf.nbytes for leaf in jax.tree_util.tree_leaves(cache["layers"])))
+    return {
+        "weight_bytes": weight_bytes,
+        "kv_bytes": kv_bytes,
+        "state_bytes": state_bytes,
+        "bytes_per_step": weight_bytes + kv_bytes + state_bytes,
+    }
+
+
+def _build_cell(scn: Scenario):
+    """Materialize one cell: cfg/ctx/plan, serving params, decode state."""
+    cfg = get_arch(scn.arch).reduced()
+    plan = lm.quant_plan(cfg, get_policy(
+        scn.policy, impl=scn.impl, kv=kvcache.KVCacheConfig(scn.kv_format)))
+    ctx = ModelCtx(quant=plan.base, plan=plan, remat=False,
+                   attn_q_chunk=8, attn_k_chunk=8)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    sp = serve_loop.prepare_params_for_serving(params, cfg, plan)
+    return cfg, ctx, sp
+
+
+def _serve_cfg(scn: Scenario) -> ServeConfig:
+    sc = ServeConfig(max_new_tokens=scn.new_tokens, kv_format=scn.kv_format)
+    if scn.paged:
+        # pool sized to hold every request at full length, page = 16 toks
+        pages = scn.batch * (
+            -(-(scn.prompt_len + scn.new_tokens) // 16)) + 1
+        sc = dataclasses.replace(sc, kv_pages=pages, kv_page_tokens=16,
+                                 cache_capacity=-(-(scn.prompt_len
+                                                    + scn.new_tokens) // 16) * 16)
+    return sc
+
+
+def run_scenarios(scenarios: Sequence[Scenario], *, repeats: int = 7,
+                  log=print) -> list:
+    """Execute cells through the real serve stack; one record per cell.
+
+    Scan-served cells (everything non-paged) are timed INTERLEAVED on
+    their jitted decode scans, feeding each call's returned state back
+    (the scan donates its cache — this is exactly the serving steady
+    state), best-of-``repeats``. Paged cells run the page-pool
+    ``serve_requests`` scheduler end-to-end (admission + prefill +
+    decode), so their latency is a coarser ms/token — their ``rel_tol``
+    should say so. Each record's ``roofline`` carries exact payload byte
+    counts; ``benchmarks.roofline`` turns them into predicted times.
+    """
+    names = [s.name for s in scenarios]
+    assert len(set(names)) == len(names), f"duplicate cell names: {names}"
+    records, states, steps, serving, paged_cells = {}, {}, {}, {}, []
+    for scn in scenarios:
+        t_setup = time.perf_counter()
+        cfg, ctx, sp = _build_cell(scn)
+        sc = _serve_cfg(scn)
+        dispatch = probe_dispatch(cfg, ctx.quant, sc, sp, paged=scn.paged,
+                                  batch=scn.batch, prompt_len=scn.prompt_len)
+        failed = check_expect(scn.expect, dispatch)
+        rec = dict(dataclasses.asdict(scn))
+        rec["expect"] = list(scn.expect)
+        rec.update({
+            "family": cfg.family,
+            "kv_format_resolved": dispatch["kv_format_resolved"],
+            "dispatch": {
+                "kv_format_fallback": dispatch["kv_format_fallback"],
+                "attn": dispatch["attn"],
+                "matmul": dispatch["matmul"],
+            },
+            "dispatch_ok": not failed,
+            "dispatch_failures": failed,
+        })
+        records[scn.name] = rec
+        if scn.paged:
+            paged_cells.append((scn, cfg, ctx, sp, sc))
+            log(f"[matrix] {scn.name}: paged cell set up "
+                f"({time.perf_counter() - t_setup:.1f}s)")
+            continue
+
+        sctx = serve_loop.serving_ctx(ctx)
+        batch = prefill_batch(cfg, scn.batch, scn.prompt_len)
+        prefill = serve_loop._jit_prefill(cfg, sctx)
+        step = serve_loop._jit_decode_scan(cfg, sctx, scn.new_tokens, None)
+        logits, cache = build_decode_cache(cfg, sp, batch, sctx, sc,
+                                           quant=ctx.quant)
+        rec["roofline"] = decode_step_bytes(
+            cfg, sp, cache, scn.prompt_len + scn.new_tokens // 2)
+        token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        done = jnp.zeros(token.shape, bool)
+        toks, token, cache, done = step(sp, token, cache, done)
+        jax.block_until_ready(toks)                  # compile + warmup
+        t_pre = float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter()
+            out = prefill(sp, batch)
+            jax.block_until_ready(out)
+            t_pre = min(t_pre, time.perf_counter() - t0)
+        rec["prefill_ms"] = round(t_pre * 1e3, 4)
+        serving[scn.name], steps[scn.name] = sp, step
+        states[scn.name] = (token, cache, done)
+        log(f"[matrix] {scn.name}: compiled + warm "
+            f"({time.perf_counter() - t_setup:.1f}s)")
+
+    # interleaved steady-state decode timing across ALL scan cells
+    best = {name: float("inf") for name in states}
+    for _ in range(repeats):
+        for name in states:
+            token, cache, done = states[name]
+            t0 = time.perf_counter()
+            toks, token, cache, done = steps[name](
+                serving[name], token, cache, done)
+            jax.block_until_ready(toks)
+            n = records[name]["new_tokens"]
+            best[name] = min(best[name], (time.perf_counter() - t0) / n)
+            states[name] = (token, cache, done)
+    for name, t in best.items():
+        records[name]["decode_step_ms"] = round(t * 1e3, 4)
+        records[name]["timing"] = "scan-interleaved"
+
+    for scn, cfg, ctx, sp, sc in paged_cells:
+        rec = records[scn.name]
+        reqs = [jax.random.randint(jax.random.PRNGKey(40 + i),
+                                   (scn.prompt_len,), 0, cfg.vocab)
+                for i in range(scn.batch)]
+        t_e2e = float("inf")
+        for _ in range(max(2, repeats // 3)):
+            t0 = time.perf_counter()
+            out = serve_requests(cfg, sp, reqs, ctx, sc, slots=scn.batch)
+            jax.block_until_ready(out)
+            t_e2e = min(t_e2e, time.perf_counter() - t0)
+        rec["decode_step_ms"] = round(t_e2e / scn.new_tokens * 1e3, 4)
+        rec["timing"] = "e2e-paged"
+        rec["prefill_ms"] = None
+        cache = lm.init_cache(cfg, scn.batch, scn.prompt_len + scn.new_tokens,
+                              "hif4")
+        rec["roofline"] = decode_step_bytes(
+            cfg, sp, cache, scn.prompt_len + scn.new_tokens // 2)
+        log(f"[matrix] {scn.name}: paged e2e {rec['decode_step_ms']} ms/tok")
+
+    return [records[s.name] for s in scenarios]

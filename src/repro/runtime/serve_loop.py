@@ -50,19 +50,20 @@ class ServeConfig:
 def resolve_kv_format(cfg: ArchConfig, quant: QuantConfig,
                       serve_cfg: ServeConfig, *, verbose: bool = False) -> str:
     """The KV storage this serve actually runs: ServeConfig overrides the
-    QuantConfig KVCacheConfig; non-transformer families fall back to bf16
-    (SSM state / audio cross caches have no packed layout — see the
-    docs/EXECUTION.md matrix). ``verbose=True`` (the serve/launch entry
-    points) prints the fallback instead of narrowing silently; benchmark
-    and dryrun records carry it as ``kv_format_fallback``."""
+    QuantConfig KVCacheConfig; SSM-state families fall back to bf16 (the
+    recurrent state has no packed layout — see the docs/EXECUTION.md
+    matrix). Attention caches — including the audio self + read-only
+    cross (encoder) caches — pack. ``verbose=True`` (the serve/launch
+    entry points) prints the fallback instead of narrowing silently;
+    benchmark and dryrun records carry it as ``kv_format_fallback``."""
     from repro.core import kvcache
 
     fmt = serve_cfg.kv_format or quant.kv.kv_format
     assert fmt in kvcache.KV_FORMATS, fmt
-    if fmt == "hif4" and cfg.family not in ("dense", "vlm", "moe"):
+    if fmt == "hif4" and cfg.family not in ("dense", "vlm", "moe", "audio"):
         if verbose:
             print(f"[serve] note: kv_format=hif4 has no packed layout for "
-                  f"family {cfg.family!r} (SSM state / audio cross caches) "
+                  f"family {cfg.family!r} (SSM recurrent state) "
                   f"— serving falls back to bf16 KV")
         return "bf16"
     return fmt
@@ -329,6 +330,31 @@ def _jit_decode_scan(cfg: ArchConfig, sctx: ModelCtx, n_tokens: int,
     return fn
 
 
+def build_decode_cache(cfg: ArchConfig, serving_params: dict, batch: dict,
+                       sctx: ModelCtx, serve_cfg: ServeConfig, *,
+                       quant=None, verbose: bool = False):
+    """Prefill and return (last-token logits, THE decode cache serve runs).
+
+    The exact cache-build sequence :func:`serve` decodes against: prefill,
+    then — when :func:`resolve_kv_format` says the serve really runs hif4 —
+    pack the prefix ONCE (per-token groups: bit-identical to having
+    appended the same tokens one at a time), then pad to capacity (zero
+    padding of packed leaves is inert under the length mask). Exposed so
+    tests and the scenario matrix can assert the format actually served —
+    the ``kv_format_fallback`` flag must agree with these leaves.
+    """
+    quant = quant or sctx.quant
+    kv_fmt = resolve_kv_format(cfg, quant, serve_cfg, verbose=verbose)
+    logits, cache = _jit_prefill(cfg, sctx)(serving_params, batch)
+    if kv_fmt == "hif4":
+        cache = _jit_quantize_kv(cfg)(cache)
+    if cfg.family in ("dense", "vlm", "moe", "audio", "hybrid"):
+        prompt_len = int(cache["pos"])
+        cap = serve_cfg.cache_capacity or prompt_len + serve_cfg.max_new_tokens
+        cache = lm.pad_cache(cache, cfg, cap)
+    return logits, cache
+
+
 def serve(
     cfg: ArchConfig,
     params: dict,
@@ -344,18 +370,8 @@ def serve(
     """
     sctx = serving_ctx(ctx)
     params = prepare_params_for_serving(params, cfg, ctx.plan or ctx.quant)
-    kv_fmt = resolve_kv_format(cfg, ctx.quant, serve_cfg, verbose=True)
-
-    logits, cache = _jit_prefill(cfg, sctx)(params, batch)
-    if kv_fmt == "hif4":
-        # pack the prefix ONCE (per-token groups: bit-identical to having
-        # appended the same tokens one at a time), then pad — zero padding
-        # of packed leaves is inert under the length mask
-        cache = _jit_quantize_kv(cfg)(cache)
-    if cfg.family in ("dense", "vlm", "moe", "audio", "hybrid"):
-        prompt_len = int(cache["pos"])
-        cap = serve_cfg.cache_capacity or prompt_len + serve_cfg.max_new_tokens
-        cache = lm.pad_cache(cache, cfg, cap)
+    logits, cache = build_decode_cache(cfg, params, batch, sctx, serve_cfg,
+                                       quant=ctx.quant, verbose=True)
 
     token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     done = jnp.zeros(token.shape, bool)

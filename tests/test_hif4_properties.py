@@ -1,0 +1,136 @@
+"""Hypothesis property tests for repro.core.hif4 round-trip invariants.
+
+Randomized shapes / magnitudes / group boundaries pin the properties the
+scenario matrix and the packed serving stack rest on: exact power-of-two
+group scales (scale equivariance), 0xFF-metadata NaN propagation through
+EVERY decode path, bit-level pack/unpack idempotence, and bulk-pack ==
+token-at-a-time append for the KV cache. Deterministic ci profile, same
+importorskip guards as the tier-1 hypothesis tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+hnp = pytest.importorskip("hypothesis.extra.numpy")
+st = pytest.importorskip("hypothesis.strategies")
+
+from repro.core import hif4, kvcache
+from repro.core import rounding as R
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=50, derandomize=True)
+hypothesis.settings.load_profile("ci")
+
+
+@st.composite
+def group_batches(draw, min_scale=-20, max_scale=8):
+    """(n, 64) f32 arrays on the bf16 grid, group magnitudes randomized
+    across power-of-two decades (well inside the E6M2 scale range)."""
+    n = draw(st.integers(min_value=1, max_value=4))
+    scale = 2.0 ** draw(st.integers(min_value=min_scale, max_value=max_scale))
+    arr = draw(hnp.arrays(
+        np.float32, (n, hif4.GROUP_SIZE),
+        elements=st.floats(min_value=-4.0, max_value=4.0, width=32)))
+    x = jnp.asarray(arr * scale, jnp.bfloat16).astype(jnp.float32)
+    return np.asarray(x)
+
+
+@hypothesis.given(group_batches())
+def test_group_scale_is_exactly_on_e6m2_grid(x):
+    """The group scale Algorithm 1 emits lives EXACTLY on the E6M2 grid
+    (power-of-two times {1, 1.25, 1.5, 1.75}): encoding and decoding it
+    is bitwise lossless, so the packed artifact loses nothing."""
+    g = hif4.quantize_groups(jnp.asarray(x))
+    rt = R.decode_e6m2(R.encode_e6m2(g.e6m2))
+    np.testing.assert_array_equal(np.asarray(rt), np.asarray(g.e6m2))
+
+
+@hypothesis.given(group_batches(min_scale=-10, max_scale=4),
+                  st.integers(min_value=-4, max_value=4))
+def test_power_of_two_scaling_equivariance(x, k):
+    """Scaling a group by 2^k shifts only the (exact power-of-two) scale:
+    the reconstruction scales by exactly 2^k, bitwise — the property that
+    makes HiF4 payload bytes an exact roofline numerator regardless of
+    tensor magnitude."""
+    vm = np.abs(x).max(axis=-1)
+    hypothesis.assume(bool(np.all((vm == 0) | (vm >= 2.0 ** -16))))
+    base = hif4.dequantize_groups(hif4.quantize_groups(jnp.asarray(x)))
+    scaled = hif4.dequantize_groups(
+        hif4.quantize_groups(jnp.asarray(x * 2.0 ** k)))
+    np.testing.assert_array_equal(
+        np.asarray(scaled), np.asarray(base) * 2.0 ** k)
+
+
+@hypothesis.given(group_batches())
+def test_pack_unpack_is_bitwise_idempotent(x):
+    """unpack(pack(g)) == g on every component, and re-packing reproduces
+    the identical 4.5-bit artifact — the packed bytes are a lossless
+    encoding of the quantized value."""
+    g = hif4.quantize_groups(jnp.asarray(x))
+    p = hif4.pack_groups(g)
+    g2 = hif4.unpack_groups(p)
+    for a, b in zip(g, g2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    p2 = hif4.pack_groups(g2)
+    np.testing.assert_array_equal(np.asarray(p.codes), np.asarray(p2.codes))
+    np.testing.assert_array_equal(np.asarray(p.meta), np.asarray(p2.meta))
+
+
+@hypothesis.given(group_batches())
+def test_corrupt_meta_nan_propagates_every_path(x):
+    """E6M2 code 0xFF decodes to NaN on EVERY path — artifact-layout
+    unpack, packed dequantize, and all three K-major kernel-tile helpers.
+    Corrupted metadata must poison the whole group loudly, never decode
+    to silently-wrong values."""
+    n = x.shape[0]
+    p = hif4.quantize_packed(jnp.asarray(x))
+    bad_meta = (p.meta & jnp.uint32(0x00FFFFFF)) | jnp.uint32(0xFF << 24)
+    bad = hif4.HiF4Packed(codes=p.codes, meta=bad_meta)
+
+    assert np.all(np.isnan(np.asarray(hif4.unpack_groups(bad).e6m2)))
+    assert np.all(np.isnan(
+        np.asarray(hif4.dequantize_packed(bad), np.float32)))
+
+    # K-major kernel-tile layout: one column per group row
+    codes_km = jnp.asarray(np.asarray(p.codes).reshape(n * 32, 1))
+    meta_km = jnp.asarray(np.asarray(bad_meta).reshape(n, 1))
+    _, scale = hif4.expand_meta_km(meta_km)
+    assert np.all(np.isnan(np.asarray(scale)))
+    _, scale_abs = hif4.absorbed_int_km(codes_km, meta_km)
+    assert np.all(np.isnan(np.asarray(scale_abs)))
+    deq = hif4.dequantize_km(codes_km, meta_km, dtype=jnp.float32)
+    assert np.all(np.isnan(np.asarray(deq)))
+
+
+@st.composite
+def kv_shapes(draw):
+    """Randomized KV geometry crossing group boundaries: F = Hkv*Dh sweeps
+    whole-group (F % 64 == 0) and staging-tail (F % 64 != 0) layouts."""
+    b = draw(st.integers(min_value=1, max_value=2))
+    s = draw(st.integers(min_value=1, max_value=6))
+    hkv = draw(st.integers(min_value=1, max_value=4))
+    dh = draw(st.sampled_from((8, 16, 24, 32, 48, 64)))
+    seed = draw(st.integers(min_value=0, max_value=2 ** 16))
+    return b, s, hkv, dh, seed
+
+
+@hypothesis.given(kv_shapes())
+def test_bulk_pack_equals_token_at_a_time_append(shape):
+    """Per-token grouping: bulk-quantizing a whole sequence produces the
+    very bytes of appending its tokens one at a time — in BOTH layouts.
+    This is the invariant continuous batching and prefix packing rest on,
+    here pinned across randomized batch/seq/head/tail geometry."""
+    b, s, hkv, dh, seed = shape
+    kv = (jax.random.normal(jax.random.PRNGKey(seed), (b, s, hkv, dh))
+          * 0.3).astype(jnp.bfloat16)
+    for to_layout in (lambda t: t, kvcache.to_kernel_layout):
+        bulk = to_layout(kvcache.quantize_kv(kv))
+        cache = jax.tree_util.tree_map(lambda t: jnp.zeros(t.shape, t.dtype),
+                                       bulk)
+        for i in range(s):
+            cache = kvcache.append_token(cache, kv[:, i: i + 1],
+                                         jnp.asarray(i))
+        for key in bulk:
+            np.testing.assert_array_equal(np.asarray(cache[key]),
+                                          np.asarray(bulk[key]))

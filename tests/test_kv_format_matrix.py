@@ -1,0 +1,77 @@
+"""resolve_kv_format fallback loudness as a full family matrix.
+
+Every registry arch x every requested KV format, asserting that the
+``kv_format_fallback`` flag agrees with (a) the verbose stdout fallback
+note and (b) the format of the cache leaves ACTUALLY served — built
+through ``serve_loop.build_decode_cache``, the exact sequence ``serve``
+decodes against. The enc-dec families (audio/vlm) must serve packed
+HiF4 — including the whisper cross (encoder) cache — with no fallback;
+only the SSM-state families (ssm/hybrid) may narrow, and must say so.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_arch
+from repro.core import kvcache
+from repro.core.qlinear import QuantConfig
+from repro.models import lm
+from repro.models.common import ModelCtx
+from repro.runtime import serve_loop
+from repro.runtime.scenario import prefill_batch
+from repro.runtime.serve_loop import (
+    ServeConfig,
+    build_decode_cache,
+    kv_format_fallback,
+    resolve_kv_format,
+)
+
+ARCHS = ("qwen1.5-0.5b", "granite-moe-1b-a400m", "mamba2-1.3b",
+         "zamba2-2.7b", "whisper-tiny", "llava-next-34b")
+FALLBACK_FAMILIES = ("ssm", "hybrid")     # recurrent state: no packed layout
+
+
+def _served_formats(cache):
+    """kv format per attention entry actually present in a decode cache."""
+    return {
+        entry: "hif4" if kvcache.is_packed_kv(cache[entry]["k"]) else "bf16"
+        for entry in ("kv", "self", "cross") if entry in cache
+    }
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("requested", ["bf16", "hif4"])
+@pytest.mark.parametrize("arch", ARCHS)
+def test_fallback_flag_agrees_with_served_cache(arch, requested, capsys):
+    cfg = get_arch(arch).reduced()
+    quant = QuantConfig(fmt="hif4", impl="packed",
+                        kv=kvcache.KVCacheConfig(requested))
+    ctx = ModelCtx(quant=quant, remat=False, attn_q_chunk=8, attn_k_chunk=8)
+    sc = ServeConfig(max_new_tokens=4, kv_format=requested)
+
+    resolved = resolve_kv_format(cfg, quant, sc, verbose=True)
+    fallback = kv_format_fallback(cfg, quant, sc)
+    expected_fallback = (requested == "hif4"
+                         and cfg.family in FALLBACK_FAMILIES)
+    assert fallback == expected_fallback
+    assert fallback == (resolved != requested)
+    # loudness: narrowing must be printed, silence means no narrowing
+    out = capsys.readouterr().out
+    assert ("falls back to bf16" in out) == fallback
+
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    sp = serve_loop.prepare_params_for_serving(params, cfg, quant)
+    sctx = serve_loop.serving_ctx(ctx)
+    _, cache = build_decode_cache(cfg, sp, prefill_batch(cfg, 2, 16), sctx,
+                                  sc, quant=quant)
+    fmts = _served_formats(cache)
+    if cfg.family == "ssm":
+        assert fmts == {}                  # no attention cache at all
+    else:
+        # every attention entry served carries exactly the resolved format
+        assert set(fmts.values()) == {resolved}, fmts
+    if cfg.family == "audio":
+        # the read-only cross (encoder) cache packs too — the former
+        # permanent-fallback cell is gone
+        assert fmts["cross"] == resolved
+        assert set(fmts) == {"self", "cross"}

@@ -1,0 +1,222 @@
+"""The matrix perf gates must fail LOUDLY on a doctored trajectory.
+
+Builds a synthetic-but-valid BENCH_matrix.json record straight from the
+cell declarations in benchmarks/matrix.py, checks that it (and the
+committed record) pass ``matrix.check``, then doctors it one gate at a
+time — dropped cells, a failed dispatch assertion, an undeclared
+hif4->bf16 fallback, an enc-dec fallback, a regressed ratio, a missing
+gate — and asserts every doctoring raises with the gate's name in the
+message. The last test drives ``benchmarks.run.check_matrix_gates``
+against a doctored file on disk: the run.py entry point itself must
+raise, not skip.
+"""
+import copy
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks import matrix, run
+
+FAMILY_OF_ARCH = {arch: family for arch, family in matrix.ARCHS.values()}
+
+
+def _synthetic_record():
+    """A record shaped exactly like a real --cells all --update run, with
+    deterministic fake timings derived from each cell's declaration."""
+    cells = []
+    for i, s in enumerate(matrix.CELLS):
+        fallback = "kv:fallback" in s.expect
+        resolved = "bf16" if (fallback or s.kv_format == "bf16") else "hif4"
+        ms = 1.0 + 0.01 * i
+        cells.append({
+            "name": s.name,
+            "arch": s.arch,
+            "family": FAMILY_OF_ARCH[s.arch],
+            "impl": s.impl,
+            "kv_format": s.kv_format,
+            "kv_format_resolved": resolved,
+            "paged": s.paged,
+            "policy": s.policy,
+            "batch": s.batch,
+            "prompt_len": s.prompt_len,
+            "new_tokens": s.new_tokens,
+            "rel_tol": s.rel_tol,
+            "expect": list(s.expect),
+            "dispatch_ok": True,
+            "dispatch_failures": [],
+            "dispatch": {"kv_format_fallback": fallback},
+            "decode_step_ms": round(ms, 4),
+            "prefill_ms": 2.0,
+            "roofline": {"bytes_per_step": 1 << 20, "mem_bw": 1 << 32,
+                         "predicted_ms": 0.25, "achieved_fraction": 0.25},
+        })
+    by_name = {c["name"]: c for c in cells}
+    # make both ratio gates pass: baseline slightly slower than subject
+    for g in matrix.RATIO_GATES:
+        by_name[g["baseline"]]["decode_step_ms"] = 1.0
+        by_name[g["subject"]]["decode_step_ms"] = 0.95
+    return {
+        "version": matrix.VERSION,
+        "backend": "cpu",
+        "mem_bw": 1 << 32,
+        "repeats": 7,
+        "ratio_gates": matrix.compute_ratio_gates(by_name),
+        "cells": cells,
+    }
+
+
+def test_synthetic_record_passes():
+    matrix.check(_synthetic_record())
+
+
+def test_committed_trajectory_passes():
+    """The record actually in the repo must satisfy every static gate."""
+    path = matrix.OUT_PATH
+    assert os.path.exists(path), "benchmarks/BENCH_matrix.json not committed"
+    with open(path) as f:
+        record = json.load(f)
+    matrix.check(record)
+    # and it must cover the declared matrix exactly
+    assert {c["name"] for c in record["cells"]} == {s.name
+                                                   for s in matrix.CELLS}
+
+
+def test_gate_names_cover_every_enforced_gate():
+    """GATE_NAMES is the documented gate vocabulary (docs lint keys off
+    it); the ratio gates must be declared in it."""
+    for g in matrix.RATIO_GATES:
+        assert g["name"] in matrix.GATE_NAMES
+    assert {"cell_coverage", "dispatch_ok",
+            "no_silent_fallback"} <= matrix.GATE_NAMES
+
+
+@pytest.fixture
+def record():
+    return _synthetic_record()
+
+
+def test_doctored_version_fails(record):
+    record["version"] = 0
+    with pytest.raises(AssertionError, match="version"):
+        matrix.check(record)
+
+
+def test_doctored_cell_count_fails_coverage(record):
+    record["cells"] = record["cells"][:10]
+    with pytest.raises(AssertionError, match="cell_coverage"):
+        matrix.check(record)
+
+
+def test_doctored_family_loss_fails_coverage(record):
+    record["cells"] = [c for c in record["cells"] if c["family"] != "audio"]
+    with pytest.raises(AssertionError, match="cell_coverage"):
+        matrix.check(record)
+
+
+def test_doctored_missing_measurement_fails(record):
+    record["cells"][0]["decode_step_ms"] = None
+    with pytest.raises(AssertionError, match="decode_step_ms"):
+        matrix.check(record)
+
+
+def test_doctored_missing_roofline_prediction_fails(record):
+    record["cells"][0]["roofline"]["predicted_ms"] = None
+    with pytest.raises(AssertionError, match="predicted_ms"):
+        matrix.check(record)
+
+
+def test_doctored_dispatch_failure_fails(record):
+    record["cells"][3]["dispatch_ok"] = False
+    record["cells"][3]["dispatch_failures"] = ["attn:fused_decode_attention"]
+    with pytest.raises(AssertionError, match="dispatch_ok"):
+        matrix.check(record)
+
+
+def test_doctored_silent_fallback_fails(record):
+    # a dense hif4 cell that fell back without declaring kv:fallback
+    cell = next(c for c in record["cells"]
+                if c["family"] == "dense" and c["kv_format"] == "hif4")
+    cell["dispatch"]["kv_format_fallback"] = True
+    cell["kv_format_resolved"] = "bf16"
+    with pytest.raises(AssertionError, match="no_silent_fallback"):
+        matrix.check(record)
+
+
+def test_doctored_encdec_fallback_fails_even_if_declared(record):
+    # whisper/llava hif4 cells may NEVER fall back — the cross-attention
+    # cache packs; declaring the fallback does not make it legal
+    cell = next(c for c in record["cells"]
+                if c["family"] == "audio" and c["kv_format"] == "hif4")
+    cell["dispatch"]["kv_format_fallback"] = True
+    cell["kv_format_resolved"] = "bf16"
+    cell["expect"] = list(cell["expect"]) + ["kv:fallback"]
+    with pytest.raises(AssertionError, match="enc-dec"):
+        matrix.check(record)
+
+
+def test_doctored_ratio_below_min_fails(record):
+    gate = record["ratio_gates"][0]
+    gate["value"] = 0.5
+    with pytest.raises(AssertionError, match=gate["name"]):
+        matrix.check(record)
+
+
+def test_doctored_ratio_null_with_both_cells_fails(record):
+    record["ratio_gates"][1]["value"] = None
+    with pytest.raises(AssertionError, match="skipped, not inapplicable"):
+        matrix.check(record)
+
+
+def test_doctored_missing_gate_fails(record):
+    record["ratio_gates"] = record["ratio_gates"][1:]
+    with pytest.raises(AssertionError, match="gate missing"):
+        matrix.check(record)
+
+
+def test_compare_flags_regression_and_dropped_expectation(record):
+    fresh = copy.deepcopy(record["cells"])
+    assert matrix.compare(record, fresh) == []     # identical -> in tolerance
+
+    slow = copy.deepcopy(record["cells"])
+    slow[0]["decode_step_ms"] = (record["cells"][0]["decode_step_ms"]
+                                 * slow[0]["rel_tol"] * 1.5)
+    fails = matrix.compare(record, slow)
+    assert any("trajectory_regression" in f for f in fails)
+
+    weakened = copy.deepcopy(record["cells"])
+    weakened[0]["expect"] = weakened[0]["expect"][1:]
+    fails = matrix.compare(record, weakened)
+    assert any("dropped expectation" in f for f in fails)
+
+
+def test_compare_within_tolerance_passes(record):
+    fresh = copy.deepcopy(record["cells"])
+    for c in fresh:                              # slower, but inside rel_tol
+        c["decode_step_ms"] = c["decode_step_ms"] * (c["rel_tol"] * 0.9)
+    assert matrix.compare(record, fresh) == []
+
+
+def test_run_check_matrix_gates_fails_loudly_on_doctored_file(tmp_path,
+                                                             record,
+                                                             capsys):
+    """The run.py entry point itself: a doctored trajectory on disk must
+    raise AssertionError (so benchmarks.run exits non-zero), and a valid
+    one must print the gate summary."""
+    good = tmp_path / "good.json"
+    good.write_text(json.dumps(record))
+    run.check_matrix_gates(path=str(good))
+    out = capsys.readouterr().out
+    assert "[matrix gates]" in out and "dispatch assertions passed" in out
+
+    record["cells"][5]["dispatch_ok"] = False
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps(record))
+    with pytest.raises(AssertionError, match="dispatch_ok"):
+        run.check_matrix_gates(path=str(bad))
+
+    with pytest.raises(AssertionError, match="missing"):
+        run.check_matrix_gates(path=str(tmp_path / "absent.json"))

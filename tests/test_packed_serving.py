@@ -4,6 +4,7 @@ quantized values), at 3.56x less weight residency."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_arch
 from repro.core.qlinear import PackedW, QuantConfig, quantize_params_offline
@@ -37,6 +38,7 @@ def test_packedw_roundtrip_4d_wo():
     assert deq.shape == (128, 128)
 
 
+@pytest.mark.slow
 def test_packed_serving_matches_offline_qdq():
     params = lm.init_params(CFG, jax.random.PRNGKey(0))
     tokens = jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0, CFG.vocab)
@@ -63,6 +65,7 @@ def test_packed_serving_matches_offline_qdq():
     assert bool(jnp.all(jnp.isfinite(logits2)))
 
 
+@pytest.mark.slow
 def test_fully_packed_serving_residency():
     """Packed weights AND a packed KV cache together: the whole serving
     working set (weights 0.5625 B/value, cache 4.5 bits/value + tail)

@@ -242,6 +242,7 @@ def _solo(params, r, ctx, P, cap, budget, eos=None):
     return serve(CFG, params, {"tokens": r[None, :]}, solo_ctx, sc)[0]
 
 
+@pytest.mark.slow
 def test_paged_scheduler_matches_solo_shared_prefix():
     """Mixed prompt lengths with a common 12-token prefix through the page
     pool: per-request outputs bitwise equal solo serving, and the prefix
@@ -266,6 +267,7 @@ def test_paged_scheduler_matches_solo_shared_prefix():
                                                  budget)))
 
 
+@pytest.mark.slow
 def test_paged_scheduler_prompt_on_page_boundary():
     """A prompt filling its pages EXACTLY (16 = 2 x P) must admit cleanly
     and put its first decode token at offset 0 of a fresh page."""
@@ -280,6 +282,7 @@ def test_paged_scheduler_prompt_on_page_boundary():
         np.asarray(res[0]), np.asarray(_solo(params, r, ctx, P, cap, budget)))
 
 
+@pytest.mark.slow
 def test_paged_scheduler_single_token_pages():
     """P=1 is the degenerate page size: every token its own page, the table
     IS the token order. Still bitwise vs solo at block_kv=1."""
@@ -294,6 +297,7 @@ def test_paged_scheduler_single_token_pages():
         np.asarray(res[0]), np.asarray(_solo(params, r, ctx, P, cap, budget)))
 
 
+@pytest.mark.slow
 def test_paged_scheduler_cow_divergence():
     """B's prompt is a strict prefix of A's that ends INSIDE A's live tail
     page: B shares the page via the partial registry, then its first
@@ -316,6 +320,7 @@ def test_paged_scheduler_cow_divergence():
                                                  budget)))
 
 
+@pytest.mark.slow
 def test_paged_scheduler_preemption_bitwise():
     """A pool too small for both sequences' decode growth: the younger slot
     is preempted mid-admission (its page BYTES snapshotted), restored after
@@ -337,6 +342,7 @@ def test_paged_scheduler_preemption_bitwise():
                                                  budget)))
 
 
+@pytest.mark.slow
 def test_paged_scheduler_eos_matches_solo():
     """eos handling through the paged retire path: a request stopping early
     returns exactly solo's eos-padded result."""
@@ -382,18 +388,21 @@ def _eos_case(eos_pick):
         np.testing.assert_array_equal(np.asarray(res[i]), np.asarray(solo[0]))
 
 
+@pytest.mark.slow
 def test_retire_eos_at_first_token():
     """eos emitted by prefill itself: the slot retires before any decode
     chunk ran for it, and the result is budget-length eos padding."""
     _eos_case(lambda toks: int(toks[0]))
 
 
+@pytest.mark.slow
 def test_retire_eos_near_budget():
     """eos on the LAST budgeted token: the trim-to-budget and pad-past-eos
     paths of retire() compose without off-by-one."""
     _eos_case(lambda toks: int(toks[-1]))
 
 
+@pytest.mark.slow
 def test_retire_no_eos_token_matches_eos_free():
     """An eos id that never appears must serve exactly like eos_id=None."""
     params = lm.init_params(CFG, jax.random.PRNGKey(0))

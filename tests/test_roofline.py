@@ -1,0 +1,69 @@
+"""Record filtering in benchmarks/roofline.py: load_records must drop
+error records, and table() must enforce the mesh/quant/shard filter (the
+fsdp/seq_shard condition was once a dead no-op branch — these tests pin
+that it now actually filters)."""
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks import roofline
+
+
+def _rec(arch="a", mesh="16x16", quant="hif4", fsdp=True, seq_shard=False,
+         **over):
+    r = {
+        "arch": arch, "shape": "decode", "mesh": mesh, "quant": quant,
+        "fsdp": fsdp, "seq_shard": seq_shard,
+        "roofline": {"t_compute_s": 1e-3, "t_memory_s": 2e-3,
+                     "t_collective_s": 5e-4, "dominant": "memory"},
+        "useful_flops_ratio": 0.5,
+        "memory": {"peak_bytes_est": 2 ** 30},
+    }
+    r.update(over)
+    return r
+
+
+def test_load_records_skips_error_records(tmp_path):
+    with open(tmp_path / "a.json", "w") as f:
+        json.dump(_rec(arch="good"), f)
+    with open(tmp_path / "b.json", "w") as f:
+        json.dump({"error": "OOM", "mesh": "16x16"}, f)
+    recs = roofline.load_records(str(tmp_path))
+    assert [r["arch"] for r in recs] == ["good"]
+
+
+def test_table_filters_mesh_quant_and_shard_flags():
+    recs = [
+        _rec(arch="keep"),
+        _rec(arch="wrong-mesh", mesh="2x16x16"),
+        _rec(arch="wrong-quant", quant="bf16"),
+        _rec(arch="fsdp-off", fsdp=False),
+        _rec(arch="no-shard-flag", seq_shard=None),
+    ]
+    del recs[4]["seq_shard"]                      # flag absent entirely
+    rows = roofline.table(recs, mesh="16x16", quant="hif4")
+    assert [r["arch"] for r in rows] == ["keep"]
+    # seq_shard must be an explicit bool; both True and False qualify
+    rows = roofline.table([_rec(arch="sp", seq_shard=True), _rec(arch="dp")])
+    assert sorted(r["arch"] for r in rows) == ["dp", "sp"]
+
+
+def test_table_rows_and_markdown_shape():
+    rows = roofline.table([_rec()])
+    assert rows[0]["dominant"] == "memory"
+    assert rows[0]["t_memory_ms"] == pytest.approx(2.0)
+    md = roofline.markdown(rows, "t")
+    assert md.startswith("### t") and "| a | decode |" in md
+
+
+def test_stream_bandwidth_and_prediction():
+    """The serve-matrix wiring: a measured positive bandwidth and the
+    bytes -> predicted-ms conversion it feeds."""
+    bw = roofline.measure_stream_bandwidth(nbytes=1 << 16, repeats=2)
+    assert bw > 0
+    assert roofline.predict_step_ms(bw, bw) == pytest.approx(1e3)
+    assert roofline.predict_step_ms(0, bw) == 0.0

@@ -16,7 +16,10 @@ whose prose makes cross-module claims about layouts and test anchors) for
     backticked ``uniform:<fmt>`` spellings, and backticked hyphenated
     names on lines that mention a policy/preset): the name must resolve
     in the ``repro.core.policy`` preset registry — docs advertising a
-    renamed or deleted preset fail CI.
+    renamed or deleted preset fail CI;
+  * matrix perf-gate references (the ``gate:`name``` spelling): the name
+    must be declared in ``benchmarks.matrix.GATE_NAMES`` — docs
+    documenting a gate ``check_matrix_gates`` does not enforce fail CI.
 
 Runs as a section of ``benchmarks/run.py`` and as the tier-1 test
 ``tests/test_docs.py``, so stale docs break CI instead of readers.
@@ -50,6 +53,10 @@ PATH_RE = re.compile(
 POLICY_FLAG_RE = re.compile(r"--policy[ =]+([A-Za-z0-9_:.\-/]+)")
 POLICY_UNIFORM_RE = re.compile(r"`(uniform:[A-Za-z0-9_]+)`")
 POLICY_NAME_RE = re.compile(r"`([a-z0-9]+(?:-[a-z0-9]+)+)`")
+
+# matrix perf-gate references: docs spell them gate:`name` so the lint
+# can tell a gate claim from ordinary backticked code
+GATE_RE = re.compile(r"gate:`([A-Za-z0-9_]+)`")
 
 
 def _policy_candidates(text: str) -> set:
@@ -149,11 +156,21 @@ def check_file(path: str, docstring_only: bool = False) -> list[str]:
             errors.append(
                 f"{rel}: unknown policy preset `{name}` (not in the "
                 f"repro.core.policy registry)")
+    gate_refs = sorted(set(GATE_RE.findall(text)))
+    if gate_refs:
+        from benchmarks.matrix import GATE_NAMES
+
+        for name in gate_refs:
+            if name not in GATE_NAMES:
+                errors.append(
+                    f"{rel}: unknown matrix gate gate:`{name}` (not in "
+                    f"benchmarks.matrix.GATE_NAMES)")
     return errors
 
 
 def run() -> list[str]:
     sys.path.insert(0, os.path.join(REPO, "src"))
+    sys.path.insert(0, REPO)                   # for benchmarks.matrix
     errors = []
     for path in _doc_paths():
         errors.extend(check_file(path))
