@@ -28,6 +28,8 @@ hif4->bf16 fallback, or a ratio regression):
   packed_over_qdq_decode   packed decode >= 0.9x qdq (fused-matmul claim)
   hif4_over_bf16_kv_decode hif4-KV decode >= 0.9x bf16-KV (fused-attention
                            claim)
+  guard_overhead           guarded decode (NaN sentinel + meta audit)
+                           >= 0.98x unguarded (guards nearly free)
 
 The two ratio gates moved here from ``benchmarks/serve_throughput.py``
 (which still RECORDS its ratios in BENCH_serve.json, but no longer
@@ -54,7 +56,7 @@ ARCHS = {
 GATE_NAMES = frozenset({
     "cell_coverage", "dispatch_ok", "no_silent_fallback",
     "trajectory_regression", "packed_over_qdq_decode",
-    "hif4_over_bf16_kv_decode",
+    "hif4_over_bf16_kv_decode", "guard_overhead",
 })
 
 # value = baseline decode_step_ms / subject decode_step_ms; the subject
@@ -66,6 +68,11 @@ RATIO_GATES = (
      "baseline": "qwen-qdq-bf16", "min_ratio": 0.9},
     {"name": "hif4_over_bf16_kv_decode", "subject": "qwen-packed-hif4",
      "baseline": "qwen-packed-bf16", "min_ratio": 0.9},
+    # guarded decode (NaN scan sentinel + per-chunk 0xFF meta audit) must
+    # hold >= 0.98x of the unguarded cell's decode rate — the "guards are
+    # nearly free" claim of the failure-semantics docs (<= ~1.02x cost)
+    {"name": "guard_overhead", "subject": "qwen-packed-hif4-guarded",
+     "baseline": "qwen-packed-hif4", "min_ratio": 0.98},
 )
 
 
@@ -130,6 +137,11 @@ def _cells() -> tuple:
             name=f"{short}-packed-hif4-paged", arch=arch, impl="packed",
             kv_format="hif4", paged=True, rel_tol=4.0,
             expect=_expect(family, "packed", "hif4", paged=True)))
+    # the guarded twin of the hot dense cell (guard_overhead gate subject)
+    cells.append(Scenario(
+        name="qwen-packed-hif4-guarded", arch="qwen1.5-0.5b", impl="packed",
+        kv_format="hif4", guarded=True,
+        expect=_expect("dense", "packed", "hif4")))
     # batch / seqlen variation on the hot dense cell
     cells.append(Scenario(
         name="qwen-packed-hif4-b4", arch="qwen1.5-0.5b", impl="packed",
@@ -151,12 +163,23 @@ SMOKE = ("qwen-qdq-bf16", "qwen-packed-bf16", "qwen-packed-hif4",
 
 
 def compute_ratio_gates(by_name: dict) -> list:
+    """Ratio gates prefer the subject cell's ``gate_timing`` entry for
+    their baseline — the tight pairwise A/B interleave (see
+    scenario.run_scenarios) that keeps both sides under identical
+    machine conditions — and fall back to the global-rotation
+    ``decode_step_ms`` when a run didn't produce one (subset runs,
+    synthetic records)."""
     out = []
     for g in RATIO_GATES:
         sub, base = by_name.get(g["subject"]), by_name.get(g["baseline"])
         value = None
         if sub and base:
-            value = round(base["decode_step_ms"] / sub["decode_step_ms"], 3)
+            gt = (sub.get("gate_timing") or {}).get(g["baseline"])
+            if gt:
+                value = round(gt["baseline_ms"] / gt["subject_ms"], 3)
+            else:
+                value = round(
+                    base["decode_step_ms"] / sub["decode_step_ms"], 3)
         out.append({**g, "value": value})
     return out
 
@@ -277,7 +300,9 @@ def main(argv=None):
     print(f"[matrix] backend={jax.default_backend()} "
           f"stream bandwidth {mem_bw / 2**30:.1f} GiB/s, "
           f"{len(cells)} cells")
-    results = run_scenarios(cells, repeats=args.repeats)
+    gate_pairs = tuple((g["baseline"], g["subject"]) for g in RATIO_GATES)
+    results = run_scenarios(cells, repeats=args.repeats,
+                            gate_pairs=gate_pairs)
     for c in results:
         ro = c["roofline"]
         ro["mem_bw"] = round(mem_bw)

@@ -30,6 +30,16 @@ import jax
 import numpy as np
 
 
+class CheckpointError(RuntimeError):
+    """Base of typed checkpoint-load errors (subclasses RuntimeError so
+    pre-existing ``except RuntimeError`` handling keeps working)."""
+
+
+class CheckpointCorruptError(CheckpointError):
+    """A checkpoint array's bytes no longer match the sha256 recorded in
+    its manifest — the payload was corrupted after it was written."""
+
+
 def _tree_paths(tree):
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     return leaves, treedef
@@ -127,7 +137,12 @@ def load_checkpoint(directory: str, step: int, target_tree: Any,
         if verify and "sha256" in entry:
             with open(fp, "rb") as f:
                 h = hashlib.sha256(f.read()).hexdigest()
-            assert h == entry["sha256"], f"corrupt checkpoint array {fp}"
+            if h != entry["sha256"]:
+                raise CheckpointCorruptError(
+                    f"checkpoint array {fp} fails its manifest sha256 "
+                    f"(expected {entry['sha256'][:12]}..., got {h[:12]}...) "
+                    "— the payload was corrupted after the atomic write; "
+                    "restore an earlier step or re-save the checkpoint")
         raw = np.load(fp)
         arr = np.frombuffer(raw.tobytes(), dtype=_resolve_dtype(entry["dtype"]))
         arr = arr.reshape(entry["shape"])

@@ -24,6 +24,11 @@ GROUP_SIZE = 64
 N_E1_8 = 8    # level-2 micro-exponents: one per 8 elements
 N_E1_16 = 16  # level-3 micro-exponents: one per 4 elements
 BITS_PER_VALUE = 4.5
+# E6M2 code 0xFF decodes to NaN on every path (expand_meta_km below,
+# rounding.decode_e6m2). Algorithm 1 NEVER produces it, so its presence in
+# packed metadata is definitionally corruption — the health sentinel the
+# serving guard (repro.runtime.guard) counts on packed KV pages.
+META_NAN = 0xFF
 MAX_POS = (2.0 ** 15 * 1.5) * 4.0 * 1.75   # = 2^18 * 1.3125  (Table II)
 MIN_POS = 2.0 ** -48 * 0.25                # = 2^-50           (Table II)
 INTRA_MAX = 7.0                            # 2^(1+1) * 1.75 (Alg. 1 line 8)
@@ -132,6 +137,15 @@ def dequantize_groups(g: HiF4Groups) -> jnp.ndarray:
     shift = jnp.repeat(g.e1_8, 8, axis=-1) + jnp.repeat(g.e1_16, 4, axis=-1)
     scale = g.e6m2.astype(dt)[..., None] * jnp.exp2(shift).astype(dt)
     return scale * g.s1p2
+
+
+def meta_nan_mask(meta: jnp.ndarray) -> jnp.ndarray:
+    """Elementwise True where a packed meta word carries the E6M2 NaN
+    sentinel (scale byte == :data:`META_NAN`). Any True is corruption:
+    Algorithm 1 never emits 0xFF, and every decode path turns it into NaN
+    (:func:`expand_meta_km`), so this mask is the cheap integrity probe
+    health audits reduce over."""
+    return (meta >> 24) == jnp.uint32(META_NAN)
 
 
 # ---------------------------------------------------------------------------

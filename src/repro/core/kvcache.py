@@ -444,6 +444,57 @@ def append_token_paged(pool_t: dict, kv_new: jnp.ndarray, pos: jnp.ndarray,
             for key in ("codes", "meta", "tail")}
 
 
+def scrub_pages(pool_t: dict, page_ids: jnp.ndarray) -> dict:
+    """Zero every byte of the selected pages (all layers).
+
+    Quarantine support: when a fault audit evicts a poisoned slot, its
+    freed pages are scrubbed so stale corruption (e.g. a 0xFF NaN
+    sentinel) cannot leak into the next sequence the allocator hands the
+    page to. Zero pages decode to zeros, identical to freshly
+    pool-initialized pages.
+    """
+    return {key: a.at[:, page_ids].set(0) for key, a in pool_t.items()}
+
+
+# Odd multipliers decorrelate the three leaf sums. Any SINGLE bit flip in
+# one leaf element changes that leaf's modular sum by ±2^j (j < 32), and an
+# odd multiple of ±2^j is never 0 mod 2^32 — so one flipped bit anywhere in
+# a page provably changes the page checksum.
+_CKSUM_META_MULT = 0x9E3779B1
+_CKSUM_TAIL_MULT = 0x85EBCA77
+
+
+def page_checksums(pool_t: dict) -> jnp.ndarray:
+    """(n_pages,) uint32 content checksum of each pool page (one tensor).
+
+    A modular byte/word sum over codes + meta + tail, reduced on device in
+    one pass so the per-chunk audit ships n_pages words to the host
+    instead of the pool's bytes. Detection guarantee: any single bit flip
+    in a page changes its checksum (see the multiplier note above);
+    multi-bit corruption is caught with probability ~1 - 2^-32.
+    """
+    sums = jnp.sum(pool_t["codes"].astype(jnp.uint32), axis=(0, 2, 3))
+    sums = sums + jnp.uint32(_CKSUM_META_MULT) * jnp.sum(
+        pool_t["meta"].astype(jnp.uint32), axis=(0, 2, 3))
+    if pool_t["tail"].shape[2]:
+        bits = jax.lax.bitcast_convert_type(pool_t["tail"], jnp.uint16)
+        sums = sums + jnp.uint32(_CKSUM_TAIL_MULT) * jnp.sum(
+            bits.astype(jnp.uint32), axis=(0, 2, 3))
+    return sums
+
+
+def page_meta_nan_counts(pool_t: dict) -> jnp.ndarray:
+    """(n_pages,) int32 count of E6M2 NaN-sentinel meta words per page.
+
+    Algorithm 1 never emits the 0xFF scale code
+    (:data:`repro.core.hif4.META_NAN`), so any nonzero count marks a
+    corrupted page — including the hot partial page whose checksum is
+    legitimately changing every append.
+    """
+    return jnp.sum(hif4.meta_nan_mask(pool_t["meta"]).astype(jnp.int32),
+                   axis=(0, 2, 3))
+
+
 # ---------------------------------------------------------------------------
 # Paged pool: host-side allocator / sharing metadata
 # ---------------------------------------------------------------------------

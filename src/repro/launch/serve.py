@@ -26,6 +26,16 @@ paged continuous-batching scheduler (page-granular admission, COW prefix
 sharing, LRU eviction / preemption — docs/EXECUTION.md) and the launcher
 prints pool residency and scheduler counters instead of the dense
 slots x capacity line. ``--kv-page-tokens`` sets the page size.
+
+``--guard`` arms the health sentinels (docs/EXECUTION.md §Failure
+semantics): NaN/Inf logits detection fused into the decode scan, per-chunk
+0xFF-meta and page-checksum audits over packed KV, quarantine + qdq/bf16
+fallback retry, and per-request status reporting (printed per request).
+``--inject-fault kind[:key=value,...]`` drives one deterministic fault
+through :mod:`repro.runtime.faults` to demonstrate detection/containment,
+e.g. ``--inject-fault meta_flip:seed=3,target_request=1,after_chunk=1``.
+Both flags route serving through the request scheduler (transformer
+families only).
 """
 import argparse
 
@@ -39,7 +49,8 @@ from repro.core.qlinear import PackedW, QuantConfig
 from repro.launch.mesh import make_host_mesh
 from repro.models import lm
 from repro.models.common import ModelCtx
-from repro.runtime import ServeConfig, serve
+from repro.runtime import GuardConfig, ServeConfig, serve
+from repro.runtime import faults
 from repro.runtime.serve_loop import (
     packed_weight_bytes,
     prepare_params_for_serving,
@@ -155,6 +166,17 @@ def main():
     ap.add_argument("--kv-page-tokens", type=int,
                     default=kvcache.DEFAULT_PAGE_TOKENS,
                     help="tokens per KV pool page")
+    ap.add_argument("--guard", action="store_true",
+                    help="arm the serving health sentinels: NaN scan flag, "
+                         "packed-KV audits, quarantine + fallback retry, "
+                         "per-request status reports")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request wall-clock deadline (implies --guard)")
+    ap.add_argument("--inject-fault", default=None, metavar="SPEC",
+                    help="deterministic fault injection, "
+                         "kind[:key=value,...] with kinds "
+                         + "/".join(faults.FAULT_CLASSES)
+                         + " (implies --guard)")
     ap.add_argument("--policy", default=None,
                     help="per-site quantization policy: a preset name "
                          "(paper-iv, uniform:<fmt>, nvfp4-baseline, "
@@ -193,10 +215,16 @@ def main():
         print(f"impl={args.impl}: no packed weights resident "
               f"(fake-quant bf16 artifact)")
 
+    guard = None
+    if args.guard or args.deadline_s is not None or args.inject_fault:
+        guard = GuardConfig(deadline_s=args.deadline_s)
+    injector = (faults.FaultInjector(faults.parse_fault(args.inject_fault))
+                if args.inject_fault else None)
     sc = ServeConfig(max_new_tokens=args.new_tokens,
                      decode_chunk=args.decode_chunk,
                      kv_pages=args.kv_pages,
-                     kv_page_tokens=args.kv_page_tokens)
+                     kv_page_tokens=args.kv_page_tokens,
+                     guard=guard)
     a = cfg.attn
     kv_fmt = None
     if a is None:
@@ -246,15 +274,41 @@ def main():
             "(the page pool stores packed HiF4 pages)")
         stats: dict = {}
         res = serve_requests(cfg, sparams, list(tokens), ctx, sc,
-                             slots=args.batch, stats=stats)
+                             slots=args.batch, stats=stats,
+                             injector=injector)
         print(f"paged scheduler: max {stats['max_concurrent']} concurrent, "
               f"{stats['shared_page_hits']} shared-page hits, "
               f"{stats['preemptions']} preemptions, "
               f"{stats['evictions']} LRU evictions, peak "
               f"{stats['peak_live_pages']}/{args.kv_pages} pages live")
         toks = jnp.stack(res)
+    elif guard is not None:
+        # guarded serving is per-request fault domains — route through the
+        # request scheduler even without the page pool
+        assert tokens is not None, (
+            "--guard/--inject-fault serve token requests through the "
+            "request scheduler (dense/vlm-embeds not supported)")
+        stats = {}
+        res = serve_requests(cfg, sparams, list(tokens), ctx, sc,
+                             slots=args.batch, stats=stats,
+                             injector=injector)
+        toks = jnp.stack(res)
     else:
+        stats = None
         toks = serve(cfg, sparams, batch, ctx, sc)
+    if injector is not None:
+        for kind, detail in injector.events:
+            print(f"injected fault: {kind} {detail}")
+    if guard is not None and stats is not None:
+        counts = {k: stats[k] for k in
+                  ("quarantined", "retried", "rejected", "timeouts")}
+        print(f"guarded serving: {counts}")
+        for rid in sorted(stats["reports"]):
+            rep = stats["reports"][rid]
+            line = f"request {rid}: status={rep['status']}"
+            if rep["detail"]:
+                line += f" ({rep['detail']})"
+            print(line)
     for i in range(args.batch):
         print(f"request {i}: {toks[i].tolist()}")
 

@@ -1,2 +1,13 @@
 from repro.runtime.train_loop import TrainLoopConfig, train  # noqa: F401
 from repro.runtime.serve_loop import ServeConfig, serve  # noqa: F401
+from repro.runtime.guard import (  # noqa: F401
+    ArtifactError,
+    ArtifactIntegrityError,
+    ArtifactLayoutError,
+    ArtifactNotFoundError,
+    GuardConfig,
+    PoolExhaustedError,
+    ServeError,
+    SnapshotIntegrityError,
+)
+from repro.runtime.faults import FaultInjector, FaultSpec, parse_fault  # noqa: F401,E501

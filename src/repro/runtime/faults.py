@@ -1,0 +1,221 @@
+"""Deterministic, seedable fault injection for the serve stack.
+
+Every guard in :mod:`repro.runtime.guard` must be shown to FIRE, not just
+exist — this module is the attacker side of that proof. The schedulers in
+``serve_loop`` expose four injection points (all no-ops without an
+injector): page-pool corruption before a decode chunk, contiguous-cache
+corruption before a chunk, preemption-snapshot corruption after the
+fingerprint is stamped, and page theft at serve start. The test suite
+(``tests/test_faults.py``) and the ``--inject-fault`` launcher flag drive
+one :class:`FaultInjector` per serve call.
+
+Fault classes (``FaultSpec.kind``):
+
+* ``code_flip`` — one random bit of one packed-codes byte in a settled
+  page owned by the target request. Values perturb silently (finite), so
+  ONLY the per-page checksum audit can catch it.
+* ``meta_flip`` — one random bit of one packed meta word in such a page.
+  Caught by the checksum audit; if the flip lands in the E6M2 byte the
+  scale changes (possibly to the 0xFF NaN sentinel) and the meta/NaN
+  sentinels fire too.
+* ``page_corruption`` — ``bits`` random bit flips across the page's
+  codes plus one meta word forced to the 0xFF sentinel: exercises the
+  checksum, the 0xFF counter, and the NaN logits flag at once.
+* ``nan_activation`` — a NaN written into the target slot's bf16 KV
+  values; propagates through attention to the logits, where the scan
+  sentinel catches it.
+* ``pool_starvation`` — the injector allocates (and never releases)
+  pool pages at serve start so the target can never be admitted.
+* ``snapshot_truncation`` — a preempted slot's host snapshot loses its
+  last page column (``bits == 0``) or takes one bit flip, AFTER its
+  fingerprint was stamped.
+
+All randomness comes from ``numpy.random.default_rng(spec.seed)`` — the
+same spec injects the same fault, so containment tests can assert
+bitwise-identical survivor outputs across runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+FAULT_CLASSES = (
+    "code_flip",
+    "meta_flip",
+    "page_corruption",
+    "nan_activation",
+    "pool_starvation",
+    "snapshot_truncation",
+)
+
+
+@dataclasses.dataclass
+class FaultSpec:
+    """One injected fault. ``target_request`` is the victim's request id;
+    ``after_chunk`` delays injection until that many decode chunks have
+    run (so the victim is resident and has settled pages); ``bits`` sets
+    the flip count for ``page_corruption`` and selects truncation
+    (``0``) vs bit flip for ``snapshot_truncation``; ``hold_pages`` is
+    how many pages ``pool_starvation`` steals (0 = all)."""
+
+    kind: str
+    seed: int = 0
+    target_request: int = 0
+    after_chunk: int = 0
+    bits: int = 16
+    hold_pages: int = 0
+
+    def __post_init__(self):
+        if self.kind not in FAULT_CLASSES:
+            raise ValueError(
+                f"unknown fault kind {self.kind!r}; one of {FAULT_CLASSES}")
+
+
+def parse_fault(text: str) -> FaultSpec:
+    """``kind[:key=value,...]`` (the ``--inject-fault`` launcher syntax),
+    e.g. ``meta_flip:seed=3,target_request=1,after_chunk=2``."""
+    kind, _, rest = text.partition(":")
+    kwargs = {}
+    if rest:
+        for part in rest.split(","):
+            key, _, val = part.partition("=")
+            kwargs[key.strip()] = int(val)
+    return FaultSpec(kind=kind.strip(), **kwargs)
+
+
+def _flip_bit(arr: jnp.ndarray, idx: tuple, bit: int) -> jnp.ndarray:
+    one = jnp.asarray(1 << bit, arr.dtype)
+    return arr.at[idx].set(arr[idx] ^ one)
+
+
+class FaultInjector:
+    """Injects exactly ONE fault per serve call, at a deterministic spot.
+
+    ``events`` logs every injection as ``(kind, detail_dict)`` so tests
+    can assert the fault really landed; ``fired`` is True afterwards.
+    """
+
+    def __init__(self, spec: FaultSpec):
+        self.spec = spec
+        self.rng = np.random.default_rng(spec.seed)
+        self.fired = False
+        self.events: list = []
+        self.held_pages: list = []
+
+    # -- serve-start hook ---------------------------------------------------
+
+    def steal_pages(self, pool) -> None:
+        """pool_starvation: hold pages so admission starves."""
+        if self.spec.kind != "pool_starvation":
+            return
+        want = self.spec.hold_pages or pool.usable_pages
+        while len(self.held_pages) < want:
+            pid = pool.alloc(owner="__fault_injector__")
+            if pid is None:
+                break
+            self.held_pages.append(pid)
+        self.fired = True
+        self.events.append(
+            ("pool_starvation", {"held": tuple(self.held_pages)}))
+
+    # -- paged-scheduler hook (before a decode chunk) -----------------------
+
+    def _target_page(self, pool, slot_req, slot_pages):
+        for b, rid in enumerate(slot_req):
+            if rid != self.spec.target_request or not slot_pages[b]:
+                continue
+            owned = [p for p in slot_pages[b]
+                     if pool.owner.get(p) == rid]
+            return (owned or slot_pages[b])[0]
+        return None
+
+    def poison_pool(self, kv: dict, pool, slot_req, slot_pages,
+                    chunk_idx: int) -> dict:
+        """Corrupt one settled page of the target request on device."""
+        if (self.fired or chunk_idx < self.spec.after_chunk
+                or self.spec.kind not in
+                ("code_flip", "meta_flip", "page_corruption")):
+            return kv
+        pid = self._target_page(pool, slot_req, slot_pages)
+        if pid is None:
+            return kv            # victim not resident yet — try next chunk
+        k = dict(kv["k"])
+        if self.spec.kind == "code_flip":
+            rows, cols = k["codes"].shape[2], k["codes"].shape[3]
+            idx = (0, pid, int(self.rng.integers(rows)), 0)
+            bit = int(self.rng.integers(8))
+            k["codes"] = _flip_bit(k["codes"], idx, bit)
+            detail = {"page": pid, "leaf": "codes", "idx": idx, "bit": bit}
+        elif self.spec.kind == "meta_flip":
+            rows = k["meta"].shape[2]
+            idx = (0, pid, int(self.rng.integers(rows)), 0)
+            bit = int(self.rng.integers(32))
+            k["meta"] = _flip_bit(k["meta"], idx, bit)
+            detail = {"page": pid, "leaf": "meta", "idx": idx, "bit": bit}
+        else:                    # page_corruption
+            rows, cols = k["codes"].shape[2], k["codes"].shape[3]
+            flips = []
+            for _ in range(max(1, self.spec.bits)):
+                idx = (0, pid, int(self.rng.integers(rows)),
+                       int(self.rng.integers(cols)))
+                bit = int(self.rng.integers(8))
+                k["codes"] = _flip_bit(k["codes"], idx, bit)
+                flips.append((idx, bit))
+            # and one meta word forced to the 0xFF NaN sentinel
+            midx = (0, pid, int(self.rng.integers(k["meta"].shape[2])), 0)
+            k["meta"] = k["meta"].at[midx].set(
+                k["meta"][midx] | jnp.uint32(0xFF << 24))
+            detail = {"page": pid, "flips": flips, "meta_nan_at": midx}
+        self.fired = True
+        self.events.append((self.spec.kind, detail))
+        return {"k": k, "v": kv["v"]}
+
+    # -- slot-scheduler hook (before a decode chunk) ------------------------
+
+    def poison_cache(self, kv: dict, slot_req, chunk_idx: int) -> dict:
+        """nan_activation: NaN into the target slot's bf16 V cache (token
+        0 — always a valid, attended position)."""
+        if (self.fired or chunk_idx < self.spec.after_chunk
+                or self.spec.kind != "nan_activation"):
+            return kv
+        for b, rid in enumerate(slot_req):
+            if rid != self.spec.target_request:
+                continue
+            v = kv["v"]
+            assert not isinstance(v, dict), (
+                "nan_activation targets the bf16 KV cache; use "
+                "code_flip/meta_flip/page_corruption for packed KV")
+            idx = (0, b) + (0,) * (v.ndim - 2)
+            self.fired = True
+            self.events.append(("nan_activation", {"slot": b, "idx": idx}))
+            return {"k": kv["k"], "v": v.at[idx].set(jnp.nan)}
+        return kv
+
+    # -- preemption hook (after the fingerprint is stamped) -----------------
+
+    def poison_snapshot(self, pages: dict, rid) -> dict:
+        """Corrupt a host page snapshot: truncate the last page column
+        (``bits == 0``) or flip one bit in the codes payload."""
+        if self.fired or self.spec.kind != "snapshot_truncation":
+            return pages
+        if rid != self.spec.target_request:
+            return pages
+        out = {t: dict(leaves) for t, leaves in pages.items()}
+        if self.spec.bits == 0:
+            for t in ("k", "v"):
+                out[t] = {key: np.asarray(a)[:, :-1]
+                          for key, a in out[t].items()}
+            detail = {"mode": "truncated_last_page"}
+        else:
+            codes = np.array(out["k"]["codes"], copy=True)
+            flat = codes.reshape(-1)
+            pos = int(self.rng.integers(flat.size))
+            bit = int(self.rng.integers(8))
+            flat[pos] ^= np.uint8(1 << bit)
+            out["k"]["codes"] = codes
+            detail = {"mode": "bit_flip", "pos": pos, "bit": bit}
+        self.fired = True
+        self.events.append(("snapshot_truncation", {"rid": rid, **detail}))
+        return out

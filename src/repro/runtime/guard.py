@@ -1,0 +1,296 @@
+"""Request-level fault domains for the serve stack.
+
+The paper's 0xFF E6M2 NaN sentinel (docs/FORMATS.md, ``hif4.py``) exists
+so that corrupted 4-bit payloads surface loudly instead of decoding into
+silently wrong values. This module is the serving side of that contract:
+cheap health sentinels fused into the decode scan, per-chunk integrity
+audits over packed KV pages, integrity fingerprints for host preemption
+snapshots and serving artifacts, and the status vocabulary the schedulers
+use to contain a fault to the one request it hit.
+
+Detection mechanisms, by fault class
+------------------------------------
+
+* **NaN/Inf activations** — the guarded decode scan carries a per-slot
+  ``bad`` flag, OR-ing a ``~isfinite(logits)`` reduction every step
+  (:func:`bad_logits`). Token outputs are bitwise identical to the
+  unguarded scan; the flag is one extra (B, V) reduction.
+* **0xFF meta corruption** — :func:`repro.core.hif4.meta_nan_mask`
+  counted per slot (contiguous cache) or per page (paged pool). Algorithm
+  1 never emits 0xFF, so any nonzero count is corruption — this covers
+  the hot partial page whose checksum is legitimately in flux.
+* **Arbitrary bit flips in packed pages** — per-page modular byte-sum
+  checksums (:func:`repro.core.kvcache.page_checksums`) recomputed once
+  per chunk and compared against the values recorded after the previous
+  chunk, skipping pages the scheduler legitimately wrote in between. A
+  single bit flip provably changes the sum.
+* **Snapshot truncation / flips** — :func:`snapshot_fingerprint` (crc32
+  over bytes + shapes) stamped when a preempted slot's pages are pulled
+  to host, verified before re-admission ever scatters them back.
+* **Artifact corruption** — per-leaf sha256 over PackedW codes/meta plus
+  format invariants (:func:`artifact_integrity`), written into the
+  serving artifact's ``extra.json`` and re-verified on load.
+
+Statuses (every request gets exactly one, in ``stats["reports"]``):
+
+* ``ok`` — served normally.
+* ``retried`` — hit a fault (quarantine or corrupt snapshot) but was
+  re-served successfully: from its prompt on the normal path (snapshot
+  drop; greedy decode is deterministic, so the result is still exact) or
+  solo on the qdq/bf16 degradation path (quarantine retry).
+* ``quarantined`` — evicted after a fault and the one fallback retry
+  also failed (or retries are disabled); result is an eos/-1 fill.
+* ``rejected`` — could not be admitted (pool starvation) within the
+  bounded retry budget; never ran.
+* ``timeout`` — exceeded its deadline; partial result, padded.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import zlib
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hif4, kvcache
+from repro.core.qlinear import PackedW
+
+STATUS_NAMES = frozenset(
+    {"ok", "retried", "quarantined", "rejected", "timeout"})
+
+FAULT_REASONS = (
+    "nan_logits",          # decode-scan sentinel fired
+    "meta_nan",            # 0xFF E6M2 count went nonzero
+    "page_checksum",       # a settled page's byte sum changed
+    "snapshot_integrity",  # preemption snapshot failed its fingerprint
+    "pool_exhausted",      # admission/growth starved of pages
+    "deadline",            # wall-clock deadline exceeded
+)
+
+
+# ---------------------------------------------------------------------------
+# Typed serving exceptions (satellite: replace bare asserts/RuntimeErrors)
+# ---------------------------------------------------------------------------
+
+
+class ServeError(RuntimeError):
+    """Base of all typed serving errors (subclasses RuntimeError so any
+    pre-existing ``except RuntimeError`` handling keeps working)."""
+
+
+class PoolExhaustedError(ServeError):
+    """The paged KV pool cannot supply the pages a request needs and no
+    guard is installed to convert the failure into a ``rejected`` status."""
+
+
+class SnapshotIntegrityError(ServeError):
+    """A preempted slot's host page snapshot failed its fingerprint."""
+
+
+class ArtifactError(ServeError):
+    """Base for serving-artifact load/save problems."""
+
+
+class ArtifactNotFoundError(ArtifactError):
+    """No serving artifact at the given path."""
+
+
+class ArtifactLayoutError(ArtifactError):
+    """The tree handed to ``save_serving_artifact`` is not raw weights."""
+
+
+class ArtifactIntegrityError(ArtifactError):
+    """A loaded artifact's packed payload fails its recorded checksums or
+    the HiF4 format invariants."""
+
+
+# ---------------------------------------------------------------------------
+# Guard configuration + per-request reports
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class GuardConfig:
+    """Health-sentinel configuration (frozen/hashable: rides on
+    :class:`repro.runtime.serve_loop.ServeConfig` without disturbing jit
+    cache keys — none of these fields enter traced code).
+
+    nan_sentinel: carry the per-slot NaN/Inf logits flag in the decode
+        scan. meta_audit: count 0xFF E6M2 sentinels over packed KV per
+        chunk. page_checksums: per-page byte-sum audit over the paged
+        pool per chunk. retry_fallback: re-serve a quarantined request
+        once, solo, on the qdq impl + bf16 KV degradation path.
+        deadline_s: per-request wall-clock budget (None = unlimited).
+        max_admission_retries / admission_backoff_s: bounded retry with
+        exponential backoff before a starved request is ``rejected``.
+    """
+
+    nan_sentinel: bool = True
+    meta_audit: bool = True
+    page_checksums: bool = True
+    retry_fallback: bool = True
+    deadline_s: Optional[float] = None
+    max_admission_retries: int = 2
+    admission_backoff_s: float = 0.0
+
+
+def new_report() -> dict:
+    return {"status": "ok", "detail": None, "retries": 0}
+
+
+# ---------------------------------------------------------------------------
+# Decode-scan + cache sentinels (device side)
+# ---------------------------------------------------------------------------
+
+
+def bad_logits(logits: jnp.ndarray) -> jnp.ndarray:
+    """(B, V) logits -> (B,) bool: True where any entry is NaN/Inf."""
+    return ~jnp.all(jnp.isfinite(logits.astype(jnp.float32)), axis=-1)
+
+
+def slot_meta_nan_counts(kv: dict) -> jnp.ndarray:
+    """Contiguous packed cache {"k","v"} (kernel layout, leaves
+    (L, B, G, S) meta) -> (B,) int32 count of 0xFF E6M2 sentinels."""
+    total = 0
+    for t in (kv["k"], kv["v"]):
+        total = total + jnp.sum(
+            hif4.meta_nan_mask(t["meta"]).astype(jnp.int32), axis=(0, 2, 3))
+    return total
+
+
+def pool_page_sums(kv: dict) -> jnp.ndarray:
+    """Paged pool {"k","v"} -> (NP,) uint32 per-page content checksums,
+    K+V combined (the 0xFF counts come fused out of the guarded scan —
+    :func:`slot_meta_nan_counts` reduces the pool's (L, NP, G, P) meta to
+    the same per-page axis)."""
+    return kvcache.page_checksums(kv["k"]) + kvcache.page_checksums(kv["v"])
+
+
+def pool_page_stats(kv: dict) -> dict:
+    """Paged pool {"k","v"} -> {"sums": (NP,) uint32 content checksums,
+    "meta_nan": (NP,) int32 0xFF counts}, both K+V combined."""
+    nan = (kvcache.page_meta_nan_counts(kv["k"])
+           + kvcache.page_meta_nan_counts(kv["v"]))
+    return {"sums": pool_page_sums(kv), "meta_nan": nan}
+
+
+slot_meta_nan_jit = jax.jit(slot_meta_nan_counts)
+pool_page_sums_jit = jax.jit(pool_page_sums)
+pool_page_stats_jit = jax.jit(pool_page_stats)
+
+
+# ---------------------------------------------------------------------------
+# Preemption-snapshot fingerprints (host side)
+# ---------------------------------------------------------------------------
+
+
+def snapshot_fingerprint(pages: dict) -> int:
+    """crc32 over a host page snapshot's bytes AND shapes ({"k","v"} of
+    {"codes","meta","tail"} numpy blocks) — truncation changes the shape
+    term even if the surviving bytes happen to collide."""
+    h = 0
+    for tname in ("k", "v"):
+        for key in ("codes", "meta", "tail"):
+            a = np.asarray(pages[tname][key])
+            h = zlib.crc32(repr((tname, key, a.shape, str(a.dtype))).encode(),
+                           h)
+            h = zlib.crc32(np.ascontiguousarray(a).view(np.uint8).tobytes(),
+                           h)
+    return h
+
+
+def verify_snapshot(snap: dict) -> bool:
+    """True iff a preemption snapshot still matches the fingerprint
+    stamped when it was taken."""
+    try:
+        return snapshot_fingerprint(snap["pages"]) == snap["crc32"]
+    except Exception:
+        return False           # missing leaves / mangled structure
+
+
+# ---------------------------------------------------------------------------
+# Serving-artifact integrity (per-leaf checksums + format invariants)
+# ---------------------------------------------------------------------------
+
+INTEGRITY_VERSION = 1
+
+
+def _packed_leaves(tree):
+    """(path string, PackedW) pairs, without flattening INTO PackedW."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=lambda x: isinstance(x, PackedW))
+    return [(jax.tree_util.keystr(path), leaf) for path, leaf in flat
+            if isinstance(leaf, PackedW)]
+
+
+def packed_invariants(name: str, leaf: PackedW) -> list:
+    """HiF4 format invariants of one packed weight; [] when healthy.
+
+    Checked both at export and at load: the E6M2 scale byte must never be
+    the 0xFF NaN sentinel (Algorithm 1 cannot produce it), the contract
+    dimension must be whole 64-groups, and codes/meta must agree on the
+    group geometry of the declared (K, N) shape.
+    """
+    errs = []
+    k, n = leaf.shape2d
+    meta = np.asarray(leaf.meta)
+    codes = np.asarray(leaf.codes)
+    if k % hif4.GROUP_SIZE:
+        errs.append(f"{name}: K={k} is not a multiple of 64 (group size)")
+    nan = int(((meta >> 24) == hif4.META_NAN).sum())
+    if nan:
+        errs.append(
+            f"{name}: {nan} meta word(s) carry the E6M2 NaN sentinel 0xFF "
+            "— Algorithm 1 never emits it; the payload is corrupt")
+    if leaf.kernel_layout:
+        want_codes = meta.shape[:-2] + (meta.shape[-2] * 32, meta.shape[-1])
+    else:
+        want_codes = meta.shape + (32,)
+    if codes.shape != want_codes:
+        errs.append(
+            f"{name}: codes shape {codes.shape} does not match meta "
+            f"geometry (expected {want_codes})")
+    return errs
+
+
+def artifact_integrity(tree) -> dict:
+    """Integrity record for a serving artifact: per-PackedW-leaf sha256
+    over the codes and meta payloads. Stored in the artifact's
+    ``extra.json`` by ``save_serving_artifact``."""
+    leaves = {}
+    for name, leaf in _packed_leaves(tree):
+        leaves[name] = {
+            "codes_sha256": hashlib.sha256(
+                np.asarray(leaf.codes).tobytes()).hexdigest(),
+            "meta_sha256": hashlib.sha256(
+                np.asarray(leaf.meta).tobytes()).hexdigest(),
+        }
+    return {"version": INTEGRITY_VERSION, "leaves": leaves}
+
+
+def verify_artifact_integrity(tree, integrity: dict, directory: str):
+    """Raise :class:`ArtifactIntegrityError` if any packed leaf fails its
+    recorded checksums or the HiF4 format invariants."""
+    recorded = integrity.get("leaves", {})
+    errs = []
+    for name, leaf in _packed_leaves(tree):
+        errs.extend(packed_invariants(name, leaf))
+        ent = recorded.get(name)
+        if ent is None:
+            errs.append(f"{name}: no integrity record in extra.json")
+            continue
+        for field, payload in (("codes_sha256", leaf.codes),
+                               ("meta_sha256", leaf.meta)):
+            got = hashlib.sha256(np.asarray(payload).tobytes()).hexdigest()
+            if got != ent[field]:
+                errs.append(f"{name}: {field} mismatch (payload corrupt)")
+    if errs:
+        raise ArtifactIntegrityError(
+            f"serving artifact at {directory!r} failed integrity "
+            f"verification:\n  - " + "\n  - ".join(errs)
+            + "\n  re-export it with repro.runtime.serve_loop."
+            "save_serving_artifact from the raw training weights."
+        )

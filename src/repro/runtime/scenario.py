@@ -63,6 +63,7 @@ class Scenario:
     impl: str                     # qdq | packed | pallas
     kv_format: str                # REQUESTED cache format: bf16 | hif4
     paged: bool = False           # page-pool serve_requests cell
+    guarded: bool = False         # guarded decode scan + per-chunk KV audit
     policy: str = "uniform:hif4"  # QuantPolicy preset for weight sites
     batch: int = 2
     prompt_len: int = 16
@@ -251,7 +252,7 @@ def _serve_cfg(scn: Scenario) -> ServeConfig:
 
 
 def run_scenarios(scenarios: Sequence[Scenario], *, repeats: int = 7,
-                  log=print) -> list:
+                  gate_pairs: Sequence[tuple] = (), log=print) -> list:
     """Execute cells through the real serve stack; one record per cell.
 
     Scan-served cells (everything non-paged) are timed INTERLEAVED on
@@ -262,6 +263,17 @@ def run_scenarios(scenarios: Sequence[Scenario], *, repeats: int = 7,
     decode), so their latency is a coarser ms/token — their ``rel_tol``
     should say so. Each record's ``roofline`` carries exact payload byte
     counts; ``benchmarks.roofline`` turns them into predicted times.
+
+    ``gate_pairs`` lists (baseline, subject) cell-name pairs the ratio
+    gates compare. Each pair gets a SECOND, tight A/B interleave after
+    the global rotation, recorded on the subject's record under
+    ``gate_timing``: inside the full rotation every step inherits a
+    different predecessor's cache/allocator state, and on CPU hosts
+    that churn swings a single cell 10-20% between runs — noise a
+    per-cell rel_tol absorbs but a two-cell ratio does not. Strict
+    alternation gives both sides the same predecessor (each other), the
+    same reasoning that made serve_throughput's kv_format sweep
+    interleaved.
     """
     names = [s.name for s in scenarios]
     assert len(set(names)) == len(names), f"duplicate cell names: {names}"
@@ -296,7 +308,32 @@ def run_scenarios(scenarios: Sequence[Scenario], *, repeats: int = 7,
         sctx = serve_loop.serving_ctx(ctx)
         batch = prefill_batch(cfg, scn.batch, scn.prompt_len)
         prefill = serve_loop._jit_prefill(cfg, sctx)
-        step = serve_loop._jit_decode_scan(cfg, sctx, scn.new_tokens, None)
+        if scn.guarded:
+            # production guarded chunk: one jitted call returns tokens +
+            # a fused flags vector (NaN sentinels ++ 0xFF meta counters),
+            # and the scheduler pulls tokens and flags to host in a single
+            # device_get after every chunk — those costs belong in the
+            # number the guard_overhead gate compares against the
+            # unguarded twin
+            gstep = serve_loop._jit_decode_scan_guarded(
+                cfg, sctx, scn.new_tokens, None)
+            zeros = jnp.zeros((scn.batch,), bool)
+
+            def step(sp, token, cache, done, _g=gstep, _z=zeros):
+                toks, token, cache, done, flags = _g(sp, token, cache,
+                                                     done, _z)
+                jax.device_get((toks, flags))
+                return toks, token, cache, done
+        else:
+            ustep = serve_loop._jit_decode_scan(cfg, sctx, scn.new_tokens,
+                                                None)
+
+            # schedulers pull tokens to host every chunk; time that too so
+            # guarded and unguarded cells differ only by the guard work
+            def step(sp, token, cache, done, _u=ustep):
+                toks, token, cache, done = _u(sp, token, cache, done)
+                jax.device_get(toks)
+                return toks, token, cache, done
         logits, cache = build_decode_cache(cfg, sp, batch, sctx, sc,
                                            quant=ctx.quant)
         rec["roofline"] = decode_step_bytes(
@@ -332,6 +369,26 @@ def run_scenarios(scenarios: Sequence[Scenario], *, repeats: int = 7,
     for name, t in best.items():
         records[name]["decode_step_ms"] = round(t * 1e3, 4)
         records[name]["timing"] = "scan-interleaved"
+
+    # tight pairwise A/B interleave per ratio-gate pair (see docstring)
+    for base_name, sub_name in gate_pairs:
+        if base_name not in states or sub_name not in states:
+            continue
+        pair_best = {base_name: float("inf"), sub_name: float("inf")}
+        for _ in range(3 * repeats):
+            for name in (base_name, sub_name):
+                token, cache, done = states[name]
+                t0 = time.perf_counter()
+                toks, token, cache, done = steps[name](
+                    serving[name], token, cache, done)
+                jax.block_until_ready(toks)
+                n = records[name]["new_tokens"]
+                pair_best[name] = min(pair_best[name],
+                                      (time.perf_counter() - t0) / n)
+                states[name] = (token, cache, done)
+        records[sub_name].setdefault("gate_timing", {})[base_name] = {
+            "baseline_ms": round(pair_best[base_name] * 1e3, 4),
+            "subject_ms": round(pair_best[sub_name] * 1e3, 4)}
 
     for scn, cfg, ctx, sp, sc in paged_cells:
         rec = records[scn.name]

@@ -18,6 +18,8 @@ of queued requests into slots as earlier requests finish.
 from __future__ import annotations
 
 import dataclasses
+import time
+import warnings
 from functools import partial
 from typing import Optional, Sequence
 
@@ -30,6 +32,15 @@ from repro.core.policy import STACKED_COLLECTIONS, QuantPlan
 from repro.core.qlinear import QuantConfig, quantize_params_offline
 from repro.models import lm
 from repro.models.common import ModelCtx
+from repro.runtime import guard as guard_mod
+from repro.runtime.guard import (ArtifactLayoutError, ArtifactNotFoundError,
+                                 GuardConfig, PoolExhaustedError)
+
+
+class KVFallbackWarning(UserWarning):
+    """``kv_format=hif4`` was narrowed to bf16 for a family whose recurrent
+    state has no packed layout. A real warning (not a print) so callers and
+    tests capture and assert on it; records carry ``kv_format_fallback``."""
 
 
 @dataclasses.dataclass
@@ -45,6 +56,8 @@ class ServeConfig:
     #                                        many pool pages (hif4 KV only)
     kv_page_tokens: int = 64               # tokens per pool page
     prefix_sharing: bool = True            # hash-share prompt-prefix pages
+    guard: Optional[GuardConfig] = None    # health sentinels + fault domains
+    #                                        (None = unguarded; failures raise)
 
 
 def resolve_kv_format(cfg: ArchConfig, quant: QuantConfig,
@@ -54,17 +67,19 @@ def resolve_kv_format(cfg: ArchConfig, quant: QuantConfig,
     recurrent state has no packed layout — see the docs/EXECUTION.md
     matrix). Attention caches — including the audio self + read-only
     cross (encoder) caches — pack. ``verbose=True`` (the serve/launch
-    entry points) prints the fallback instead of narrowing silently;
-    benchmark and dryrun records carry it as ``kv_format_fallback``."""
+    entry points) emits a :class:`KVFallbackWarning` instead of narrowing
+    silently; benchmark and dryrun records carry it as
+    ``kv_format_fallback``."""
     from repro.core import kvcache
 
     fmt = serve_cfg.kv_format or quant.kv.kv_format
     assert fmt in kvcache.KV_FORMATS, fmt
     if fmt == "hif4" and cfg.family not in ("dense", "vlm", "moe", "audio"):
         if verbose:
-            print(f"[serve] note: kv_format=hif4 has no packed layout for "
-                  f"family {cfg.family!r} (SSM recurrent state) "
-                  f"— serving falls back to bf16 KV")
+            warnings.warn(
+                f"kv_format=hif4 has no packed layout for family "
+                f"{cfg.family!r} (SSM recurrent state) — serving falls "
+                f"back to bf16 KV", KVFallbackWarning, stacklevel=2)
         return "bf16"
     return fmt
 
@@ -160,18 +175,30 @@ def save_serving_artifact(directory: str, params: dict, cfg: ArchConfig,
     artifact can never be served under a different placement than it was
     packed with. ``params`` are the RAW trained weights; ``policy`` is a
     QuantPolicy/QuantPlan (or a legacy QuantConfig via the uniform shim).
+
+    The checkpoint's ``extra.json`` also records an integrity block —
+    per-PackedW-leaf sha256 over the codes and meta payloads plus the
+    HiF4 format invariants (:mod:`repro.runtime.guard`) — which
+    :func:`load_serving_artifact` re-verifies, so a bit-rotted artifact
+    fails loudly at load instead of serving silently wrong tokens.
     """
     from repro.checkpoint import save_checkpoint
 
-    assert not packed_weight_bytes(params)[1], (
-        "save_serving_artifact expects RAW (unpacked) weights: an "
-        "already-packed tree may be in the kernel layout, which has no "
-        "inverse back to the on-disk artifact layout")
+    if packed_weight_bytes(params)[1]:
+        raise ArtifactLayoutError(
+            f"save_serving_artifact({directory!r}) was handed an "
+            "already-packed tree. Expected RAW (unpacked) trained weights: "
+            "packed PackedW leaves may be in the K-major kernel layout, "
+            "which has no inverse back to the on-disk artifact layout. "
+            "To re-export, load the raw training weights and call "
+            "save_serving_artifact(directory, raw_params, cfg, policy) — "
+            "the policy conversion happens inside.")
     plan = lm.quant_plan(cfg, policy)
     artifact = prepare_params_for_serving(params, cfg, plan,
                                           kernel_layout=False)
     extra = {"family": cfg.family,
-             "quant_policy": plan.policy.to_json_dict()}
+             "quant_policy": plan.policy.to_json_dict(),
+             "integrity": guard_mod.artifact_integrity(artifact)}
     return save_checkpoint(directory, 0, artifact, extra)
 
 
@@ -182,6 +209,12 @@ def load_serving_artifact(directory: str, cfg: ArchConfig):
     into; pass the params straight to :func:`serve` with a plan-carrying
     ModelCtx (prepare is idempotent on the packed tree and only re-lays-out
     K-major).
+
+    Artifacts written with an integrity block (see
+    :func:`save_serving_artifact`) are verified leaf-by-leaf after load;
+    corruption raises :class:`repro.runtime.guard.ArtifactIntegrityError`
+    naming the failing leaf. Older artifacts without the block load
+    unverified.
     """
     import json
     import os
@@ -190,7 +223,13 @@ def load_serving_artifact(directory: str, cfg: ArchConfig):
     from repro.core.policy import QuantPolicy
 
     step = latest_step(directory)
-    assert step is not None, f"no serving artifact under {directory!r}"
+    if step is None:
+        raise ArtifactNotFoundError(
+            f"no serving artifact under {directory!r}: expected a "
+            "step_<NNNNNNNN>/ directory holding manifest.json, the packed "
+            "arrays, and extra.json with the serialized quant_policy. "
+            "Re-export with repro.runtime.serve_loop.save_serving_artifact("
+            "directory, raw_params, cfg, policy).")
     with open(os.path.join(directory, f"step_{step:08d}", "extra.json")) as f:
         extra = json.load(f)
     policy = QuantPolicy.from_json_dict(extra["quant_policy"])
@@ -199,6 +238,9 @@ def load_serving_artifact(directory: str, cfg: ArchConfig):
     target = lm.realize_packed(
         specs, lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype))
     params, _ = load_checkpoint(directory, step, target)
+    integrity = extra.get("integrity")
+    if integrity is not None:
+        guard_mod.verify_artifact_integrity(params, integrity, directory)
     return params, policy
 
 
@@ -277,6 +319,51 @@ def _decode_scan(params, token, cache, done, n_tokens: int, cfg: ArchConfig,
     return jnp.swapaxes(toks, 0, 1), token, cache, done
 
 
+def _decode_scan_guarded(params, token, cache, done, bad, n_tokens: int,
+                         cfg: ArchConfig, sctx: ModelCtx,
+                         eos_id: Optional[int]):
+    """:func:`_decode_scan` with the health sentinels fused in.
+
+    ``bad`` (B,) bool OR-accumulates a per-slot ``~isfinite(logits)``
+    reduction every step (:func:`repro.runtime.guard.bad_logits`) —
+    one extra (B, V) reduction carried in the scan state. After the scan,
+    the SAME jitted program reduces the 0xFF E6M2 sentinel count over the
+    packed KV leaves (per slot for the contiguous cache, per pool page
+    for the paged pool; zeros for bf16 KV): corruption persists in the
+    cache, so one end-of-chunk reduction sees everything a per-step one
+    would, without a second dispatch or host sync. Both sentinels come
+    back as ONE ``flags`` int32 vector — ``flags[:B]`` the NaN flags,
+    ``flags[B:]`` the 0xFF counts — so the scheduler's existing per-chunk
+    token pull grows by a single small leaf (host-transfer calls carry a
+    large fixed cost; the guard_overhead gate holds because of this).
+    The token stream is computed by exactly the same ops in the same
+    order, so guarded outputs are bitwise identical to the unguarded
+    scan. Returns (tokens (B, n_tokens), token, cache, done, flags).
+    """
+
+    def body(carry, _):
+        token, cache, done, bad = carry
+        logits, cache = lm.decode_step(params, token, cache, cfg, sctx)
+        bad = bad | guard_mod.bad_logits(logits)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        if eos_id is not None:
+            nxt = jnp.where(done, jnp.int32(eos_id), nxt)
+            done = done | (nxt == eos_id)
+        return (nxt, cache, done, bad), nxt
+
+    (token, cache, done, bad), toks = jax.lax.scan(
+        body, (token, cache, done, bad), None, length=n_tokens
+    )
+    kv = cache.get("kv") if isinstance(cache, dict) else None
+    if isinstance(kv, dict) and isinstance(kv.get("k"), dict) \
+            and "meta" in kv["k"]:
+        meta_nan = guard_mod.slot_meta_nan_counts(kv)
+    else:
+        meta_nan = jnp.zeros(token.shape, jnp.int32)
+    flags = jnp.concatenate([bad.astype(jnp.int32), meta_nan])
+    return jnp.swapaxes(toks, 0, 1), token, cache, done, flags
+
+
 # jax.jit caches compiled executables per wrapper OBJECT, so building a
 # fresh wrapper inside every serve() call would retrace+recompile the whole
 # model per call. Key the wrappers on the values that change the traced
@@ -324,6 +411,20 @@ def _jit_decode_scan(cfg: ArchConfig, sctx: ModelCtx, n_tokens: int,
         fn = jax.jit(
             partial(_decode_scan, n_tokens=n_tokens, cfg=cfg, sctx=sctx,
                     eos_id=eos_id),
+            donate_argnums=(2,),            # cache updates in place
+        )
+        _JIT_CACHE[key] = fn
+    return fn
+
+
+def _jit_decode_scan_guarded(cfg: ArchConfig, sctx: ModelCtx, n_tokens: int,
+                             eos_id: Optional[int]):
+    key = ("decode-guarded", cfg, _ctx_cache_key(sctx), n_tokens, eos_id)
+    fn = _JIT_CACHE.get(key)
+    if fn is None:
+        fn = jax.jit(
+            partial(_decode_scan_guarded, n_tokens=n_tokens, cfg=cfg,
+                    sctx=sctx, eos_id=eos_id),
             donate_argnums=(2,),            # cache updates in place
         )
         _JIT_CACHE[key] = fn
@@ -441,6 +542,61 @@ def _finalize_result(toks: list, budget: int, eos_id: Optional[int]):
     return jnp.asarray(toks, jnp.int32)
 
 
+def _failed_result(budget: int, eos_id: Optional[int]) -> jnp.ndarray:
+    """The (budget,) placeholder a rejected/quarantined request returns:
+    eos fill when an eos is configured, else -1 (never a valid token)."""
+    return jnp.full((budget,), eos_id if eos_id is not None else -1,
+                    jnp.int32)
+
+
+def _finalize_partial(toks: list, budget: int,
+                      eos_id: Optional[int]) -> jnp.ndarray:
+    """A timed-out request's partial tokens, padded to (budget,)."""
+    fill = eos_id if eos_id is not None else -1
+    toks = list(toks[:budget])
+    return jnp.asarray(toks + [fill] * (budget - len(toks)), jnp.int32)
+
+
+def _retry_fallback(cfg: ArchConfig, params: dict, prompt, ctx: ModelCtx,
+                    serve_cfg: ServeConfig):
+    """Quarantine retry: re-serve ONE request solo on the degradation
+    path — qdq impl (dequantize-then-dot on the packed leaves) + bf16 KV —
+    with the NaN sentinel carried through prefill and decode.
+
+    Returns ((budget,) int32 tokens, healthy bool). The fallback path
+    avoids both fused kernels and the packed cache, so a fault rooted in
+    packed payloads or kernel dispatch cannot recur; a still-unhealthy
+    retry means the fault is upstream (weights/inputs) and the request is
+    quarantined for good.
+    """
+    fb_quant = dataclasses.replace(ctx.quant, impl="qdq", kv=kvcache.KV_BF16)
+    fb_ctx = dataclasses.replace(ctx, quant=fb_quant, plan=None)
+    fb_serve = dataclasses.replace(serve_cfg, kv_format="bf16", kv_pages=0,
+                                   guard=None)
+    sctx = serving_ctx(fb_ctx)
+    params = prepare_params_for_serving(params, cfg, fb_quant)
+    batch = {"tokens": jnp.asarray(prompt, jnp.int32).reshape(1, -1)}
+    logits, cache = build_decode_cache(cfg, params, batch, sctx, fb_serve,
+                                       quant=fb_quant)
+    token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    bad = guard_mod.bad_logits(logits)
+    done = jnp.zeros(token.shape, bool)
+    if fb_serve.eos_id is not None:
+        done = done | (token == fb_serve.eos_id)
+    out = [token[:, None]]
+    budget = fb_serve.max_new_tokens - 1
+    if budget > 0:
+        gstep = _jit_decode_scan_guarded(cfg, sctx, budget, fb_serve.eos_id)
+        toks, token, cache, done, flags = gstep(params, token, cache, done,
+                                                bad)
+        out.append(toks)
+        bad = flags[:1]                    # B=1; meta part is zeros (bf16)
+    toks = [int(t) for t in jax.device_get(jnp.concatenate(out, axis=1))[0]]
+    healthy = not bool(jax.device_get(bad)[0])
+    return (_finalize_result(toks, fb_serve.max_new_tokens, fb_serve.eos_id),
+            healthy)
+
+
 def serve_requests(
     cfg: ArchConfig,
     params: dict,
@@ -450,6 +606,7 @@ def serve_requests(
     *,
     slots: int = 4,
     stats: Optional[dict] = None,      # filled with scheduler counters
+    injector=None,                     # repro.runtime.faults.FaultInjector
 ) -> list:
     """Continuous-batching scheduler: serve ``requests`` through a fixed
     number of decode ``slots``.
@@ -473,6 +630,16 @@ def serve_requests(
     Transformer families only (the per-slot position clock lives in the KV
     cache); returns a list of (max_new_tokens,) int32 arrays, one per
     request, in submission order.
+
+    With ``serve_cfg.guard`` set (:class:`repro.runtime.guard.GuardConfig`)
+    each request becomes its own fault domain: the decode scan carries the
+    NaN/Inf sentinel, packed KV is audited per chunk, and a faulty slot is
+    quarantined — evicted, retried once on the qdq/bf16 fallback path —
+    while the rest of the batch continues bitwise-unaffected. Per-request
+    outcomes land in ``stats["reports"]`` (status vocabulary in
+    docs/EXECUTION.md §Failure semantics). ``injector`` is the
+    fault-injection hook (:class:`repro.runtime.faults.FaultInjector`);
+    tests and ``--inject-fault`` use it to prove every guard fires.
     """
     assert cfg.family in ("dense", "vlm", "moe"), (
         f"continuous batching supports KV-cache families, got {cfg.family!r}"
@@ -492,9 +659,11 @@ def serve_requests(
             "the paged KV pool stores packed HiF4 pages; bf16 serving (or a "
             "family fallback) must use the whole-slot scheduler")
         return _serve_requests_paged(
-            cfg, params, requests, sctx, serve_cfg,
-            slots=slots, prefill=prefill, quantize=quantize, stats=stats)
+            cfg, params, requests, sctx, serve_cfg, ctx=ctx,
+            slots=slots, prefill=prefill, quantize=quantize, stats=stats,
+            injector=injector)
 
+    guard = serve_cfg.guard
     budget = serve_cfg.max_new_tokens
     max_prompt = max(int(r.shape[-1]) for r in requests)
     cap = serve_cfg.cache_capacity or max_prompt + budget
@@ -509,8 +678,11 @@ def serve_requests(
     queue = list(range(len(requests)))
     slot_req = [None] * B                        # request id per slot
     slot_toks: list[list] = [[] for _ in range(B)]
+    admit_time = [0.0] * B
     results: list = [None] * len(requests)
+    reports = {rid: guard_mod.new_report() for rid in range(len(requests))}
     max_concurrent = 0
+    chunk_idx = 0
 
     def admit(b: int, cache, token):
         rid = queue.pop(0)
@@ -523,15 +695,44 @@ def serve_requests(
         cache, token = _insert_slot_jit(cache, slot_cache, token, first, b)
         slot_req[b] = rid
         slot_toks[b] = [int(first)]
+        admit_time[b] = time.monotonic()
         return cache, token
 
     chunk = serve_cfg.decode_chunk or max(1, budget // 4)
-    step = _jit_decode_scan(cfg, sctx, chunk, serve_cfg.eos_id)
+    guarded = guard is not None and guard.nan_sentinel
+    if guarded:
+        gstep = _jit_decode_scan_guarded(cfg, sctx, chunk, serve_cfg.eos_id)
+        zeros_bad = jnp.zeros((B,), bool)     # fresh carry, hoisted: the
+        #                                       scan never donates it
+    else:
+        step = _jit_decode_scan(cfg, sctx, chunk, serve_cfg.eos_id)
 
     def retire(b: int):
         results[slot_req[b]] = _finalize_result(slot_toks[b], budget,
                                                 serve_cfg.eos_id)
         slot_req[b] = None
+
+    def quarantine(b: int, reason: str):
+        """Evict the poisoned slot only; its neighbours' state is
+        untouched (batch rows never mix), so the rest of the batch
+        continues bitwise-unaffected. The slot's cache region needs no
+        scrub: admission overwrites the full capacity slab."""
+        rid = slot_req[b]
+        slot_req[b] = None
+        slot_toks[b] = []
+        if guard.retry_fallback:
+            res, healthy = _retry_fallback(cfg, params, requests[rid], ctx,
+                                           serve_cfg)
+            reports[rid]["retries"] += 1
+            if healthy:
+                results[rid] = res
+                reports[rid].update(
+                    status="retried",
+                    detail=f"{reason}; re-served solo on the qdq/bf16 "
+                           "fallback path")
+                return
+        results[rid] = _failed_result(budget, serve_cfg.eos_id)
+        reports[rid].update(status="quarantined", detail=reason)
 
     while queue or any(r is not None for r in slot_req):
         # Admission: fill every free slot before the next decode segment.
@@ -544,13 +745,54 @@ def serve_requests(
                 )
         max_concurrent = max(max_concurrent,
                              sum(r is not None for r in slot_req))
+        if injector is not None:
+            cache["kv"] = injector.poison_cache(cache["kv"], slot_req,
+                                                chunk_idx)
         active = jnp.asarray([r is not None for r in slot_req])
-        toks, token, cache, done = step(params, token, cache, done | ~active)
-        host_toks = jax.device_get(toks)
+        metav = None
+        if guarded:
+            toks, token, cache, done, flags = gstep(
+                params, token, cache, done | ~active, zeros_bad)
+            host_toks, flagsv = jax.device_get((toks, flags))
+            badv = flagsv[:B].astype(bool)
+            if guard.meta_audit and kv_fmt == "hif4":
+                metav = flagsv[B:]
+        else:
+            toks, token, cache, done = step(params, token, cache,
+                                            done | ~active)
+            badv = None
+            if (guard is not None and guard.meta_audit
+                    and kv_fmt == "hif4"):
+                metav = jax.device_get(
+                    guard_mod.slot_meta_nan_jit(cache["kv"]))
+            host_toks = jax.device_get(toks)
+        chunk_idx += 1
         for b in range(B):
             if slot_req[b] is None:
                 continue
+            reason = None
+            if badv is not None and bool(badv[b]):
+                reason = "nan_logits: non-finite logits in the decode scan"
+            if metav is not None and int(metav[b]):
+                reason = (f"meta_nan: {int(metav[b])} E6M2 NaN sentinel(s) "
+                          "in the slot's packed KV")
+            if reason is not None:
+                done = done.at[b].set(True)
+                quarantine(b, reason)
+                continue
             slot_toks[b].extend(int(t) for t in host_toks[b])
+            if (guard is not None and guard.deadline_s is not None
+                    and time.monotonic() - admit_time[b] > guard.deadline_s):
+                rid = slot_req[b]
+                results[rid] = _finalize_partial(slot_toks[b], budget,
+                                                 serve_cfg.eos_id)
+                reports[rid].update(
+                    status="timeout",
+                    detail=f"deadline: exceeded {guard.deadline_s}s")
+                slot_req[b] = None
+                slot_toks[b] = []
+                done = done.at[b].set(True)
+                continue
             finished = len(slot_toks[b]) >= budget or (
                 serve_cfg.eos_id is not None
                 and serve_cfg.eos_id in slot_toks[b]
@@ -559,8 +801,20 @@ def serve_requests(
                 retire(b)
     if stats is not None:
         stats.update(scheduler="slots", max_concurrent=max_concurrent,
-                     preemptions=0, shared_page_hits=0, evictions=0)
+                     preemptions=0, shared_page_hits=0, evictions=0,
+                     reports=reports,
+                     **_report_counts(reports))
     return results
+
+
+def _report_counts(reports: dict) -> dict:
+    counts = {status: 0 for status in guard_mod.STATUS_NAMES}
+    for rep in reports.values():
+        counts[rep["status"]] += 1
+    return {"quarantined": counts["quarantined"],
+            "retried": counts["retried"],
+            "rejected": counts["rejected"],
+            "timeouts": counts["timeout"]}
 
 
 # ---------------------------------------------------------------------------
@@ -598,6 +852,16 @@ def _pool_copy(pool, src, dst):
 _pool_copy_jit = jax.jit(_pool_copy, donate_argnums=(0,))
 
 
+def _pool_scrub(pool, ids):
+    """Zero the freed pages of a quarantined slot so stale corruption
+    cannot leak into the page's next owner."""
+    return {"k": kvcache.scrub_pages(pool["k"], ids),
+            "v": kvcache.scrub_pages(pool["v"], ids)}
+
+
+_pool_scrub_jit = jax.jit(_pool_scrub, donate_argnums=(0,))
+
+
 def _page_prefix_equal(pool, pid, page_k, page_v, count):
     """True iff pool page ``pid`` matches the candidate page blocks
     (L, F, P) byte-for-byte on the first ``count`` token columns — the
@@ -624,10 +888,12 @@ def _serve_requests_paged(
     sctx: ModelCtx,
     serve_cfg: ServeConfig,
     *,
+    ctx: ModelCtx,
     slots: int,
     prefill,
     quantize,
     stats: Optional[dict] = None,
+    injector=None,
 ) -> list:
     """Page-pool continuous batching (the :func:`serve_requests` backend
     for ``serve_cfg.kv_pages > 0``).
@@ -659,6 +925,21 @@ def _serve_requests_paged(
     page-size KV tiling: pages partition the token axis exactly like the
     kernel's KV tiles, appends land in exclusively-owned pages, and fully
     masked tiles are exact no-ops in the online softmax.
+
+    **Fault domains.** Preemption snapshots always carry an integrity
+    fingerprint, verified before re-admission ever scatters bytes back
+    into the pool; a corrupt snapshot is dropped and the request re-queued
+    from its prompt (greedy decode is deterministic, so the recomputed
+    result is exact — status ``retried``). With ``serve_cfg.guard`` set,
+    the scan carries the NaN sentinel, every chunk audits live pages
+    (0xFF meta counts always; per-page byte-sum checksums against the
+    values recorded after the previous chunk, skipping pages the
+    scheduler legitimately wrote in between), faulty slots are
+    quarantined with their freed pages scrubbed, and pool starvation
+    becomes a bounded-retry ``rejected`` status instead of an exception.
+    The one audit blind spot: corruption landing in a page during the
+    same chunk the scheduler wrote it is invisible to the checksum until
+    the next chunk — the 0xFF meta and NaN sentinels still cover it.
     """
     P = serve_cfg.kv_page_tokens
     budget = serve_cfg.max_new_tokens
@@ -683,8 +964,17 @@ def _serve_requests_paged(
     token = jnp.zeros((B,), jnp.int32)
     done = jnp.ones((B,), bool)
 
+    guard = serve_cfg.guard
     chunk = serve_cfg.decode_chunk or max(1, budget // 4)
-    step = _jit_decode_scan(cfg, sctx, chunk, eos)
+    guarded = guard is not None and guard.nan_sentinel
+    if guarded:
+        gstep = _jit_decode_scan_guarded(cfg, sctx, chunk, eos)
+        zeros_bad = jnp.zeros((B,), bool)     # fresh carry, hoisted: the
+        #                                       scan never donates it
+    else:
+        step = _jit_decode_scan(cfg, sctx, chunk, eos)
+    if injector is not None:
+        injector.steal_pages(pool)
 
     queue = list(range(n_req))
     suspended: dict = {}               # rid -> preemption byte snapshot
@@ -694,11 +984,22 @@ def _serve_requests_paged(
     #                                                    resident, in order
     slot_pages: list[list] = [[] for _ in range(B)]    # pool ids, logical
     admit_clock = [0] * B
+    admit_time = [0.0] * B
     results: list = [None] * n_req
+    reports = {rid: guard_mod.new_report() for rid in range(n_req)}
+    admission_attempts: dict = {}      # rid -> failed empty-pool admissions
     clock = 0
     preempt_count = 0
     max_concurrent = 0
     peak_live = 0
+    snapshot_drops = 0
+    chunk_idx = 0
+    # Page-checksum audit state: ``recorded`` maps pool page id -> the
+    # byte-sum observed after the last chunk; ``dirty`` collects pages the
+    # scheduler itself wrote since then (admission scatters, COW copies,
+    # horizon allocs, chunk appends) — those are re-recorded, not compared.
+    recorded: dict = {}
+    dirty: set = set()
 
     def set_table_row(b, pids):
         row = jnp.zeros((maxp,), jnp.int32)
@@ -734,8 +1035,15 @@ def _serve_requests_paged(
         rid = slot_req[b]
         ids = jnp.asarray(slot_pages[b], jnp.int32)
         snap = jax.device_get(_pool_gather_jit(cache["kv"], ids))
+        # fingerprint BEFORE the injector hook: the stamp models the bytes
+        # as they left the device; host-side corruption after that is what
+        # re-admission must catch
+        crc = guard_mod.snapshot_fingerprint(snap)
+        if injector is not None:
+            snap = injector.poison_snapshot(snap, rid)
         suspended[rid] = {
             "pages": snap,                      # page BYTES, not tokens
+            "crc32": crc,
             "token": int(jax.device_get(token[b])),
             "toks": slot_toks[b],
             "written": slot_written[b],
@@ -759,7 +1067,7 @@ def _serve_requests_paged(
                 return pid
             victim = pick_victim()
             if victim is None:
-                raise RuntimeError(
+                raise PoolExhaustedError(
                     f"KV page pool exhausted: {pool.usable_pages} usable "
                     f"pages cannot hold even one resident sequence")
             preempt(victim)
@@ -767,9 +1075,23 @@ def _serve_requests_paged(
                 return None
 
     def try_admit(b, rid):
-        nonlocal token, done, clock
-        if rid in suspended:
-            snap = suspended[rid]
+        nonlocal token, done, clock, snapshot_drops
+        snap = suspended.get(rid)
+        if snap is not None and not guard_mod.verify_snapshot(snap):
+            # a truncated/flipped snapshot must never reach the pool:
+            # drop it and fall through to the fresh-prompt path — greedy
+            # decode is deterministic, so recomputing from the prompt
+            # reproduces the request's exact result
+            del suspended[rid]
+            snapshot_drops += 1
+            reports[rid]["retries"] += 1
+            reports[rid].update(
+                status="retried",
+                detail="snapshot_integrity: preemption snapshot failed its "
+                       "fingerprint at re-admission; re-queued from the "
+                       "prompt")
+            snap = None
+        if snap is not None:
             n = snap["pages"]["k"]["meta"].shape[1]
             if pool.available() < n:
                 return False
@@ -778,6 +1100,7 @@ def _serve_requests_paged(
                 cache["kv"], snap["pages"]["k"], snap["pages"]["v"],
                 jnp.arange(n, dtype=jnp.int32),
                 jnp.asarray(pids, jnp.int32))
+            dirty.update(pids)
             del suspended[rid]
             token = token.at[b].set(snap["token"])
             cache["pos"] = cache["pos"].at[b].set(len(snap["written"]))
@@ -835,6 +1158,7 @@ def _serve_requests_paged(
                     cache["kv"], kp, vp,
                     jnp.asarray(own_src, jnp.int32),
                     jnp.asarray(own_dst, jnp.int32))
+                dirty.update(own_dst)
             first = int(jax.device_get(jnp.argmax(logits, axis=-1))[0])
             token = token.at[b].set(first)
             cache["pos"] = cache["pos"].at[b].set(n_tok)
@@ -846,6 +1170,7 @@ def _serve_requests_paged(
         set_table_row(b, pids)
         clock += 1
         admit_clock[b] = clock
+        admit_time[b] = time.monotonic()
         refresh_metadata(b)
         return True
 
@@ -864,6 +1189,7 @@ def _serve_requests_paged(
                     if new is None:
                         return False
                     cache["kv"] = _pool_copy_jit(cache["kv"], pid, new)
+                    dirty.add(new)
                     pool.release(pid)
                     slot_pages[b][cur] = new
                     cache["pages"] = cache["pages"].at[b, cur].set(new)
@@ -874,12 +1200,12 @@ def _serve_requests_paged(
             pid = alloc_page(rid, b)
             if pid is None:
                 return False
+            dirty.add(pid)
             slot_pages[b].append(pid)
             cache["pages"] = cache["pages"].at[b, j].set(pid)
         return True
 
-    def retire(b):
-        results[slot_req[b]] = _finalize_result(slot_toks[b], budget, eos)
+    def release_slot(b):
         for pid in slot_pages[b]:
             pool.release(pid)                  # hashed full pages park LRU
         slot_pages[b] = []
@@ -887,6 +1213,55 @@ def _serve_requests_paged(
         slot_toks[b] = []
         slot_written[b] = []
         set_table_row(b, [])
+
+    def retire(b):
+        results[slot_req[b]] = _finalize_result(slot_toks[b], budget, eos)
+        release_slot(b)
+
+    def quarantine(b, reason):
+        """Evict the poisoned slot only: drop its pool refs, scrub the
+        pages that actually freed (shared pages survive for their other
+        holders, whose own audits will catch them if THEY are the
+        corrupted bytes), and retry the request once on the qdq/bf16
+        fallback path. Neighbouring slots' pages and scan state are
+        untouched — they continue bitwise-unaffected."""
+        nonlocal done
+        rid = slot_req[b]
+        freed = []
+        for pid in slot_pages[b]:
+            pool.release(pid, keep_cached=False)
+            if pid not in pool.ref:
+                freed.append(pid)
+                recorded.pop(pid, None)
+        if freed:
+            cache["kv"] = _pool_scrub_jit(cache["kv"],
+                                          jnp.asarray(freed, jnp.int32))
+            dirty.update(freed)
+        slot_pages[b] = []
+        slot_req[b] = None
+        slot_toks[b] = []
+        slot_written[b] = []
+        set_table_row(b, [])
+        done = done.at[b].set(True)
+        if guard.retry_fallback:
+            res, healthy = _retry_fallback(cfg, params, requests[rid], ctx,
+                                           serve_cfg)
+            reports[rid]["retries"] += 1
+            if healthy:
+                results[rid] = res
+                reports[rid].update(
+                    status="retried",
+                    detail=f"{reason}; re-served solo on the qdq/bf16 "
+                           "fallback path")
+                return
+        results[rid] = _failed_result(budget, eos)
+        reports[rid].update(status="quarantined", detail=reason)
+
+    def reject(rid, detail):
+        queue.remove(rid)
+        suspended.pop(rid, None)
+        results[rid] = _failed_result(budget, eos)
+        reports[rid].update(status="rejected", detail=detail)
 
     while queue or any(r is not None for r in slot_req):
         # Admission: FIFO, page-fit driven — stop at the first request
@@ -900,9 +1275,26 @@ def _serve_requests_paged(
                 break
             queue.pop(0)
         if not any(r is not None for r in slot_req):
-            raise RuntimeError(
-                f"request {queue[0]!r} cannot be admitted into an empty "
-                f"pool ({pool.usable_pages} usable pages)")
+            # nothing resident AND the queue head still does not fit: with
+            # no guard this is fatal; with one it becomes bounded
+            # retry+backoff and then a per-request ``rejected`` status
+            rid = queue[0]
+            msg = (f"request {rid!r} cannot be admitted into an empty "
+                   f"pool ({pool.usable_pages} usable pages, "
+                   f"{pool.available()} allocatable)")
+            if guard is None:
+                raise PoolExhaustedError(msg)
+            attempts = admission_attempts.get(rid, 0) + 1
+            admission_attempts[rid] = attempts
+            if attempts <= guard.max_admission_retries:
+                reports[rid]["retries"] += 1
+                if guard.admission_backoff_s:
+                    time.sleep(guard.admission_backoff_s
+                               * 2 ** (attempts - 1))
+                continue
+            reject(rid, "pool_exhausted: " + msg + " after "
+                   f"{attempts - 1} retries")
+            continue
         for b in range(B):
             if slot_req[b] is not None:
                 provision(b)
@@ -911,9 +1303,23 @@ def _serve_requests_paged(
         max_concurrent = max(max_concurrent,
                              sum(r is not None for r in slot_req))
         peak_live = max(peak_live, pool.live_pages())
+        if injector is not None:
+            cache["kv"] = injector.poison_pool(cache["kv"], pool, slot_req,
+                                               slot_pages, chunk_idx)
         active = jnp.asarray([r is not None for r in slot_req])
-        toks, token, cache, done = step(params, token, cache, done | ~active)
-        host_toks = jax.device_get(toks)
+        if guarded:
+            toks, token, cache, done, flags = gstep(
+                params, token, cache, done | ~active, zeros_bad)
+            host_toks, flagsv = jax.device_get((toks, flags))
+            badv = flagsv[:B].astype(bool)
+            pagemeta = flagsv[B:]              # per-pool-page 0xFF counts
+        else:
+            toks, token, cache, done = step(params, token, cache,
+                                            done | ~active)
+            badv = pagemeta = None
+            host_toks = jax.device_get(toks)
+        chunk_idx += 1
+        # 1) account this chunk's KV writes (and mark their pages dirty)
         for b in range(B):
             if slot_req[b] is None:
                 continue
@@ -921,9 +1327,71 @@ def _serve_requests_paged(
             # this chunk wrote KV for the previously pending token plus
             # every emission except the newest (still pending)
             pending = slot_toks[b][-1]
+            n0 = len(slot_written[b])
             slot_written[b].extend([pending] + new[:-1])
             slot_toks[b].extend(new)
+            n1 = len(slot_written[b])
+            for j in range(n0 // P, (n1 - 1) // P + 1):
+                # over-emission past the table clamps into the last entry
+                dirty.add(slot_pages[b][min(j, len(slot_pages[b]) - 1)])
+        # 2) audit live pages BEFORE retiring anything, so a final-chunk
+        #    fault cannot slip out with the request. The per-page 0xFF
+        #    counts come fused out of the guarded scan; only the checksum
+        #    audit needs a second (sums-only) reduction.
+        faulty = {}
+        if (guard is not None and guard.meta_audit and pagemeta is None):
+            pagemeta = jax.device_get(
+                guard_mod.slot_meta_nan_jit(cache["kv"]))
+        sums = None
+        if guard is not None and guard.page_checksums:
+            sums = jax.device_get(
+                guard_mod.pool_page_sums_jit(cache["kv"]))
+        if guard is not None:
+            for b in range(B):
+                if slot_req[b] is None:
+                    continue
+                for pid in slot_pages[b]:
+                    if (guard.meta_audit and pagemeta is not None
+                            and int(pagemeta[pid])):
+                        faulty[b] = (f"meta_nan: page {pid} carries "
+                                     f"{int(pagemeta[pid])} E6M2 "
+                                     "NaN sentinel(s)")
+                        break
+                    if (sums is not None and pid in recorded
+                            and pid not in dirty
+                            and int(sums[pid]) != recorded[pid]):
+                        faulty[b] = (f"page_checksum: settled page {pid} "
+                                     "changed outside the scheduler")
+                        break
+        for b in range(B):
+            if slot_req[b] is not None and b not in faulty and badv is not None \
+                    and bool(badv[b]):
+                faulty[b] = "nan_logits: non-finite logits in the decode scan"
+        for b, reason in faulty.items():
+            quarantine(b, reason)
+        # 3) re-record checksums for the pages still live, then settle
+        if sums is not None:
+            for b in range(B):
+                if slot_req[b] is None:
+                    continue
+                for pid in slot_pages[b]:
+                    recorded[pid] = int(sums[pid])
+        dirty.clear()
+        # 4) sharing metadata, deadlines, retirement
+        for b in range(B):
+            if slot_req[b] is None:
+                continue
             refresh_metadata(b)
+            if (guard is not None and guard.deadline_s is not None
+                    and time.monotonic() - admit_time[b] > guard.deadline_s):
+                rid = slot_req[b]
+                results[rid] = _finalize_partial(slot_toks[b], budget, eos)
+                reports[rid].update(
+                    status="timeout",
+                    detail=f"deadline: exceeded {guard.deadline_s}s")
+                release_slot(b)
+                done = done.at[b].set(True)
+                continue
             finished = len(slot_toks[b]) >= budget or (
                 eos is not None and eos in slot_toks[b])
             if finished:
@@ -936,5 +1404,7 @@ def _serve_requests_paged(
             pages_total=serve_cfg.kv_pages, page_tokens=P,
             peak_live_pages=peak_live,
             pool_bytes=serve_cfg.kv_pages * kvcache.page_nbytes(
-                cfg.attn.n_kv_heads, cfg.attn.d_head, P, cfg.n_layers))
+                cfg.attn.n_kv_heads, cfg.attn.d_head, P, cfg.n_layers),
+            snapshot_drops=snapshot_drops, reports=reports,
+            **_report_counts(reports))
     return results

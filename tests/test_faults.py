@@ -1,0 +1,262 @@
+"""End-to-end fault injection through the guarded serve stack.
+
+The acceptance bar of the failure-semantics docs (docs/EXECUTION.md): for
+EVERY fault class in ``repro.runtime.faults.FAULT_CLASSES``, the injected
+fault is (a) detected — the victim request ends ``retried`` /
+``quarantined`` / ``rejected``, never silently wrong — and (b) contained
+— every surviving request's output is BITWISE identical to the same serve
+with no injector. Detector units live in tests/test_guard.py; these tests
+drive the schedulers (``serve_requests``, both backends) with a real
+:class:`repro.runtime.faults.FaultInjector`.
+
+All tests carry the ``faults`` marker (CI runs them as their own job)
+and they are jit-compile heavy, so they are ``slow`` too."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core import kvcache
+from repro.core.qlinear import QuantConfig
+from repro.models import lm
+from repro.models.common import ModelCtx
+from repro.runtime.faults import FaultInjector, FaultSpec, parse_fault
+from repro.runtime.guard import GuardConfig, PoolExhaustedError
+from repro.runtime.serve_loop import ServeConfig, serve, serve_requests
+
+pytestmark = [pytest.mark.faults, pytest.mark.slow]
+
+CFG = get_arch("qwen1.5-0.5b").reduced()
+P, BUDGET, CAP = 8, 6, 32
+
+
+def _ctx(impl="packed", kv="hif4"):
+    return ModelCtx(quant=QuantConfig(fmt="hif4", impl=impl,
+                                      kv=kvcache.KVCacheConfig(kv)),
+                    remat=False, attn_q_chunk=2, attn_k_chunk=2)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return lm.init_params(CFG, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def reqs():
+    """Three requests sharing a 12-token prefix; prompts > P tokens so the
+    first owned page is settled by the time after_chunk >= 1 fires."""
+    prefix = jax.random.randint(jax.random.PRNGKey(5), (12,), 0, CFG.vocab)
+    return [jnp.concatenate([prefix, jax.random.randint(
+        jax.random.PRNGKey(30 + i), (4 + 2 * i,), 0, CFG.vocab)])
+        for i in range(3)]
+
+
+def _paged_sc(guard=GuardConfig(), kv_pages=12):
+    return ServeConfig(max_new_tokens=BUDGET, decode_chunk=2,
+                       cache_capacity=CAP, kv_format="hif4",
+                       kv_pages=kv_pages, kv_page_tokens=P, guard=guard)
+
+
+@pytest.fixture(scope="module")
+def paged_baseline(params, reqs):
+    """The uninjected guarded run all containment tests compare against —
+    itself asserted bitwise equal to the UNguarded scheduler, so a clean
+    guard pass changes nothing."""
+    base = serve_requests(CFG, params, reqs, _ctx(), _paged_sc(guard=None),
+                          slots=3)
+    stats: dict = {}
+    guarded = serve_requests(CFG, params, reqs, _ctx(), _paged_sc(),
+                             slots=3, stats=stats)
+    for a, b in zip(base, guarded):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert all(r["status"] == "ok" for r in stats["reports"].values())
+    assert stats["quarantined"] == stats["retried"] == stats["rejected"] == 0
+    return guarded
+
+
+def _assert_contained(results, stats, injector, baseline, victim):
+    """The fault fired, the victim never silently produced wrong tokens,
+    and every survivor is bitwise identical to the uninjected run."""
+    assert injector.fired, injector.events
+    rep = stats["reports"][victim]
+    assert rep["status"] in ("retried", "quarantined"), rep
+    assert rep["detail"], rep
+    for i in range(len(baseline)):
+        if i == victim:
+            continue
+        assert stats["reports"][i]["status"] == "ok"
+        np.testing.assert_array_equal(np.asarray(results[i]),
+                                      np.asarray(baseline[i]))
+    if rep["status"] == "retried":
+        # the qdq/bf16 fallback retry re-serves solo and greedy decode is
+        # deterministic — a recovered victim is EXACT, not approximate
+        np.testing.assert_array_equal(np.asarray(results[victim]),
+                                      np.asarray(baseline[victim]))
+    return rep
+
+
+# ---------------------------------------------------------------------------
+# Packed-page corruption (paged scheduler): code_flip / meta_flip /
+# page_corruption
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind,seed", [
+    ("code_flip", 0),       # finite value perturbation: checksum-only
+    ("meta_flip", 3),       # seed=3 flips bit 2 — low word, checksum-only
+    ("meta_flip", 7),       # different bit draw (may hit the E6M2 byte)
+    ("page_corruption", 1),  # multi-flip + forced 0xFF: every sentinel
+])
+def test_page_fault_detected_and_contained(params, reqs, paged_baseline,
+                                           kind, seed):
+    inj = FaultInjector(FaultSpec(kind=kind, seed=seed, target_request=1,
+                                  after_chunk=1))
+    stats: dict = {}
+    res = serve_requests(CFG, params, reqs, _ctx(), _paged_sc(), slots=3,
+                         stats=stats, injector=inj)
+    rep = _assert_contained(res, stats, inj, paged_baseline, victim=1)
+    detector = rep["detail"].split(":")[0]
+    assert detector in ("page_checksum", "meta_nan", "nan_logits"), rep
+    if kind == "code_flip":
+        # values perturb silently (finite): ONLY the checksum can see it
+        assert detector == "page_checksum", rep
+
+
+def test_same_spec_same_fault_same_bits(params, reqs, paged_baseline):
+    """Determinism: one FaultSpec injects the identical fault both runs —
+    identical events log and identical outputs for every request."""
+    runs = []
+    for _ in range(2):
+        inj = FaultInjector(FaultSpec(kind="meta_flip", seed=3,
+                                      target_request=1, after_chunk=1))
+        stats: dict = {}
+        res = serve_requests(CFG, params, reqs, _ctx(), _paged_sc(),
+                             slots=3, stats=stats, injector=inj)
+        runs.append((res, stats, inj))
+    assert runs[0][2].events == runs[1][2].events
+    assert runs[0][1]["reports"] == runs[1][1]["reports"]
+    for a, b in zip(runs[0][0], runs[1][0]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# nan_activation (whole-slot scheduler, bf16 KV)
+# ---------------------------------------------------------------------------
+
+
+def test_nan_activation_detected_and_contained(params, reqs):
+    ctx = _ctx(impl="qdq", kv="bf16")
+    sc = ServeConfig(max_new_tokens=BUDGET, decode_chunk=2,
+                     cache_capacity=CAP, kv_format="bf16")
+    base = serve_requests(CFG, params, reqs, ctx, sc, slots=2)
+    scg = dataclasses.replace(sc, guard=GuardConfig())
+    inj = FaultInjector(FaultSpec(kind="nan_activation", seed=0,
+                                  target_request=0, after_chunk=1))
+    stats: dict = {}
+    res = serve_requests(CFG, params, reqs, ctx, scg, slots=2, stats=stats,
+                         injector=inj)
+    rep = _assert_contained(res, stats, inj, base, victim=0)
+    assert rep["detail"].startswith("nan_logits"), rep
+
+
+def test_nan_activation_without_retry_quarantines(params, reqs):
+    """retry_fallback=False: detection still fires but the victim ends
+    quarantined with an eos/-1 fill instead of recovering."""
+    ctx = _ctx(impl="qdq", kv="bf16")
+    scg = ServeConfig(max_new_tokens=BUDGET, decode_chunk=2,
+                      cache_capacity=CAP, kv_format="bf16",
+                      guard=GuardConfig(retry_fallback=False))
+    inj = FaultInjector(FaultSpec(kind="nan_activation", seed=0,
+                                  target_request=0, after_chunk=1))
+    stats: dict = {}
+    res = serve_requests(CFG, params, reqs, ctx, scg, slots=2, stats=stats,
+                         injector=inj)
+    assert stats["reports"][0]["status"] == "quarantined"
+    assert stats["quarantined"] == 1
+    assert res[0].shape == (BUDGET,)   # padded fill, never silent garbage
+
+
+# ---------------------------------------------------------------------------
+# pool_starvation (admission failure semantics)
+# ---------------------------------------------------------------------------
+
+
+def test_pool_starvation_guarded_rejects(params, reqs):
+    inj = FaultInjector(FaultSpec(kind="pool_starvation", seed=0))
+    stats: dict = {}
+    res = serve_requests(CFG, params, reqs, _ctx(), _paged_sc(), slots=3,
+                         stats=stats, injector=inj)
+    assert inj.fired
+    assert stats["rejected"] == len(reqs)
+    for i in range(len(reqs)):
+        rep = stats["reports"][i]
+        assert rep["status"] == "rejected"
+        assert rep["retries"] == GuardConfig().max_admission_retries
+        assert res[i].shape == (BUDGET,)
+
+
+def test_pool_starvation_unguarded_raises_typed(params, reqs):
+    inj = FaultInjector(FaultSpec(kind="pool_starvation", seed=0))
+    with pytest.raises(PoolExhaustedError):
+        serve_requests(CFG, params, reqs, _ctx(), _paged_sc(guard=None),
+                       slots=3, injector=inj)
+
+
+# ---------------------------------------------------------------------------
+# snapshot_truncation (preemption snapshot integrity)
+# ---------------------------------------------------------------------------
+
+
+def _solo(params, r, P, cap, budget):
+    solo_ctx = dataclasses.replace(_ctx(), attn_kv_block=P)
+    sc = ServeConfig(max_new_tokens=budget, cache_capacity=cap,
+                     kv_format="hif4")
+    return serve(CFG, params, {"tokens": r[None, :]}, solo_ctx, sc)[0]
+
+
+@pytest.mark.parametrize("bits", [0, 1])   # 0 = truncate, 1 = bit flip
+def test_snapshot_corruption_requeues_bitwise(params, bits):
+    """The preemption geometry of test_paged_kv, with the victim's host
+    snapshot corrupted AFTER its fingerprint was stamped: re-admission
+    must detect it, drop the snapshot, and re-serve from the prompt —
+    still bitwise equal to solo serving (greedy decode is deterministic)."""
+    Pp, budget, cap = 4, 8, 16
+    reqs2 = [jax.random.randint(jax.random.PRNGKey(15 + i), (8,), 0,
+                                CFG.vocab) for i in range(2)]
+    sc = ServeConfig(max_new_tokens=budget, decode_chunk=2,
+                     cache_capacity=cap, kv_format="hif4", kv_pages=6,
+                     kv_page_tokens=Pp, guard=GuardConfig())
+    # 5 usable pages, each sequence needs 4: the younger slot (request 1)
+    # is preempted mid-admission
+    inj = FaultInjector(FaultSpec(kind="snapshot_truncation", seed=0,
+                                  target_request=1, bits=bits))
+    stats: dict = {}
+    res = serve_requests(CFG, params, reqs2, _ctx(), sc, slots=2,
+                         stats=stats, injector=inj)
+    assert stats["preemptions"] >= 1
+    assert inj.fired, "preemption never happened — geometry regressed"
+    assert stats["snapshot_drops"] >= 1
+    rep = stats["reports"][1]
+    assert rep["status"] == "retried"
+    assert rep["detail"].startswith("snapshot_integrity"), rep
+    for i, r in enumerate(reqs2):
+        np.testing.assert_array_equal(
+            np.asarray(res[i]), np.asarray(_solo(params, r, Pp, cap,
+                                                 budget)))
+
+
+# ---------------------------------------------------------------------------
+# Launcher spec syntax
+# ---------------------------------------------------------------------------
+
+
+def test_parse_fault_spec():
+    spec = parse_fault("meta_flip:seed=3,target_request=1,after_chunk=2")
+    assert spec == FaultSpec(kind="meta_flip", seed=3, target_request=1,
+                             after_chunk=2)
+    assert parse_fault("pool_starvation") == FaultSpec("pool_starvation")
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        parse_fault("bitrot:seed=1")

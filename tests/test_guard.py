@@ -1,0 +1,274 @@
+"""Unit tests for the guard layer (repro.runtime.guard): typed serving
+exceptions, artifact integrity checksums, the device-side sentinels the
+guarded decode scan fuses in, and preemption-snapshot fingerprints.
+
+End-to-end fault detection/containment through the schedulers lives in
+tests/test_faults.py (marked ``faults``); these tests pin each detector
+in isolation so a fault-suite failure localizes immediately."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core import hif4, kvcache
+from repro.core.policy import get_policy
+from repro.core.qlinear import PackedW, QuantConfig
+from repro.models import lm
+from repro.runtime import guard
+from repro.runtime.serve_loop import (
+    load_serving_artifact,
+    save_serving_artifact,
+)
+
+CFG = get_arch("qwen1.5-0.5b").reduced()
+
+
+# ---------------------------------------------------------------------------
+# Typed exceptions
+# ---------------------------------------------------------------------------
+
+
+def test_exception_hierarchy():
+    """Every typed serving error funnels through ServeError, which stays a
+    RuntimeError so pre-existing handlers keep working."""
+    for exc in (guard.PoolExhaustedError, guard.SnapshotIntegrityError,
+                guard.ArtifactError):
+        assert issubclass(exc, guard.ServeError)
+    for exc in (guard.ArtifactNotFoundError, guard.ArtifactLayoutError,
+                guard.ArtifactIntegrityError):
+        assert issubclass(exc, guard.ArtifactError)
+    assert issubclass(guard.ServeError, RuntimeError)
+
+
+def test_load_missing_artifact_is_typed(tmp_path):
+    with pytest.raises(guard.ArtifactNotFoundError, match="no serving"):
+        load_serving_artifact(str(tmp_path / "nope"), CFG)
+
+
+def test_save_packed_tree_is_typed(tmp_path):
+    """save_serving_artifact must refuse an already-packed tree with the
+    typed layout error (kernel layout has no inverse), not a bare assert."""
+    from repro.runtime.serve_loop import prepare_params_for_serving
+
+    params = lm.init_params(CFG, jax.random.PRNGKey(0))
+    policy = get_policy("uniform:hif4", impl="packed",
+                        kv=kvcache.KVCacheConfig("hif4"))
+    packed = prepare_params_for_serving(params, CFG, policy)
+    with pytest.raises(guard.ArtifactLayoutError, match="already-packed"):
+        save_serving_artifact(str(tmp_path / "art"), packed, CFG, policy)
+
+
+# ---------------------------------------------------------------------------
+# Artifact integrity (per-leaf sha256 + format invariants)
+# ---------------------------------------------------------------------------
+
+
+def _packed_leaf(seed=0, k=128, n=8):
+    w = (jax.random.normal(jax.random.PRNGKey(seed), (k, n))
+         * 0.3).astype(jnp.bfloat16)
+    return PackedW.from_dense(w)
+
+
+def test_artifact_integrity_roundtrip_and_corruption():
+    tree = {"a": _packed_leaf(0), "b": _packed_leaf(1)}
+    rec = guard.artifact_integrity(tree)
+    assert rec["version"] == guard.INTEGRITY_VERSION
+    assert len(rec["leaves"]) == 2
+    guard.verify_artifact_integrity(tree, rec, "mem")   # clean: no raise
+
+    # one flipped bit in one codes byte fails that leaf's sha256
+    leaf = tree["a"]
+    codes = np.array(leaf.codes, copy=True)
+    codes.reshape(-1)[7] ^= np.uint8(1 << 3)
+    bad = dict(tree, a=dataclasses.replace(leaf, codes=jnp.asarray(codes)))
+    with pytest.raises(guard.ArtifactIntegrityError, match="codes_sha256"):
+        guard.verify_artifact_integrity(bad, rec, "mem")
+
+    # a leaf with no recorded checksum is an error too (tampered manifest)
+    with pytest.raises(guard.ArtifactIntegrityError, match="no integrity"):
+        guard.verify_artifact_integrity(
+            tree, {"version": 1, "leaves": {}}, "mem")
+
+
+def test_packed_invariants_catch_meta_nan():
+    """Algorithm 1 never emits the 0xFF E6M2 sentinel, so its presence in
+    an artifact is flagged even WITHOUT a recorded checksum."""
+    leaf = _packed_leaf(2)
+    assert guard.packed_invariants("w", leaf) == []
+    meta = np.array(leaf.meta, copy=True)
+    meta.reshape(-1)[0] |= np.uint32(0xFF << 24)
+    poisoned = dataclasses.replace(leaf, meta=jnp.asarray(meta))
+    errs = guard.packed_invariants("w", poisoned)
+    assert errs and "NaN sentinel" in errs[0]
+
+
+@pytest.mark.slow
+def test_serving_artifact_save_load_verifies(tmp_path):
+    """End-to-end: the exported artifact carries the integrity block and a
+    byte flipped in a stored packed payload fails the load loudly."""
+    import json
+    import os
+
+    params = lm.init_params(CFG, jax.random.PRNGKey(0))
+    policy = get_policy("uniform:hif4", impl="packed",
+                        kv=kvcache.KVCacheConfig("hif4"))
+    directory = str(tmp_path / "artifact")
+    save_serving_artifact(directory, params, CFG, policy)
+    loaded, pol = load_serving_artifact(directory, CFG)   # clean: verifies
+    assert pol.name == policy.name
+
+    step_dir = os.path.join(directory, "step_00000000")
+    with open(os.path.join(step_dir, "extra.json")) as f:
+        extra = json.load(f)
+    assert extra["integrity"]["leaves"], "no packed leaves recorded"
+    # corrupt the stored payloads on disk (arrays are opaque arr_NNNNN.npy
+    # blobs; flipping the tail byte of each guarantees a packed codes/meta
+    # buffer took a hit without decoding the manifest's tree layout)
+    for fn in sorted(os.listdir(step_dir)):
+        if fn.startswith("arr_") and fn.endswith(".npy"):
+            path = os.path.join(step_dir, fn)
+            blob = bytearray(open(path, "rb").read())
+            blob[-1] ^= 0x10             # payload tail, clear of the header
+            open(path, "wb").write(bytes(blob))
+    with pytest.raises(guard.ArtifactIntegrityError):
+        load_serving_artifact(directory, CFG)
+
+
+# ---------------------------------------------------------------------------
+# Device-side sentinels
+# ---------------------------------------------------------------------------
+
+
+def test_bad_logits_flags_only_poisoned_slots():
+    lg = jnp.zeros((3, 16), jnp.bfloat16)
+    np.testing.assert_array_equal(np.asarray(guard.bad_logits(lg)),
+                                  [False, False, False])
+    lg = lg.at[1, 5].set(jnp.nan)
+    lg = lg.at[2, 0].set(jnp.inf)
+    np.testing.assert_array_equal(np.asarray(guard.bad_logits(lg)),
+                                  [False, True, True])
+
+
+def _contiguous_packed_kv(B=2, S=24, Hkv=2, Dh=64, seed=0):
+    def one(s):
+        kv = (jax.random.normal(jax.random.PRNGKey(s), (1, B, S, Hkv, Dh))
+              * 0.3).astype(jnp.bfloat16)
+        return kvcache.to_kernel_layout(kvcache.quantize_kv(kv))
+    return {"k": one(seed), "v": one(seed + 1)}
+
+
+def test_slot_meta_nan_counts_localize_to_slot():
+    kv = _contiguous_packed_kv()
+    counts = np.asarray(guard.slot_meta_nan_counts(kv))
+    np.testing.assert_array_equal(counts, [0, 0])     # Alg. 1 never emits
+    k = dict(kv["k"])
+    k["meta"] = k["meta"].at[0, 1, 0, 3].set(jnp.uint32(0xFF << 24))
+    counts = np.asarray(guard.slot_meta_nan_counts({"k": k, "v": kv["v"]}))
+    np.testing.assert_array_equal(counts, [0, 1])     # only slot 1 flagged
+
+
+@pytest.mark.parametrize("leaf,bit", [("codes", 0), ("codes", 7),
+                                      ("meta", 0), ("meta", 31)])
+def test_page_checksum_catches_any_single_bit(leaf, bit):
+    """The detection guarantee behind the per-chunk audit: ONE flipped bit
+    anywhere in a page changes that page's checksum and no other's —
+    including low codes bits that perturb values silently (finite, no NaN),
+    which no other sentinel can see."""
+    pool = kvcache.init_page_pool(1, 2, 64, 5, 8)
+    # non-trivial contents: scatter a quantized block into page 2
+    kv = (jax.random.normal(jax.random.PRNGKey(3), (1, 1, 8, 2, 64))
+          * 0.3).astype(jnp.bfloat16)
+    pk = kvcache.split_pages(kvcache.to_kernel_layout(kvcache.quantize_kv(kv)),
+                             8)
+    k = {key: pool["k"][key].at[:, 2].set(a[:, 0])
+         for key, a in pk.items()}
+    before = np.asarray(guard.pool_page_sums({"k": k, "v": pool["v"]}))
+    flipped = dict(k)
+    one = jnp.asarray(1 << bit, flipped[leaf].dtype)
+    flipped[leaf] = flipped[leaf].at[0, 2, 1, 4].set(
+        flipped[leaf][0, 2, 1, 4] ^ one)
+    after = np.asarray(guard.pool_page_sums({"k": flipped, "v": pool["v"]}))
+    assert after[2] != before[2]
+    mask = np.ones(5, bool)
+    mask[2] = False
+    np.testing.assert_array_equal(after[mask], before[mask])
+
+
+def test_pool_page_stats_flags_nan_page():
+    pool = kvcache.init_page_pool(1, 2, 64, 4, 8)
+    k = dict(pool["k"])
+    k["meta"] = k["meta"].at[0, 3, 0, 0].set(jnp.uint32(hif4.META_NAN << 24))
+    stats = guard.pool_page_stats({"k": k, "v": pool["v"]})
+    np.testing.assert_array_equal(np.asarray(stats["meta_nan"]),
+                                  [0, 0, 0, 1])
+
+
+@pytest.mark.parametrize("bit", range(32))
+def test_meta_bit_flip_nan_or_group_local_exhaustive(bit):
+    """Deterministic twin of the Hypothesis property in
+    tests/test_hif4_properties.py (which skips when hypothesis is absent):
+    every one of the 32 meta bits, flipped in one group, either poisons
+    that group with NaN (E6M2 became 0xFF) or perturbs only that group —
+    all other groups decode bitwise identically on both decode paths."""
+    n, g = 3, 1
+    x = np.asarray((jax.random.normal(jax.random.PRNGKey(9),
+                                      (n, hif4.GROUP_SIZE)) * 0.3)
+                   .astype(jnp.float32))
+    p = hif4.quantize_packed(jnp.asarray(x))
+    meta = np.asarray(p.meta).copy()
+    meta[g] ^= np.uint32(1 << bit)
+    bad = hif4.HiF4Packed(codes=p.codes, meta=jnp.asarray(meta))
+
+    clean_pk = np.asarray(hif4.dequantize_packed(p), np.float32)
+    flip_pk = np.asarray(hif4.dequantize_packed(bad), np.float32)
+    codes_km = jnp.asarray(np.asarray(p.codes).reshape(n * 32, 1))
+    flip_km = np.asarray(hif4.dequantize_km(
+        codes_km, jnp.asarray(meta.reshape(n, 1)),
+        dtype=jnp.float32)).reshape(n, hif4.GROUP_SIZE)
+
+    for flip in (flip_pk, flip_km):
+        others = np.ones(n, bool)
+        others[g] = False
+        np.testing.assert_array_equal(flip[others], clean_pk[others])
+        if (meta[g] >> 24) == hif4.META_NAN:
+            assert np.all(np.isnan(flip[g]))
+        else:
+            assert np.all(np.isfinite(flip[g]))
+
+
+# ---------------------------------------------------------------------------
+# Preemption-snapshot fingerprints
+# ---------------------------------------------------------------------------
+
+
+def _snapshot(seed=0):
+    rng = np.random.default_rng(seed)
+    pages = {}
+    for t in ("k", "v"):
+        pages[t] = {
+            "codes": rng.integers(0, 256, (1, 2, 64, 8), dtype=np.uint8),
+            "meta": rng.integers(0, 2**32, (1, 2, 2, 8), dtype=np.uint32),
+            "tail": np.zeros((1, 2, 0, 8), np.float32),
+        }
+    return pages
+
+
+def test_snapshot_fingerprint_detects_flip_and_truncation():
+    pages = _snapshot()
+    crc = guard.snapshot_fingerprint(pages)
+    assert guard.snapshot_fingerprint(_snapshot()) == crc   # deterministic
+    snap = {"pages": pages, "crc32": crc}
+    assert guard.verify_snapshot(snap)
+
+    flipped = _snapshot()
+    flipped["k"]["codes"][0, 1, 3, 2] ^= np.uint8(1)
+    assert not guard.verify_snapshot({"pages": flipped, "crc32": crc})
+
+    truncated = {t: {key: a[:, :-1] for key, a in leaves.items()}
+                 for t, leaves in _snapshot().items()}
+    assert not guard.verify_snapshot({"pages": truncated, "crc32": crc})
+    # mangled structure is "corrupt", not a crash
+    assert not guard.verify_snapshot({"pages": {"k": {}}, "crc32": crc})

@@ -103,6 +103,47 @@ def test_corrupt_meta_nan_propagates_every_path(x):
     assert np.all(np.isnan(np.asarray(deq)))
 
 
+@hypothesis.given(group_batches(),
+                  st.integers(min_value=0, max_value=31),
+                  st.data())
+def test_single_meta_bit_flip_is_nan_or_group_local(x, bit, data):
+    """The corruption-semantics contract (docs/FORMATS.md): flip ANY
+    single bit of ANY packed meta word and the decode either goes NaN
+    (the E6M2 byte became the 0xFF sentinel) or perturbs ONLY that
+    64-element group — every other group decodes bitwise identically, on
+    the artifact path (dequantize_packed) and the K-major kernel path
+    (dequantize_km) alike. This locality is what makes quarantining the
+    owning request a complete containment."""
+    n = x.shape[0]
+    g = data.draw(st.integers(min_value=0, max_value=n - 1), label="group")
+    p = hif4.quantize_packed(jnp.asarray(x))
+    meta = np.asarray(p.meta).copy()
+    meta[g] ^= np.uint32(1 << bit)
+    bad = hif4.HiF4Packed(codes=p.codes, meta=jnp.asarray(meta))
+
+    clean_pk = np.asarray(hif4.dequantize_packed(p), np.float32)
+    flip_pk = np.asarray(hif4.dequantize_packed(bad), np.float32)
+    codes_km = jnp.asarray(np.asarray(p.codes).reshape(n * 32, 1))
+    clean_km = np.asarray(hif4.dequantize_km(
+        codes_km, jnp.asarray(np.asarray(p.meta).reshape(n, 1)),
+        dtype=jnp.float32)).reshape(n, hif4.GROUP_SIZE)
+    flip_km = np.asarray(hif4.dequantize_km(
+        codes_km, jnp.asarray(meta.reshape(n, 1)),
+        dtype=jnp.float32)).reshape(n, hif4.GROUP_SIZE)
+    np.testing.assert_array_equal(clean_km, clean_pk)   # paths agree clean
+
+    for flip, clean in ((flip_pk, clean_pk), (flip_km, clean_km)):
+        others = np.ones(n, bool)
+        others[g] = False
+        # blast radius: every OTHER group is bitwise untouched
+        np.testing.assert_array_equal(flip[others], clean[others])
+        if (meta[g] >> 24) == hif4.META_NAN:
+            # NaN sentinel: the whole group poisons loudly
+            assert np.all(np.isnan(flip[g]))
+        else:
+            assert np.all(np.isfinite(flip[g]))
+
+
 @st.composite
 def kv_shapes(draw):
     """Randomized KV geometry crossing group boundaries: F = Hkv*Dh sweeps

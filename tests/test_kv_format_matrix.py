@@ -1,13 +1,16 @@
 """resolve_kv_format fallback loudness as a full family matrix.
 
 Every registry arch x every requested KV format, asserting that the
-``kv_format_fallback`` flag agrees with (a) the verbose stdout fallback
-note and (b) the format of the cache leaves ACTUALLY served — built
-through ``serve_loop.build_decode_cache``, the exact sequence ``serve``
-decodes against. The enc-dec families (audio/vlm) must serve packed
-HiF4 — including the whisper cross (encoder) cache — with no fallback;
-only the SSM-state families (ssm/hybrid) may narrow, and must say so.
+``kv_format_fallback`` flag agrees with (a) the ``KVFallbackWarning``
+the verbose resolve emits and (b) the format of the cache leaves
+ACTUALLY served — built through ``serve_loop.build_decode_cache``, the
+exact sequence ``serve`` decodes against. The enc-dec families
+(audio/vlm) must serve packed HiF4 — including the whisper cross
+(encoder) cache — with no fallback; only the SSM-state families
+(ssm/hybrid) may narrow, and must say so.
 """
+import warnings
+
 import jax
 import jax.numpy as jnp
 import pytest
@@ -20,6 +23,7 @@ from repro.models.common import ModelCtx
 from repro.runtime import serve_loop
 from repro.runtime.scenario import prefill_batch
 from repro.runtime.serve_loop import (
+    KVFallbackWarning,
     ServeConfig,
     build_decode_cache,
     kv_format_fallback,
@@ -42,22 +46,28 @@ def _served_formats(cache):
 @pytest.mark.slow
 @pytest.mark.parametrize("requested", ["bf16", "hif4"])
 @pytest.mark.parametrize("arch", ARCHS)
-def test_fallback_flag_agrees_with_served_cache(arch, requested, capsys):
+def test_fallback_flag_agrees_with_served_cache(arch, requested):
     cfg = get_arch(arch).reduced()
     quant = QuantConfig(fmt="hif4", impl="packed",
                         kv=kvcache.KVCacheConfig(requested))
     ctx = ModelCtx(quant=quant, remat=False, attn_q_chunk=8, attn_k_chunk=8)
     sc = ServeConfig(max_new_tokens=4, kv_format=requested)
 
-    resolved = resolve_kv_format(cfg, quant, sc, verbose=True)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        resolved = resolve_kv_format(cfg, quant, sc, verbose=True)
     fallback = kv_format_fallback(cfg, quant, sc)
     expected_fallback = (requested == "hif4"
                          and cfg.family in FALLBACK_FAMILIES)
     assert fallback == expected_fallback
     assert fallback == (resolved != requested)
-    # loudness: narrowing must be printed, silence means no narrowing
-    out = capsys.readouterr().out
-    assert ("falls back to bf16" in out) == fallback
+    # loudness: narrowing must warn (a catchable KVFallbackWarning, not a
+    # print); silence means no narrowing
+    fb_warns = [w for w in caught
+                if issubclass(w.category, KVFallbackWarning)]
+    assert bool(fb_warns) == fallback
+    if fallback:
+        assert "falls back to bf16" in str(fb_warns[0].message)
 
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
     sp = serve_loop.prepare_params_for_serving(params, cfg, quant)

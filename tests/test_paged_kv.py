@@ -425,23 +425,29 @@ def test_retire_no_eos_token_matches_eos_free():
 # ---------------------------------------------------------------------------
 
 
-def test_kv_fallback_loud_and_recorded(capsys):
+def test_kv_fallback_loud_and_recorded():
     """A family without a packed KV layout must fall back to bf16 LOUDLY
-    (verbose resolve prints) and visibly (kv_format_fallback=True for the
-    records benchmark/dryrun carry) — never silently."""
+    (verbose resolve emits a catchable KVFallbackWarning) and visibly
+    (kv_format_fallback=True for the records benchmark/dryrun carry) —
+    never silently."""
+    import warnings
+
+    from repro.runtime.serve_loop import KVFallbackWarning
+
     ssm = get_arch("mamba2-1.3b").reduced()
     quant = QuantConfig(fmt="hif4", impl="qdq",
                         kv=kvcache.KVCacheConfig("hif4"))
     sc = ServeConfig()
     assert resolve_kv_format(ssm, quant, sc) == "bf16"
-    capsys.readouterr()
-    assert resolve_kv_format(ssm, quant, sc, verbose=True) == "bf16"
-    assert "falls back to bf16" in capsys.readouterr().out
+    with pytest.warns(KVFallbackWarning, match="falls back to bf16"):
+        assert resolve_kv_format(ssm, quant, sc, verbose=True) == "bf16"
     assert kv_format_fallback(ssm, quant, sc) is True
-    # a KV-cache family narrows nothing and prints nothing
-    capsys.readouterr()
-    assert resolve_kv_format(CFG, quant, sc, verbose=True) == "hif4"
-    assert capsys.readouterr().out == ""
+    # a KV-cache family narrows nothing and warns nothing
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        assert resolve_kv_format(CFG, quant, sc, verbose=True) == "hif4"
+    assert not [w for w in caught
+                if issubclass(w.category, KVFallbackWarning)]
     assert kv_format_fallback(CFG, quant, sc) is False
 
 

@@ -19,7 +19,11 @@ whose prose makes cross-module claims about layouts and test anchors) for
     renamed or deleted preset fail CI;
   * matrix perf-gate references (the ``gate:`name``` spelling): the name
     must be declared in ``benchmarks.matrix.GATE_NAMES`` — docs
-    documenting a gate ``check_matrix_gates`` does not enforce fail CI.
+    documenting a gate ``check_matrix_gates`` does not enforce fail CI;
+  * serve-status references (the ``status:`name``` spelling): the name
+    must be declared in ``repro.runtime.guard.STATUS_NAMES`` — the
+    failure-semantics docs promise per-request terminal statuses, and a
+    doc naming a status the scheduler never emits fails CI.
 
 Runs as a section of ``benchmarks/run.py`` and as the tier-1 test
 ``tests/test_docs.py``, so stale docs break CI instead of readers.
@@ -57,6 +61,10 @@ POLICY_NAME_RE = re.compile(r"`([a-z0-9]+(?:-[a-z0-9]+)+)`")
 # matrix perf-gate references: docs spell them gate:`name` so the lint
 # can tell a gate claim from ordinary backticked code
 GATE_RE = re.compile(r"gate:`([A-Za-z0-9_]+)`")
+
+# per-request serve statuses: docs spell them status:`name` so the
+# failure-semantics vocabulary stays pinned to the scheduler's enum
+STATUS_RE = re.compile(r"status:`([A-Za-z0-9_]+)`")
 
 
 def _policy_candidates(text: str) -> set:
@@ -165,6 +173,15 @@ def check_file(path: str, docstring_only: bool = False) -> list[str]:
                 errors.append(
                     f"{rel}: unknown matrix gate gate:`{name}` (not in "
                     f"benchmarks.matrix.GATE_NAMES)")
+    status_refs = sorted(set(STATUS_RE.findall(text)))
+    if status_refs:
+        from repro.runtime.guard import STATUS_NAMES
+
+        for name in status_refs:
+            if name not in STATUS_NAMES:
+                errors.append(
+                    f"{rel}: unknown serve status status:`{name}` (not in "
+                    f"repro.runtime.guard.STATUS_NAMES)")
     return errors
 
 
