@@ -630,6 +630,82 @@ class PagePool:
                 return pid
         return None
 
+    # -- invariants ---------------------------------------------------------
+
+    def audit(self, holders: Optional[dict] = None) -> dict:
+        """Check every cross-structure invariant; raise AssertionError
+        naming ALL violations, so a pool leak fails loudly instead of
+        silently shrinking capacity. Called by the paged scheduler after
+        every serve (and by recovery); returns occupancy counters on
+        success.
+
+        Invariants: the free list, the refcounted live set, and the LRU
+        cache PARTITION pages ``1..n_pages-1`` exactly (no page leaked,
+        none double-tracked, scratch page 0 never handed out); refcounts
+        are positive; owners and partial-tail entries only exist on live
+        pages; cached pages are always hash-indexed; the full-page hash
+        index is a bijection onto live-or-cached pages, disjoint from the
+        partial registry. ``holders`` (optional) maps holder name -> list
+        of page ids it retains; the per-page holder counts must then
+        equal the refcounts exactly.
+        """
+        errs = []
+        free, live, cached = set(self.free), set(self.ref), set(self.cached)
+        if len(free) != len(self.free):
+            errs.append(f"free list has duplicates: {sorted(self.free)}")
+        for name, a, b in (("free/live", free, live),
+                           ("free/cached", free, cached),
+                           ("live/cached", live, cached)):
+            both = a & b
+            if both:
+                errs.append(f"pages tracked twice ({name}): {sorted(both)}")
+        expected = set(range(1, self.n_pages))
+        tracked = free | live | cached
+        leaked = expected - tracked
+        if leaked:
+            errs.append(f"leaked pages (in no structure): {sorted(leaked)}")
+        bogus = tracked - expected
+        if bogus:
+            errs.append(f"out-of-range or scratch page ids tracked: "
+                        f"{sorted(bogus)}")
+        for pid, n in self.ref.items():
+            if n <= 0:
+                errs.append(f"page {pid}: non-positive refcount {n}")
+        for pid in self.owner:
+            if pid not in self.ref:
+                errs.append(f"page {pid}: owned but not live")
+        for pid in self.partials:
+            if pid not in self.ref:
+                errs.append(f"page {pid}: in the partial registry but "
+                            "not live")
+            if pid in self.key_of:
+                errs.append(f"page {pid}: both partial and full-hashed")
+        for pid in cached:
+            if pid not in self.key_of:
+                errs.append(f"page {pid}: cached without a full-page hash "
+                            "(unshareable — should have freed)")
+        if len(self.full_hash) != len(self.key_of):
+            errs.append(f"full_hash ({len(self.full_hash)}) and key_of "
+                        f"({len(self.key_of)}) disagree on size")
+        for pid, key in self.key_of.items():
+            if self.full_hash.get(key) != pid:
+                errs.append(f"page {pid}: key_of/full_hash mismatch")
+            if pid not in self.ref and pid not in self.cached:
+                errs.append(f"page {pid}: hash-indexed but neither live "
+                            "nor cached")
+        if holders is not None:
+            counts: dict[int, int] = {}
+            for ids in holders.values():
+                for pid in ids:
+                    counts[pid] = counts.get(pid, 0) + 1
+            if counts != dict(self.ref):
+                errs.append(f"refcounts {dict(sorted(self.ref.items()))} != "
+                            f"holder counts {dict(sorted(counts.items()))}")
+        assert not errs, (
+            "PagePool.audit failed:\n  - " + "\n  - ".join(errs))
+        return {"free": len(free), "live": len(live), "cached": len(cached),
+                "hashed": len(self.key_of), "partials": len(self.partials)}
+
 
 # ---------------------------------------------------------------------------
 # Accounting

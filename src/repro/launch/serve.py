@@ -36,6 +36,18 @@ through :mod:`repro.runtime.faults` to demonstrate detection/containment,
 e.g. ``--inject-fault meta_flip:seed=3,target_request=1,after_chunk=1``.
 Both flags route serving through the request scheduler (transformer
 families only).
+
+``--journal-dir DIR`` makes the serve crash-safe (docs/EXECUTION.md
+§Crash recovery): a write-ahead request journal under DIR records every
+admission, per-chunk emission, and terminal status (fsynced once per
+decode chunk), and ``--checkpoint-every N`` adds a durable page-pool
+checkpoint every N chunks. After a crash — including an injected
+``crash_*`` fault — rerunning with ``--resume`` replays the journal:
+finished requests' results are injected verbatim, checkpointed residents
+restored byte-for-byte, the rest re-prefilled, and every re-served
+output is verified bitwise against its journaled token prefix. The
+launcher prints journal/checkpoint residency and, on resume, the
+recovery report.
 """
 import argparse
 
@@ -144,6 +156,16 @@ def _print_attention_dispatch(cfg, ctx, capacity):
           f"{capacity} slots")
 
 
+def _print_journal_residency(directory):
+    from repro.runtime.journal import journal_residency
+
+    res = journal_residency(directory)
+    print(f"journal residency [{directory}]: "
+          f"{res['journal_bytes']} B journal, "
+          f"{res['checkpoints']} checkpoint(s) = "
+          f"{res['checkpoint_bytes']} B")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -182,6 +204,19 @@ def main():
                          "(paper-iv, uniform:<fmt>, nvfp4-baseline, "
                          "sensitive-fallback) or a policy JSON file; "
                          "overrides --quant")
+    ap.add_argument("--journal-dir", default=None, metavar="DIR",
+                    help="crash-safe serving: write-ahead request journal "
+                         "(+ pool checkpoints) under DIR; routes through "
+                         "the request scheduler")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="durable pool checkpoint every N decode chunks "
+                         "(0 = journal only; paged scheduler)")
+    ap.add_argument("--resume", action="store_true",
+                    help="recover from the journal in --journal-dir: "
+                         "journaled terminal results are injected, "
+                         "checkpointed residents restored, the rest "
+                         "re-prefilled — outputs bitwise identical to an "
+                         "uninterrupted run")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -224,7 +259,9 @@ def main():
                      decode_chunk=args.decode_chunk,
                      kv_pages=args.kv_pages,
                      kv_page_tokens=args.kv_page_tokens,
-                     guard=guard)
+                     guard=guard,
+                     journal_dir=args.journal_dir,
+                     checkpoint_every=args.checkpoint_every)
     a = cfg.attn
     kv_fmt = None
     if a is None:
@@ -265,37 +302,57 @@ def main():
     # packed impls reuse the converted tree (prepare is idempotent on it);
     # the qdq artifact is re-derived inside serve from the raw weights
     sparams = serving_params if nvals else params
-    if args.kv_pages:
-        assert tokens is not None, (
-            "--kv-pages serves token requests (dense/vlm-embeds not "
-            "supported by the paged scheduler entry)")
-        assert kv_fmt == "hif4", (
-            "--kv-pages requires --kv-format hif4 on a KV-cache family "
-            "(the page pool stores packed HiF4 pages)")
-        stats: dict = {}
-        res = serve_requests(cfg, sparams, list(tokens), ctx, sc,
-                             slots=args.batch, stats=stats,
-                             injector=injector)
-        print(f"paged scheduler: max {stats['max_concurrent']} concurrent, "
-              f"{stats['shared_page_hits']} shared-page hits, "
-              f"{stats['preemptions']} preemptions, "
-              f"{stats['evictions']} LRU evictions, peak "
-              f"{stats['peak_live_pages']}/{args.kv_pages} pages live")
-        toks = jnp.stack(res)
-    elif guard is not None:
-        # guarded serving is per-request fault domains — route through the
-        # request scheduler even without the page pool
-        assert tokens is not None, (
-            "--guard/--inject-fault serve token requests through the "
-            "request scheduler (dense/vlm-embeds not supported)")
-        stats = {}
-        res = serve_requests(cfg, sparams, list(tokens), ctx, sc,
-                             slots=args.batch, stats=stats,
-                             injector=injector)
-        toks = jnp.stack(res)
-    else:
-        stats = None
-        toks = serve(cfg, sparams, batch, ctx, sc)
+    try:
+        if args.kv_pages:
+            assert tokens is not None, (
+                "--kv-pages serves token requests (dense/vlm-embeds not "
+                "supported by the paged scheduler entry)")
+            assert kv_fmt == "hif4", (
+                "--kv-pages requires --kv-format hif4 on a KV-cache family "
+                "(the page pool stores packed HiF4 pages)")
+            stats: dict = {}
+            res = serve_requests(cfg, sparams, list(tokens), ctx, sc,
+                                 slots=args.batch, stats=stats,
+                                 injector=injector, resume=args.resume)
+            print(f"paged scheduler: max {stats['max_concurrent']} "
+                  f"concurrent, {stats['shared_page_hits']} shared-page "
+                  f"hits, {stats['preemptions']} preemptions, "
+                  f"{stats['evictions']} LRU evictions, peak "
+                  f"{stats['peak_live_pages']}/{args.kv_pages} pages live")
+            toks = jnp.stack(res)
+        elif guard is not None or args.journal_dir is not None:
+            # guarded/journaled serving is per-request — route through the
+            # request scheduler even without the page pool
+            assert tokens is not None, (
+                "--guard/--inject-fault/--journal-dir serve token requests "
+                "through the request scheduler (dense/vlm-embeds not "
+                "supported)")
+            stats = {}
+            res = serve_requests(cfg, sparams, list(tokens), ctx, sc,
+                                 slots=args.batch, stats=stats,
+                                 injector=injector, resume=args.resume)
+            toks = jnp.stack(res)
+        else:
+            stats = None
+            toks = serve(cfg, sparams, batch, ctx, sc)
+    except faults.SimulatedCrash as crash:
+        # the injected process kill: report what the journal holds and
+        # exit cleanly so CI smoke runs can chain a --resume invocation
+        print(f"simulated crash: {crash}")
+        if args.journal_dir is not None:
+            _print_journal_residency(args.journal_dir)
+        print("resume with: --journal-dir", args.journal_dir, "--resume")
+        return
+    if args.journal_dir is not None:
+        _print_journal_residency(args.journal_dir)
+        if args.resume and stats is not None and "recovery" in stats:
+            rec = stats["recovery"]
+            print(f"recovery report: {rec['completed']} journaled results "
+                  f"injected, {rec['replayed']} residents restored from "
+                  f"checkpoint, {rec['re_prefilled']} re-prefilled, "
+                  f"{rec['dropped_bytes']} torn journal bytes dropped, "
+                  f"{rec['verified']} replay prefixes verified bitwise "
+                  f"({rec['recovery_ms']:.1f} ms plan build)")
     if injector is not None:
         for kind, detail in injector.events:
             print(f"injected fault: {kind} {detail}")

@@ -6,8 +6,22 @@ from repro.runtime.guard import (  # noqa: F401
     ArtifactLayoutError,
     ArtifactNotFoundError,
     GuardConfig,
+    JournalError,
     PoolExhaustedError,
+    RecoveryError,
     ServeError,
     SnapshotIntegrityError,
 )
-from repro.runtime.faults import FaultInjector, FaultSpec, parse_fault  # noqa: F401,E501
+from repro.runtime.faults import (  # noqa: F401
+    FaultInjector,
+    FaultSpec,
+    SimulatedCrash,
+    parse_fault,
+)
+from repro.runtime.journal import (  # noqa: F401
+    RecoveryPlan,
+    RequestJournal,
+    journal_residency,
+    read_journal,
+    recover,
+)

@@ -30,6 +30,24 @@ Fault classes (``FaultSpec.kind``):
   last page column (``bits == 0``) or takes one bit flip, AFTER its
   fingerprint was stamped.
 
+Crash-point classes (``repro.runtime.journal``): these KILL the serving
+process — :class:`SimulatedCrash` propagates out of ``serve_requests``
+like a SIGKILL would, leaving exactly the journal prefix a real crash at
+that point leaves. Tests then resume with the same journal dir and
+assert the recovered outputs are bitwise identical to an uninterrupted
+run:
+
+* ``crash_after_admit`` — dies right after the target request's
+  ``admitted`` record was committed (durable admit, no decode yet).
+* ``crash_mid_decode`` — dies after decode chunk ``after_chunk``'s
+  record (and any due checkpoint) was committed.
+* ``crash_during_checkpoint`` — dies inside the checkpoint write: the
+  ``.npz`` exists on disk but its journal record never commits, so
+  recovery must ignore the orphaned file.
+* ``journal_truncation`` — ``crash_mid_decode`` plus ``bits`` bytes torn
+  off the journal's end (a half-flushed final write); the crc framing
+  must drop the torn record and recover the valid prefix.
+
 All randomness comes from ``numpy.random.default_rng(spec.seed)`` — the
 same spec injects the same fault, so containment tests can assert
 bitwise-identical survivor outputs across runs.
@@ -48,7 +66,19 @@ FAULT_CLASSES = (
     "nan_activation",
     "pool_starvation",
     "snapshot_truncation",
+    "crash_after_admit",
+    "crash_mid_decode",
+    "crash_during_checkpoint",
+    "journal_truncation",
 )
+
+CRASH_CLASSES = FAULT_CLASSES[-4:]
+
+
+class SimulatedCrash(RuntimeError):
+    """The injected process kill: deliberately NOT a ServeError — no
+    scheduler guard may catch it (a real SIGKILL cannot be caught
+    either). The journal's durable prefix is all recovery gets."""
 
 
 @dataclasses.dataclass
@@ -192,6 +222,39 @@ class FaultInjector:
             self.events.append(("nan_activation", {"slot": b, "idx": idx}))
             return {"k": kv["k"], "v": v.at[idx].set(jnp.nan)}
         return kv
+
+    # -- crash-point hook (journaled schedulers) ----------------------------
+
+    def crash_point(self, point: str, *, chunk_idx: int = 0,
+                    rid=None, journal=None) -> None:
+        """Kill the process at a named crash point by raising
+        :class:`SimulatedCrash`. The journal is committed first — a real
+        crash can only lose what was never fsynced, and these faults
+        model the crash *after* the durable write the point is named
+        for. ``journal_truncation`` additionally tears ``spec.bits``
+        bytes off the journal's end before dying."""
+        if self.fired or self.spec.kind not in CRASH_CLASSES:
+            return
+        kind = self.spec.kind
+        if kind == "crash_after_admit":
+            if point != "after_admit" or rid != self.spec.target_request:
+                return
+        elif kind in ("crash_mid_decode", "journal_truncation"):
+            if point != "mid_decode" or chunk_idx < self.spec.after_chunk:
+                return
+        else:                              # crash_during_checkpoint
+            if point != "during_checkpoint":
+                return
+        if journal is not None:
+            journal.commit()
+            if kind == "journal_truncation":
+                journal.truncate_tail(self.spec.bits)
+        self.fired = True
+        self.events.append((kind, {"point": point, "chunk": chunk_idx,
+                                   "rid": rid}))
+        raise SimulatedCrash(
+            f"simulated process kill at crash point {point!r} "
+            f"(fault {kind}, chunk {chunk_idx}); resume from the journal")
 
     # -- preemption hook (after the fingerprint is stamped) -----------------
 

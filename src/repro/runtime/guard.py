@@ -90,6 +90,19 @@ class SnapshotIntegrityError(ServeError):
     """A preempted slot's host page snapshot failed its fingerprint."""
 
 
+class JournalError(ServeError):
+    """The write-ahead request journal is missing or corrupt beyond the
+    torn-tail case its record framing recovers from (no valid start
+    record, wrong version)."""
+
+
+class RecoveryError(ServeError):
+    """Crash recovery could not be performed safely: the resume request
+    list / serve config does not match the journaled serve, or a
+    recovered request's re-served output contradicts its journaled token
+    prefix (recovered state is checked, not trusted)."""
+
+
 class ArtifactError(ServeError):
     """Base for serving-artifact load/save problems."""
 

@@ -1,0 +1,445 @@
+"""Crash-safe serving: write-ahead request journal + pool checkpoints.
+
+A process crash must not lose finished work, and everything it does lose
+must be recomputable EXACTLY. HiF4 makes the second half cheap: packed
+page bytes are per-token-deterministic (a token's 64-elem groups depend
+only on its own K/V vectors — docs/FORMATS.md), and greedy decode is
+deterministic, so a request re-served from its prompt reproduces its
+original tokens bit for bit. The journal therefore only has to make the
+*bookkeeping* durable — which requests were admitted, which tokens each
+chunk emitted, which requests reached a terminal status — plus periodic
+page-pool checkpoints so long-running residents resume from their last
+durable position instead of re-decoding from scratch.
+
+Three pieces:
+
+* :class:`RequestJournal` — append-only, crc32-framed record stream
+  (``serve.journal``). Records buffer in memory and ``commit()`` writes +
+  fsyncs them once per decode chunk, so the journal adds one small
+  sequential write per chunk, not one per event. A fresh journal is
+  staged at ``serve.journal.tmp`` and atomically renamed over the live
+  file only after its start record (and any carried-over terminal
+  results) are durable — a crash during resume can never destroy the
+  previous journal.
+* :func:`save_pool_checkpoint` / :func:`load_pool_checkpoint` — the
+  resident slots' page bytes (via the same ``_pool_gather`` blocks
+  preemption snapshots use), written as an ``.npz`` next to the journal
+  and sha256-fingerprinted. The journal's ``checkpoint`` record is the
+  COMMIT POINT: a checkpoint whose record never made it to the journal
+  (crash mid-write) is ignored on recovery, never half-trusted.
+* :func:`recover` — replays a journal (torn/truncated tail records are
+  detected by the length+crc framing and dropped, never misparsed) into
+  a :class:`RecoveryPlan`: terminal requests get their journaled results
+  injected; residents covered by a verified checkpoint become preemption-
+  style byte snapshots the paged scheduler restores through its existing
+  ``try_admit`` path; everything else re-enters the queue from its
+  prompt. The resumed serve then *verifies* recovery — each re-served
+  request's output must extend its journaled token prefix, else
+  :class:`~repro.runtime.guard.RecoveryError` — recovered state is
+  checked, not trusted.
+
+Byte layouts are specified in docs/FORMATS.md (§Write-ahead journal);
+the recovery matrix per crash fault class is in docs/EXECUTION.md
+(§Crash recovery). Crash points are driven deterministically by
+``repro.runtime.faults`` (``crash_after_admit`` / ``crash_mid_decode`` /
+``crash_during_checkpoint`` / ``journal_truncation``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import time
+import zlib
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime.guard import (JournalError, RecoveryError,
+                                 snapshot_fingerprint)
+
+JOURNAL_VERSION = 1
+JOURNAL_NAME = "serve.journal"
+MAGIC = b"HJ01"
+_HEADER = len(MAGIC) + 8            # magic | u32 payload len | u32 crc32
+
+EVENT_KINDS = frozenset(
+    {"start", "admitted", "chunk", "preempted", "done", "checkpoint"})
+
+
+# ---------------------------------------------------------------------------
+# Record framing (encode / decode)
+# ---------------------------------------------------------------------------
+
+
+def encode_record(event: dict) -> bytes:
+    """One framed record: ``HJ01 | u32 len | u32 crc32(payload) | payload``
+    with the payload UTF-8 JSON (sorted keys: byte-stable for a given
+    event). Little-endian lengths; crc over the payload bytes only."""
+    assert event.get("ev") in EVENT_KINDS, event
+    payload = json.dumps(event, sort_keys=True,
+                         separators=(",", ":")).encode("utf-8")
+    head = MAGIC + len(payload).to_bytes(4, "little") \
+        + zlib.crc32(payload).to_bytes(4, "little")
+    return head + payload
+
+
+def decode_records(data: bytes) -> tuple[list, int]:
+    """(events, dropped_bytes): every fully-framed, crc-clean record from
+    the front of ``data``; parsing stops at the FIRST bad frame (wrong
+    magic, short header, short payload, crc mismatch, or invalid JSON)
+    and everything from there on counts as dropped. A torn final record —
+    the expected shape after a crash mid-write — is therefore detected
+    and discarded, never misparsed into a bogus event."""
+    events, off = [], 0
+    n = len(data)
+    while off + _HEADER <= n:
+        if data[off:off + 4] != MAGIC:
+            break
+        size = int.from_bytes(data[off + 4:off + 8], "little")
+        crc = int.from_bytes(data[off + 8:off + 12], "little")
+        payload = data[off + _HEADER:off + _HEADER + size]
+        if len(payload) < size or zlib.crc32(payload) != crc:
+            break
+        try:
+            event = json.loads(payload.decode("utf-8"))
+        except (UnicodeDecodeError, json.JSONDecodeError):
+            break
+        if not isinstance(event, dict) or event.get("ev") not in EVENT_KINDS:
+            break
+        events.append(event)
+        off += _HEADER + size
+    return events, n - off
+
+
+def prompt_sha256(prompt) -> str:
+    """Identity of one request's prompt tokens — journaled at start and
+    re-checked at resume, so a journal can never replay onto a different
+    request list."""
+    toks = np.asarray(jnp.asarray(prompt, jnp.int32)).ravel()
+    return hashlib.sha256(toks.astype("<i4").tobytes()).hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# Write-ahead journal (writer)
+# ---------------------------------------------------------------------------
+
+
+class RequestJournal:
+    """Append-only request-lifecycle journal, fsync-batched per chunk.
+
+    Writes stage at ``<dir>/serve.journal.tmp``; :meth:`activate` (called
+    once the start record and any resume carry-over are durable) renames
+    it atomically over ``serve.journal``. The fd stays valid across the
+    rename, so appending simply continues on the live file. ``append``
+    only buffers; ``commit`` does one write + flush + fsync — the
+    scheduler calls it once per decode chunk (and before any simulated
+    crash point, so crash tests exercise exactly the durable prefix a
+    real kill would leave).
+    """
+
+    def __init__(self, directory: str):
+        os.makedirs(directory, exist_ok=True)
+        self.directory = directory
+        self.path = os.path.join(directory, JOURNAL_NAME)
+        self._tmp_path = self.path + ".tmp"
+        self._fh = open(self._tmp_path, "wb")
+        self._active = False
+        self._buffer: list[bytes] = []
+        self.records_written = 0
+
+    def append(self, ev: str, **fields) -> None:
+        self._buffer.append(encode_record({"ev": ev, **fields}))
+
+    def commit(self) -> None:
+        """Flush buffered records durably (one write + fsync). A no-op
+        with nothing buffered — the last durable state is still on disk,
+        so a redundant fsync buys nothing."""
+        if not self._buffer:
+            return
+        self._fh.write(b"".join(self._buffer))
+        self.records_written += len(self._buffer)
+        self._buffer.clear()
+        self._fh.flush()
+        os.fsync(self._fh.fileno())
+
+    def activate(self) -> None:
+        """Commit, then atomically replace the live journal with the
+        staged one. Until this runs, a crash leaves the previous journal
+        untouched (resume-over-resume safety)."""
+        self.commit()
+        os.replace(self._tmp_path, self.path)
+        self._active = True
+
+    def truncate_tail(self, nbytes: int) -> None:
+        """Chop ``nbytes`` off the end of the journal file — the
+        ``journal_truncation`` fault hook's model of a torn final write.
+        The reader must recover the remaining valid record prefix."""
+        self.commit()
+        size = self._fh.tell()
+        self._fh.truncate(max(0, size - max(1, nbytes)))
+        self._fh.flush()
+        os.fsync(self._fh.fileno())
+
+    def close(self) -> None:
+        if self._fh.closed:
+            return
+        self.commit()
+        self._fh.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+def read_journal(directory: str) -> tuple[list, int]:
+    """(events, dropped_bytes) of ``<dir>/serve.journal``. Raises
+    :class:`JournalError` when there is no journal or its first record is
+    not a valid ``start`` — with no start record nothing is recoverable
+    and resuming would silently re-serve from scratch."""
+    path = os.path.join(directory, JOURNAL_NAME)
+    if not os.path.exists(path):
+        raise JournalError(
+            f"no journal at {path!r}: nothing to resume (a journaled serve "
+            "writes it on its first committed chunk)")
+    with open(path, "rb") as f:
+        data = f.read()
+    events, dropped = decode_records(data)
+    if not events or events[0]["ev"] != "start" \
+            or events[0].get("v") != JOURNAL_VERSION:
+        raise JournalError(
+            f"journal at {path!r} has no valid version-{JOURNAL_VERSION} "
+            "start record — corrupt beyond the torn-tail case the framing "
+            "recovers from")
+    return events, dropped
+
+
+# ---------------------------------------------------------------------------
+# Pool checkpoints (resident page bytes, sha256-fingerprinted)
+# ---------------------------------------------------------------------------
+
+_SNAP_LEAVES = tuple((t, key) for t in ("k", "v")
+                     for key in ("codes", "meta", "tail"))
+
+
+def _store(a: np.ndarray) -> np.ndarray:
+    """bfloat16 has no portable npz dtype — store tails as uint16 bits."""
+    a = np.ascontiguousarray(a)
+    return a.view(np.uint16) if a.dtype == np.dtype(jnp.bfloat16) else a
+
+
+def _restore(a: np.ndarray, leaf: str) -> np.ndarray:
+    return a.view(np.dtype(jnp.bfloat16)) if leaf == "tail" else a
+
+
+def save_pool_checkpoint(directory: str, chunk_idx: int,
+                         residents: dict) -> tuple[str, str]:
+    """Write ``ckpt_<chunk>.npz`` holding every resident request's page
+    blocks. ``residents`` maps rid -> the preemption-snapshot dict shape
+    (``{"pages": {"k"/"v": {"codes","meta","tail"}}, "token", "toks"}``).
+    Returns (filename, sha256 of the file bytes) — the journal's
+    ``checkpoint`` record carries both, and recovery re-hashes the file
+    before trusting a single byte of it."""
+    arrays = {}
+    for rid, snap in residents.items():
+        for t, key in _SNAP_LEAVES:
+            arrays[f"r{rid}_{t}_{key}"] = _store(
+                np.asarray(snap["pages"][t][key]))
+    fname = f"ckpt_{chunk_idx:08d}.npz"
+    path = os.path.join(directory, fname)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    with open(path, "rb") as f:
+        digest = hashlib.sha256(f.read()).hexdigest()
+    return fname, digest
+
+
+def load_pool_checkpoint(directory: str, record: dict) -> Optional[dict]:
+    """Rebuild rid -> page-block dicts from a journal ``checkpoint``
+    record. Returns None (checkpoint unusable; callers fall back to
+    re-prefill) when the file is missing or its sha256 does not match the
+    journaled fingerprint — a half-written or bit-rotted checkpoint must
+    degrade recovery, not poison it."""
+    path = os.path.join(directory, record["file"])
+    if not os.path.exists(path):
+        return None
+    with open(path, "rb") as f:
+        data = f.read()
+    if hashlib.sha256(data).hexdigest() != record["sha256"]:
+        return None
+    with np.load(os.path.join(directory, record["file"])) as z:
+        out = {}
+        for rid_s in record["residents"]:
+            rid = int(rid_s)
+            try:
+                pages = {t: {key: _restore(z[f"r{rid}_{t}_{key}"], key)
+                             for key in ("codes", "meta", "tail")}
+                         for t in ("k", "v")}
+            except KeyError:
+                return None
+            out[rid] = pages
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Replay -> recovery plan
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class RecoveryPlan:
+    """Everything a resumed serve needs, rebuilt from checkpoint + tail.
+
+    ``completed``: rid -> {"toks", "status", "detail", "retries"} for
+    requests with a journaled terminal event (result injected, never
+    re-served). ``suspended``: rid -> preemption-style snapshot
+    (``pages``/``crc32``/``token``/``toks``) restored through the paged
+    scheduler's existing snapshot re-admission. ``emitted``: rid -> the
+    journaled token prefix every re-served request's output is verified
+    against. ``replayed``/``re_prefilled``/``dropped_records`` feed the
+    launcher's recovery report; ``recovery_ms`` is the plan-build time
+    (journal read + checkpoint verify + snapshot rebuild)."""
+
+    meta: dict
+    completed: dict = dataclasses.field(default_factory=dict)
+    suspended: dict = dataclasses.field(default_factory=dict)
+    emitted: dict = dataclasses.field(default_factory=dict)
+    replayed: int = 0
+    re_prefilled: int = 0
+    dropped_records: int = 0
+    recovery_ms: float = 0.0
+
+    def report(self) -> dict:
+        return {"completed": len(self.completed),
+                "replayed": self.replayed,
+                "re_prefilled": self.re_prefilled,
+                "dropped_bytes": self.dropped_records,
+                "recovery_ms": round(self.recovery_ms, 3)}
+
+    def expected_prefix(self, rid: int) -> list:
+        """The journaled greedy tokens a re-served request MUST reproduce
+        (clamped at budget and first eos, matching the scheduler's
+        finalize semantics)."""
+        toks = list(self.emitted.get(rid, ()))[: self.meta["budget"]]
+        eos = self.meta.get("eos")
+        if eos is not None and eos in toks:
+            toks = toks[: toks.index(eos) + 1]
+        return toks
+
+
+def replay(events: list) -> tuple[dict, dict, dict, Optional[dict]]:
+    """Fold a journal's event stream into per-request state.
+
+    Returns (emitted, terminal, in_flight, last_checkpoint): ``emitted``
+    maps rid -> every token journaled for it (reset by a fresh-prefill
+    re-admission — a dropped snapshot recomputes from the prompt, so
+    earlier emissions are superseded, not extended); ``terminal`` maps
+    rid -> its ``done`` event; ``in_flight`` holds the rids admitted but
+    not terminal."""
+    emitted: dict = {}
+    terminal: dict = {}
+    admitted: set = set()
+    last_ckpt = None
+    for ev in events[1:]:
+        kind = ev["ev"]
+        if kind == "admitted":
+            admitted.add(ev["rid"])
+            emitted[ev["rid"]] = list(ev["toks"])
+        elif kind == "chunk":
+            for rid_s, toks in ev["emitted"].items():
+                emitted.setdefault(int(rid_s), []).extend(toks)
+        elif kind == "done":
+            terminal[ev["rid"]] = ev
+        elif kind == "checkpoint":
+            last_ckpt = ev
+        # "preempted" carries no replay state: the snapshot lived only in
+        # process memory, and a checkpoint taken while the pages were
+        # still resident stays valid regardless (its file copy is frozen)
+    in_flight = {rid for rid in admitted if rid not in terminal}
+    return emitted, terminal, in_flight, last_ckpt
+
+
+def recover(directory: str, requests, *, budget: int,
+            eos: Optional[int]) -> RecoveryPlan:
+    """Build the :class:`RecoveryPlan` a resumed serve starts from.
+
+    Validates the journal against the resume-time ``requests`` (count +
+    per-prompt sha256 — :class:`RecoveryError` on mismatch: replaying a
+    journal onto different prompts would "verify" garbage), loads and
+    verifies the last committed checkpoint, and restores each covered
+    resident as a crc-stamped byte snapshot. Residents without verified
+    coverage — and requests never admitted — simply re-enter the queue
+    from their prompts: greedy decode is deterministic, so their results
+    are exact either way; the checkpoint only buys back the decode time.
+    """
+    t0 = time.perf_counter()
+    events, dropped = read_journal(directory)
+    meta = events[0]
+    if meta["n_requests"] != len(requests):
+        raise RecoveryError(
+            f"journal at {directory!r} covers {meta['n_requests']} "
+            f"requests but resume was handed {len(requests)}")
+    shas = [prompt_sha256(r) for r in requests]
+    if meta["prompts"] != shas:
+        bad = [i for i, (a, b) in enumerate(zip(meta["prompts"], shas))
+               if a != b]
+        raise RecoveryError(
+            f"resume prompts differ from the journaled serve at request "
+            f"id(s) {bad}: a journal only replays onto the request list "
+            "that wrote it")
+    if budget != meta["budget"] or eos != meta.get("eos"):
+        raise RecoveryError(
+            f"resume serve config (budget={budget}, eos={eos}) differs "
+            f"from the journaled serve (budget={meta['budget']}, "
+            f"eos={meta.get('eos')}); recovered decode would not be "
+            "bitwise comparable")
+
+    emitted, terminal, in_flight, ckpt = replay(events)
+    plan = RecoveryPlan(meta=meta, emitted=emitted, dropped_records=dropped)
+    for rid, ev in terminal.items():
+        plan.completed[rid] = {"toks": list(ev["toks"]),
+                               "status": ev["status"],
+                               "detail": ev.get("detail"),
+                               "retries": ev.get("retries", 0)}
+    pages_by_rid = {}
+    if ckpt is not None:
+        pages_by_rid = load_pool_checkpoint(directory, ckpt) or {}
+    for rid in sorted(in_flight):
+        res = ckpt["residents"].get(str(rid)) if ckpt is not None else None
+        pages = pages_by_rid.get(rid)
+        if res is not None and pages is not None:
+            snap = {"pages": pages, "token": res["token"],
+                    "toks": list(res["toks"]),
+                    "written": None}      # derived by the scheduler:
+            #                               prompt + toks[:-1] (invariant)
+            snap["crc32"] = snapshot_fingerprint(pages)
+            plan.suspended[rid] = snap
+            plan.replayed += 1
+        else:
+            plan.re_prefilled += 1
+    plan.recovery_ms = (time.perf_counter() - t0) * 1e3
+    return plan
+
+
+def journal_residency(directory: str) -> dict:
+    """Bytes on disk under a journal dir (the launcher's residency print):
+    journal file size, checkpoint count + bytes."""
+    out = {"journal_bytes": 0, "checkpoints": 0, "checkpoint_bytes": 0}
+    if not os.path.isdir(directory):
+        return out
+    for name in os.listdir(directory):
+        path = os.path.join(directory, name)
+        if name == JOURNAL_NAME:
+            out["journal_bytes"] = os.path.getsize(path)
+        elif name.startswith("ckpt_") and name.endswith(".npz"):
+            out["checkpoints"] += 1
+            out["checkpoint_bytes"] += os.path.getsize(path)
+    return out

@@ -30,6 +30,9 @@ re-trace; ``tests/test_scenario.py`` pins probe == actual execution.
 ``BENCH_matrix.json`` trajectory + gates; this module is the mechanism.
 """
 import dataclasses
+import os
+import shutil
+import tempfile
 import time
 from typing import Optional, Sequence
 
@@ -43,6 +46,7 @@ from repro.core.policy import get_policy
 from repro.core.qlinear import PackedW
 from repro.models import lm
 from repro.models.common import ModelCtx
+from repro.runtime import faults
 from repro.runtime import serve_loop
 from repro.runtime.serve_loop import (
     ServeConfig,
@@ -64,6 +68,14 @@ class Scenario:
     kv_format: str                # REQUESTED cache format: bf16 | hif4
     paged: bool = False           # page-pool serve_requests cell
     guarded: bool = False         # guarded decode scan + per-chunk KV audit
+    journaled: bool = False       # write-ahead journal + pool checkpoints
+    #                               (journal dir is a per-run tempdir)
+    recovery: bool = False        # crash (crash_mid_decode) + --resume cell:
+    #                               records the recovery report and asserts
+    #                               bitwise-identical recovered outputs
+    decode_chunk: int = 0         # tokens per jitted scan chunk (0 = budget);
+    #                               journal commits are per chunk, so the
+    #                               journal cells pin it for a fair ratio
     policy: str = "uniform:hif4"  # QuantPolicy preset for weight sites
     batch: int = 2
     prompt_len: int = 16
@@ -239,8 +251,10 @@ def _build_cell(scn: Scenario):
     return cfg, ctx, sp
 
 
-def _serve_cfg(scn: Scenario) -> ServeConfig:
-    sc = ServeConfig(max_new_tokens=scn.new_tokens, kv_format=scn.kv_format)
+def _serve_cfg(scn: Scenario,
+               journal_dir: Optional[str] = None) -> ServeConfig:
+    sc = ServeConfig(max_new_tokens=scn.new_tokens, kv_format=scn.kv_format,
+                     decode_chunk=scn.decode_chunk)
     if scn.paged:
         # pool sized to hold every request at full length, page = 16 toks
         pages = scn.batch * (
@@ -248,6 +262,15 @@ def _serve_cfg(scn: Scenario) -> ServeConfig:
         sc = dataclasses.replace(sc, kv_pages=pages, kv_page_tokens=16,
                                  cache_capacity=-(-(scn.prompt_len
                                                     + scn.new_tokens) // 16) * 16)
+    if scn.journaled:
+        assert journal_dir is not None, (
+            f"cell {scn.name}: journaled Scenario needs a journal_dir")
+        # the overhead cell measures the WAL alone (fsync per chunk);
+        # pool checkpoints — whose cost is a cadence knob, absurdly dense
+        # at benchmark-cell scale (2-token chunks) — are exercised and
+        # timed by the recovery cell instead
+        sc = dataclasses.replace(sc, journal_dir=journal_dir,
+                                 checkpoint_every=2 if scn.recovery else 0)
     return sc
 
 
@@ -278,10 +301,19 @@ def run_scenarios(scenarios: Sequence[Scenario], *, repeats: int = 7,
     names = [s.name for s in scenarios]
     assert len(set(names)) == len(names), f"duplicate cell names: {names}"
     records, states, steps, serving, paged_cells = {}, {}, {}, {}, []
+    tmp_dirs = []
     for scn in scenarios:
         t_setup = time.perf_counter()
         cfg, ctx, sp = _build_cell(scn)
-        sc = _serve_cfg(scn)
+        jdir = None
+        if scn.journaled:
+            # tmpfs when available: the overhead gate measures the WAL's
+            # software cost (framing, fsync-batching, replay bookkeeping),
+            # not the sync latency of whatever disk backs $TMPDIR.
+            shm = "/dev/shm" if os.path.isdir("/dev/shm") else None
+            jdir = tempfile.mkdtemp(prefix=f"matrix_{scn.name}_", dir=shm)
+            tmp_dirs.append(jdir)
+        sc = _serve_cfg(scn, journal_dir=jdir)
         dispatch = probe_dispatch(cfg, ctx.quant, sc, sp, paged=scn.paged,
                                   batch=scn.batch, prompt_len=scn.prompt_len)
         failed = check_expect(scn.expect, dispatch)
@@ -390,17 +422,27 @@ def run_scenarios(scenarios: Sequence[Scenario], *, repeats: int = 7,
             "baseline_ms": round(pair_best[base_name] * 1e3, 4),
             "subject_ms": round(pair_best[sub_name] * 1e3, 4)}
 
-    for scn, cfg, ctx, sp, sc in paged_cells:
-        rec = records[scn.name]
-        reqs = [jax.random.randint(jax.random.PRNGKey(40 + i),
-                                   (scn.prompt_len,), 0, cfg.vocab)
-                for i in range(scn.batch)]
-        t_e2e = float("inf")
-        for _ in range(max(2, repeats // 3)):
-            t0 = time.perf_counter()
-            out = serve_requests(cfg, sp, reqs, ctx, sc, slots=scn.batch)
-            jax.block_until_ready(out)
-            t_e2e = min(t_e2e, time.perf_counter() - t0)
+    pmap = {scn.name: (scn, cfg, ctx, sp, sc,
+                       [jax.random.randint(jax.random.PRNGKey(40 + i),
+                                           (scn.prompt_len,), 0, cfg.vocab)
+                        for i in range(scn.batch)])
+            for scn, cfg, ctx, sp, sc in paged_cells}
+
+    def paged_e2e(name, *, stats=None, injector=None, resume=False):
+        scn, cfg, ctx, sp, sc, reqs = pmap[name]
+        t0 = time.perf_counter()
+        out = serve_requests(cfg, sp, reqs, ctx, sc, slots=scn.batch,
+                             stats=stats, injector=injector, resume=resume)
+        jax.block_until_ready(out)
+        return out, time.perf_counter() - t0
+
+    rounds = max(2, repeats // 3)
+    for name, (scn, cfg, ctx, sp, sc, reqs) in pmap.items():
+        rec = records[name]
+        t_e2e, out = float("inf"), None
+        for _ in range(rounds):
+            out, dt = paged_e2e(name)
+            t_e2e = min(t_e2e, dt)
         rec["decode_step_ms"] = round(t_e2e / scn.new_tokens * 1e3, 4)
         rec["timing"] = "e2e-paged"
         rec["prefill_ms"] = None
@@ -409,5 +451,41 @@ def run_scenarios(scenarios: Sequence[Scenario], *, repeats: int = 7,
         rec["roofline"] = decode_step_bytes(
             cfg, sp, cache, scn.prompt_len + scn.new_tokens // 2)
         log(f"[matrix] {scn.name}: paged e2e {rec['decode_step_ms']} ms/tok")
+        if scn.recovery:
+            # crash the journaled serve mid-decode, then resume from its
+            # journal and require bitwise-identical recovered outputs
+            ref = [jax.device_get(r).tolist() for r in out]
+            inj = faults.FaultInjector(faults.FaultSpec(
+                "crash_mid_decode", after_chunk=1))
+            crashed = False
+            try:
+                paged_e2e(name, injector=inj)
+            except faults.SimulatedCrash:
+                crashed = True
+            stats: dict = {}
+            out2, dt2 = paged_e2e(name, stats=stats, resume=True)
+            got = [jax.device_get(r).tolist() for r in out2]
+            rec["recovery"] = dict(
+                stats.get("recovery", {}), crashed=crashed,
+                bitwise=(got == ref), resume_ms=round(dt2 * 1e3, 3))
+            log(f"[matrix] {scn.name}: recovery {rec['recovery']}")
 
+    # tight pairwise A/B interleave for paged gate pairs (the scan-cell
+    # loop above covers pairs timed on jitted decode scans; paged cells
+    # are timed end-to-end, so their ratio gets the same treatment here)
+    for base_name, sub_name in gate_pairs:
+        if base_name not in pmap or sub_name not in pmap:
+            continue
+        pair_best = {base_name: float("inf"), sub_name: float("inf")}
+        for _ in range(2 * rounds):
+            for name in (base_name, sub_name):
+                _, dt = paged_e2e(name)
+                pair_best[name] = min(pair_best[name],
+                                      dt / pmap[name][0].new_tokens)
+        records[sub_name].setdefault("gate_timing", {})[base_name] = {
+            "baseline_ms": round(pair_best[base_name] * 1e3, 4),
+            "subject_ms": round(pair_best[sub_name] * 1e3, 4)}
+
+    for d in tmp_dirs:
+        shutil.rmtree(d, ignore_errors=True)
     return [records[s.name] for s in scenarios]

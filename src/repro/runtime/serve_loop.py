@@ -58,10 +58,16 @@ class ServeConfig:
     prefix_sharing: bool = True            # hash-share prompt-prefix pages
     guard: Optional[GuardConfig] = None    # health sentinels + fault domains
     #                                        (None = unguarded; failures raise)
+    journal_dir: Optional[str] = None      # write-ahead request journal +
+    #                                        pool checkpoints live here
+    #                                        (None = no crash safety)
+    checkpoint_every: int = 0              # pool checkpoint cadence in decode
+    #                                        chunks (paged scheduler; 0 = off)
 
 
 def resolve_kv_format(cfg: ArchConfig, quant: QuantConfig,
-                      serve_cfg: ServeConfig, *, verbose: bool = False) -> str:
+                      serve_cfg: ServeConfig, *, verbose: bool = False,
+                      warned: Optional[set] = None) -> str:
     """The KV storage this serve actually runs: ServeConfig overrides the
     QuantConfig KVCacheConfig; SSM-state families fall back to bf16 (the
     recurrent state has no packed layout — see the docs/EXECUTION.md
@@ -69,13 +75,18 @@ def resolve_kv_format(cfg: ArchConfig, quant: QuantConfig,
     cross (encoder) caches — pack. ``verbose=True`` (the serve/launch
     entry points) emits a :class:`KVFallbackWarning` instead of narrowing
     silently; benchmark and dryrun records carry it as
-    ``kv_format_fallback``."""
+    ``kv_format_fallback``. ``warned`` is a per-serve-call dedup set:
+    the fallback warns once per (arch, requested format) per serve call,
+    not once per admission/re-prefill that re-resolves the format."""
     from repro.core import kvcache
 
     fmt = serve_cfg.kv_format or quant.kv.kv_format
     assert fmt in kvcache.KV_FORMATS, fmt
     if fmt == "hif4" and cfg.family not in ("dense", "vlm", "moe", "audio"):
-        if verbose:
+        key = (cfg.name, fmt)
+        if verbose and (warned is None or key not in warned):
+            if warned is not None:
+                warned.add(key)
             warnings.warn(
                 f"kv_format=hif4 has no packed layout for family "
                 f"{cfg.family!r} (SSM recurrent state) — serving falls "
@@ -433,7 +444,8 @@ def _jit_decode_scan_guarded(cfg: ArchConfig, sctx: ModelCtx, n_tokens: int,
 
 def build_decode_cache(cfg: ArchConfig, serving_params: dict, batch: dict,
                        sctx: ModelCtx, serve_cfg: ServeConfig, *,
-                       quant=None, verbose: bool = False):
+                       quant=None, verbose: bool = False,
+                       warned: Optional[set] = None):
     """Prefill and return (last-token logits, THE decode cache serve runs).
 
     The exact cache-build sequence :func:`serve` decodes against: prefill,
@@ -445,7 +457,8 @@ def build_decode_cache(cfg: ArchConfig, serving_params: dict, batch: dict,
     the ``kv_format_fallback`` flag must agree with these leaves.
     """
     quant = quant or sctx.quant
-    kv_fmt = resolve_kv_format(cfg, quant, serve_cfg, verbose=verbose)
+    kv_fmt = resolve_kv_format(cfg, quant, serve_cfg, verbose=verbose,
+                               warned=warned)
     logits, cache = _jit_prefill(cfg, sctx)(serving_params, batch)
     if kv_fmt == "hif4":
         cache = _jit_quantize_kv(cfg)(cache)
@@ -597,6 +610,78 @@ def _retry_fallback(cfg: ArchConfig, params: dict, prompt, ctx: ModelCtx,
             healthy)
 
 
+def _open_journal(serve_cfg: ServeConfig, requests, *, resume: bool,
+                  kind: str, chunk: int, **geometry):
+    """(journal, recovery plan) for a serve call — (None, None) without a
+    ``journal_dir``. On resume the OLD journal is replayed into the plan
+    first; the new journal then stages at ``.tmp``, records its start
+    event plus a ``done`` event per already-completed request (so a
+    second crash still recovers them without re-serving), and only then
+    atomically replaces the old file."""
+    if serve_cfg.journal_dir is None:
+        if resume:
+            raise guard_mod.RecoveryError(
+                "resume=True needs serve_cfg.journal_dir pointing at the "
+                "crashed serve's journal")
+        return None, None
+    from repro.runtime import journal as journal_mod
+
+    plan = None
+    if resume:
+        plan = journal_mod.recover(
+            serve_cfg.journal_dir, requests,
+            budget=serve_cfg.max_new_tokens, eos=serve_cfg.eos_id)
+    journal = journal_mod.RequestJournal(serve_cfg.journal_dir)
+    journal.append(
+        "start", v=journal_mod.JOURNAL_VERSION, kind=kind,
+        n_requests=len(requests), budget=serve_cfg.max_new_tokens,
+        eos=serve_cfg.eos_id, chunk=chunk,
+        prompts=[journal_mod.prompt_sha256(r) for r in requests],
+        **geometry)
+    if plan is not None:
+        for rid in sorted(plan.completed):
+            ent = plan.completed[rid]
+            journal.append("done", rid=rid, status=ent["status"],
+                           detail=ent["detail"], retries=ent["retries"],
+                           toks=ent["toks"])
+    journal.activate()
+    return journal, plan
+
+
+def _inject_completed(plan, queue, results, reports):
+    """Feed a recovery plan's journaled terminal results straight into the
+    result/report tables — completed work is never re-served."""
+    for rid in sorted(plan.completed):
+        ent = plan.completed[rid]
+        queue.remove(rid)
+        results[rid] = jnp.asarray(ent["toks"], jnp.int32)
+        reports[rid].update(status=ent["status"], detail=ent["detail"])
+        reports[rid]["retries"] = ent["retries"]
+
+
+def _verify_recovery(plan, results, reports) -> int:
+    """Recovered state is checked, not trusted: every re-served request
+    that finished cleanly must reproduce its journaled token prefix
+    bitwise (greedy decode + per-token-deterministic packed bits make the
+    replay exact by construction — a mismatch means recovery restored the
+    wrong bytes). Returns the number of verified prefixes."""
+    verified = 0
+    for rid in sorted(plan.emitted):
+        if rid in plan.completed or reports[rid]["status"] != "ok":
+            continue
+        exp = plan.expected_prefix(rid)
+        if not exp:
+            continue
+        got = [int(t) for t in jax.device_get(results[rid])][: len(exp)]
+        if got != exp:
+            raise guard_mod.RecoveryError(
+                f"request {rid}: re-served output {got} contradicts its "
+                f"journaled token prefix {exp} — recovered state failed "
+                "replay verification")
+        verified += 1
+    return verified
+
+
 def serve_requests(
     cfg: ArchConfig,
     params: dict,
@@ -607,6 +692,7 @@ def serve_requests(
     slots: int = 4,
     stats: Optional[dict] = None,      # filled with scheduler counters
     injector=None,                     # repro.runtime.faults.FaultInjector
+    resume: bool = False,              # recover from serve_cfg.journal_dir
 ) -> list:
     """Continuous-batching scheduler: serve ``requests`` through a fixed
     number of decode ``slots``.
@@ -640,13 +726,26 @@ def serve_requests(
     docs/EXECUTION.md §Failure semantics). ``injector`` is the
     fault-injection hook (:class:`repro.runtime.faults.FaultInjector`);
     tests and ``--inject-fault`` use it to prove every guard fires.
+
+    With ``serve_cfg.journal_dir`` set, every request lifecycle event is
+    written through a crc32-framed write-ahead journal (fsync-batched per
+    decode chunk) and — on the paged scheduler — the pool is periodically
+    checkpointed (``serve_cfg.checkpoint_every`` chunks). After a process
+    crash, calling again with ``resume=True`` rebuilds state from
+    checkpoint-plus-journal-tail (:mod:`repro.runtime.journal`): finished
+    requests' results are injected, checkpoint-covered residents restore
+    their page bytes, everything else re-prefills from its prompt — and
+    the resumed greedy outputs are verified bitwise against the journaled
+    token prefixes (docs/EXECUTION.md §Crash recovery).
     """
     assert cfg.family in ("dense", "vlm", "moe"), (
         f"continuous batching supports KV-cache families, got {cfg.family!r}"
     )
     sctx = serving_ctx(ctx)
     params = prepare_params_for_serving(params, cfg, ctx.plan or ctx.quant)
-    kv_fmt = resolve_kv_format(cfg, ctx.quant, serve_cfg, verbose=True)
+    warned: set = set()                # KVFallbackWarning dedup, per call
+    kv_fmt = resolve_kv_format(cfg, ctx.quant, serve_cfg, verbose=True,
+                               warned=warned)
     # Resolve the jitted entry points ONCE per serve call — admission runs
     # between every decode chunk, and a dict probe per admitted request
     # (plus the partial/jit wrapper construction on a miss) is avoidable
@@ -661,13 +760,16 @@ def serve_requests(
         return _serve_requests_paged(
             cfg, params, requests, sctx, serve_cfg, ctx=ctx,
             slots=slots, prefill=prefill, quantize=quantize, stats=stats,
-            injector=injector)
+            injector=injector, resume=resume)
 
     guard = serve_cfg.guard
     budget = serve_cfg.max_new_tokens
     max_prompt = max(int(r.shape[-1]) for r in requests)
     cap = serve_cfg.cache_capacity or max_prompt + budget
     B = min(slots, len(requests))
+    chunk = serve_cfg.decode_chunk or max(1, budget // 4)
+    journal, plan = _open_journal(serve_cfg, requests, resume=resume,
+                                  kind="slots", chunk=chunk)
 
     # Shared decode state: zero cache at full capacity, per-slot positions.
     cache = lm.init_cache(cfg, B, cap, kv_format=kv_fmt)
@@ -681,8 +783,17 @@ def serve_requests(
     admit_time = [0.0] * B
     results: list = [None] * len(requests)
     reports = {rid: guard_mod.new_report() for rid in range(len(requests))}
+    if plan is not None:
+        _inject_completed(plan, queue, results, reports)
     max_concurrent = 0
     chunk_idx = 0
+
+    def jlog_done(rid):
+        if journal is not None:
+            rep = reports[rid]
+            journal.append("done", rid=rid, status=rep["status"],
+                           detail=rep["detail"], retries=rep["retries"],
+                           toks=[int(t) for t in jax.device_get(results[rid])])
 
     def admit(b: int, cache, token):
         rid = queue.pop(0)
@@ -696,9 +807,11 @@ def serve_requests(
         slot_req[b] = rid
         slot_toks[b] = [int(first)]
         admit_time[b] = time.monotonic()
+        if journal is not None:
+            journal.append("admitted", rid=rid, src="prefill",
+                           toks=slot_toks[b])
         return cache, token
 
-    chunk = serve_cfg.decode_chunk or max(1, budget // 4)
     guarded = guard is not None and guard.nan_sentinel
     if guarded:
         gstep = _jit_decode_scan_guarded(cfg, sctx, chunk, serve_cfg.eos_id)
@@ -708,9 +821,11 @@ def serve_requests(
         step = _jit_decode_scan(cfg, sctx, chunk, serve_cfg.eos_id)
 
     def retire(b: int):
-        results[slot_req[b]] = _finalize_result(slot_toks[b], budget,
-                                                serve_cfg.eos_id)
+        rid = slot_req[b]
+        results[rid] = _finalize_result(slot_toks[b], budget,
+                                        serve_cfg.eos_id)
         slot_req[b] = None
+        jlog_done(rid)
 
     def quarantine(b: int, reason: str):
         """Evict the poisoned slot only; its neighbours' state is
@@ -730,9 +845,11 @@ def serve_requests(
                     status="retried",
                     detail=f"{reason}; re-served solo on the qdq/bf16 "
                            "fallback path")
+                jlog_done(rid)
                 return
         results[rid] = _failed_result(budget, serve_cfg.eos_id)
         reports[rid].update(status="quarantined", detail=reason)
+        jlog_done(rid)
 
     while queue or any(r is not None for r in slot_req):
         # Admission: fill every free slot before the next decode segment.
@@ -743,6 +860,9 @@ def serve_requests(
                     serve_cfg.eos_id is not None
                     and slot_toks[b][0] == serve_cfg.eos_id
                 )
+                if injector is not None:
+                    injector.crash_point("after_admit", chunk_idx=chunk_idx,
+                                         rid=slot_req[b], journal=journal)
         max_concurrent = max(max_concurrent,
                              sum(r is not None for r in slot_req))
         if injector is not None:
@@ -767,6 +887,10 @@ def serve_requests(
                     guard_mod.slot_meta_nan_jit(cache["kv"]))
             host_toks = jax.device_get(toks)
         chunk_idx += 1
+        if journal is not None:
+            journal.append("chunk", idx=chunk_idx - 1, emitted={
+                slot_req[b]: [int(t) for t in host_toks[b]]
+                for b in range(B) if slot_req[b] is not None})
         for b in range(B):
             if slot_req[b] is None:
                 continue
@@ -792,6 +916,7 @@ def serve_requests(
                 slot_req[b] = None
                 slot_toks[b] = []
                 done = done.at[b].set(True)
+                jlog_done(rid)
                 continue
             finished = len(slot_toks[b]) >= budget or (
                 serve_cfg.eos_id is not None
@@ -799,6 +924,17 @@ def serve_requests(
             )
             if finished:
                 retire(b)
+        if journal is not None:
+            journal.commit()
+        if injector is not None:
+            injector.crash_point("mid_decode", chunk_idx=chunk_idx - 1,
+                                 journal=journal)
+    if journal is not None:
+        journal.close()
+    if plan is not None:
+        verified = _verify_recovery(plan, results, reports)
+        if stats is not None:
+            stats["recovery"] = dict(plan.report(), verified=verified)
     if stats is not None:
         stats.update(scheduler="slots", max_concurrent=max_concurrent,
                      preemptions=0, shared_page_hits=0, evictions=0,
@@ -894,6 +1030,7 @@ def _serve_requests_paged(
     quantize,
     stats: Optional[dict] = None,
     injector=None,
+    resume: bool = False,
 ) -> list:
     """Page-pool continuous batching (the :func:`serve_requests` backend
     for ``serve_cfg.kv_pages > 0``).
@@ -976,6 +1113,10 @@ def _serve_requests_paged(
     if injector is not None:
         injector.steal_pages(pool)
 
+    journal, plan = _open_journal(
+        serve_cfg, requests, resume=resume, kind="paged", chunk=chunk,
+        kv_pages=serve_cfg.kv_pages, page_tokens=P)
+
     queue = list(range(n_req))
     suspended: dict = {}               # rid -> preemption byte snapshot
     slot_req = [None] * B
@@ -987,6 +1128,22 @@ def _serve_requests_paged(
     admit_time = [0.0] * B
     results: list = [None] * n_req
     reports = {rid: guard_mod.new_report() for rid in range(n_req)}
+    if plan is not None:
+        _inject_completed(plan, queue, results, reports)
+        for rid, snap in plan.suspended.items():
+            # checkpointed residents re-enter through the preemption
+            # snapshot path; written is derived from the scheduler
+            # invariant written == prompt + toks[:-1]
+            suspended[rid] = dict(
+                snap, toks=list(snap["toks"]),
+                written=prompts[rid] + list(snap["toks"])[:-1])
+
+    def jlog_done(rid):
+        if journal is not None:
+            rep = reports[rid]
+            journal.append("done", rid=rid, status=rep["status"],
+                           detail=rep["detail"], retries=rep["retries"],
+                           toks=[int(t) for t in jax.device_get(results[rid])])
     admission_attempts: dict = {}      # rid -> failed empty-pool admissions
     clock = 0
     preempt_count = 0
@@ -1057,6 +1214,9 @@ def _serve_requests_paged(
         set_table_row(b, [])                    # writes -> scratch page 0
         queue.insert(0, rid)
         preempt_count += 1
+        if journal is not None:
+            # no replay state: the snapshot lives only in process memory
+            journal.append("preempted", rid=rid)
 
     def alloc_page(rid, requester_slot):
         """Allocate, preempting youngest-first when the pool is dry.
@@ -1172,6 +1332,13 @@ def _serve_requests_paged(
         admit_clock[b] = clock
         admit_time[b] = time.monotonic()
         refresh_metadata(b)
+        if journal is not None:
+            # an admitted record RESETS the rid's journaled emission to
+            # its cumulative toks — uniform for fresh prefills ([first]),
+            # snapshot restores, and checkpoint-recovered residents
+            journal.append("admitted", rid=rid,
+                           src="snapshot" if snap is not None else "prefill",
+                           toks=[int(t) for t in slot_toks[b]])
         return True
 
     def provision(b):
@@ -1215,8 +1382,10 @@ def _serve_requests_paged(
         set_table_row(b, [])
 
     def retire(b):
-        results[slot_req[b]] = _finalize_result(slot_toks[b], budget, eos)
+        rid = slot_req[b]
+        results[rid] = _finalize_result(slot_toks[b], budget, eos)
         release_slot(b)
+        jlog_done(rid)
 
     def quarantine(b, reason):
         """Evict the poisoned slot only: drop its pool refs, scrub the
@@ -1253,15 +1422,18 @@ def _serve_requests_paged(
                     status="retried",
                     detail=f"{reason}; re-served solo on the qdq/bf16 "
                            "fallback path")
+                jlog_done(rid)
                 return
         results[rid] = _failed_result(budget, eos)
         reports[rid].update(status="quarantined", detail=reason)
+        jlog_done(rid)
 
     def reject(rid, detail):
         queue.remove(rid)
         suspended.pop(rid, None)
         results[rid] = _failed_result(budget, eos)
         reports[rid].update(status="rejected", detail=detail)
+        jlog_done(rid)
 
     while queue or any(r is not None for r in slot_req):
         # Admission: FIFO, page-fit driven — stop at the first request
@@ -1271,9 +1443,13 @@ def _serve_requests_paged(
             free_b = next((b for b in range(B) if slot_req[b] is None), None)
             if free_b is None:
                 break
-            if not try_admit(free_b, queue[0]):
+            head = queue[0]
+            if not try_admit(free_b, head):
                 break
             queue.pop(0)
+            if injector is not None:
+                injector.crash_point("after_admit", chunk_idx=chunk_idx,
+                                     rid=head, journal=journal)
         if not any(r is not None for r in slot_req):
             # nothing resident AND the queue head still does not fit: with
             # no guard this is fatal; with one it becomes bounded
@@ -1320,10 +1496,12 @@ def _serve_requests_paged(
             host_toks = jax.device_get(toks)
         chunk_idx += 1
         # 1) account this chunk's KV writes (and mark their pages dirty)
+        chunk_emitted = {}
         for b in range(B):
             if slot_req[b] is None:
                 continue
             new = [int(t) for t in host_toks[b]]
+            chunk_emitted[slot_req[b]] = new
             # this chunk wrote KV for the previously pending token plus
             # every emission except the newest (still pending)
             pending = slot_toks[b][-1]
@@ -1334,6 +1512,8 @@ def _serve_requests_paged(
             for j in range(n0 // P, (n1 - 1) // P + 1):
                 # over-emission past the table clamps into the last entry
                 dirty.add(slot_pages[b][min(j, len(slot_pages[b]) - 1)])
+        if journal is not None:
+            journal.append("chunk", idx=chunk_idx - 1, emitted=chunk_emitted)
         # 2) audit live pages BEFORE retiring anything, so a final-chunk
         #    fault cannot slip out with the request. The per-page 0xFF
         #    counts come fused out of the guarded scan; only the checksum
@@ -1391,11 +1571,59 @@ def _serve_requests_paged(
                     detail=f"deadline: exceeded {guard.deadline_s}s")
                 release_slot(b)
                 done = done.at[b].set(True)
+                jlog_done(rid)
                 continue
             finished = len(slot_toks[b]) >= budget or (
                 eos is not None and eos in slot_toks[b])
             if finished:
                 retire(b)
+        # 5) durability: periodic pool checkpoint, then ONE fsync for the
+        #    whole chunk's records
+        if journal is not None:
+            if (serve_cfg.checkpoint_every > 0
+                    and chunk_idx % serve_cfg.checkpoint_every == 0
+                    and any(r is not None for r in slot_req)):
+                from repro.runtime import journal as journal_mod
+                residents = {}
+                for b in range(B):
+                    rid = slot_req[b]
+                    if rid is None:
+                        continue
+                    ids = jnp.asarray(slot_pages[b], jnp.int32)
+                    residents[rid] = {
+                        "pages": jax.device_get(
+                            _pool_gather_jit(cache["kv"], ids)),
+                        "token": int(jax.device_get(token[b])),
+                        "toks": [int(t) for t in slot_toks[b]],
+                    }
+                fname, digest = journal_mod.save_pool_checkpoint(
+                    serve_cfg.journal_dir, chunk_idx, residents)
+                if injector is not None:
+                    # the .npz is on disk but its journal record is not:
+                    # crash_during_checkpoint leaves an orphan recovery
+                    # must ignore
+                    injector.crash_point("during_checkpoint",
+                                         chunk_idx=chunk_idx - 1,
+                                         journal=journal)
+                journal.append(
+                    "checkpoint", chunk=chunk_idx, file=fname, sha256=digest,
+                    residents={rid: {"token": ent["token"],
+                                     "toks": ent["toks"]}
+                               for rid, ent in residents.items()})
+            journal.commit()
+        if injector is not None:
+            injector.crash_point("mid_decode", chunk_idx=chunk_idx - 1,
+                                 journal=journal)
+    if journal is not None:
+        journal.close()
+    holders = {f"slot{b}": slot_pages[b] for b in range(B) if slot_pages[b]}
+    if injector is not None and injector.held_pages:
+        holders["__fault_injector__"] = list(injector.held_pages)
+    audit = pool.audit(holders=holders)
+    if plan is not None:
+        verified = _verify_recovery(plan, results, reports)
+        if stats is not None:
+            stats["recovery"] = dict(plan.report(), verified=verified)
     if stats is not None:
         stats.update(
             scheduler="paged", max_concurrent=max_concurrent,
@@ -1405,6 +1633,7 @@ def _serve_requests_paged(
             peak_live_pages=peak_live,
             pool_bytes=serve_cfg.kv_pages * kvcache.page_nbytes(
                 cfg.attn.n_kv_heads, cfg.attn.d_head, P, cfg.n_layers),
-            snapshot_drops=snapshot_drops, reports=reports,
+            snapshot_drops=snapshot_drops, pool_audit=audit,
+            reports=reports,
             **_report_counts(reports))
     return results

@@ -1,0 +1,251 @@
+"""Kill-and-recover end-to-end: every crash fault class, bitwise.
+
+The acceptance bar of docs/EXECUTION.md §Crash recovery: for EVERY crash
+class in ``repro.runtime.faults.CRASH_CLASSES``, a journaled serve killed
+at that point and resumed from its journal dir produces outputs BITWISE
+identical to the same serve never interrupted — and the resumed serve
+*proves* it (``stats["recovery"]["verified"]`` counts the re-served
+requests whose outputs were checked against their journaled prefixes).
+Journal/replay/checkpoint units live in tests/test_journal.py; these
+tests drive ``serve_requests`` (both schedulers) with real crashes.
+
+Same markers and geometry as tests/test_faults.py (faults marker job in
+CI; jit-compile heavy, so slow too)."""
+import dataclasses
+import glob
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core import kvcache
+from repro.core.qlinear import QuantConfig
+from repro.models import lm
+from repro.models.common import ModelCtx
+from repro.runtime.faults import (CRASH_CLASSES, FaultInjector, FaultSpec,
+                                  SimulatedCrash)
+from repro.runtime.guard import GuardConfig, JournalError, RecoveryError
+from repro.runtime.serve_loop import ServeConfig, serve_requests
+
+pytestmark = [pytest.mark.faults, pytest.mark.slow]
+
+CFG = get_arch("qwen1.5-0.5b").reduced()
+P, BUDGET, CAP = 8, 6, 32
+
+
+def _ctx(impl="packed", kv="hif4"):
+    return ModelCtx(quant=QuantConfig(fmt="hif4", impl=impl,
+                                      kv=kvcache.KVCacheConfig(kv)),
+                    remat=False, attn_q_chunk=2, attn_k_chunk=2)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return lm.init_params(CFG, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def reqs():
+    """Three requests sharing a 12-token prefix (even lengths: the
+    attention chunking needs prompt lengths divisible by 2)."""
+    prefix = jax.random.randint(jax.random.PRNGKey(5), (12,), 0, CFG.vocab)
+    return [jnp.concatenate([prefix, jax.random.randint(
+        jax.random.PRNGKey(30 + i), (4 + 2 * i,), 0, CFG.vocab)])
+        for i in range(3)]
+
+
+def _paged_sc(jdir=None, checkpoint_every=2):
+    return ServeConfig(max_new_tokens=BUDGET, decode_chunk=2,
+                       cache_capacity=CAP, kv_format="hif4",
+                       kv_pages=12, kv_page_tokens=P, guard=GuardConfig(),
+                       journal_dir=jdir, checkpoint_every=checkpoint_every)
+
+
+@pytest.fixture(scope="module")
+def paged_baseline(params, reqs):
+    """The never-interrupted run every recovery compares against."""
+    return serve_requests(CFG, params, reqs, _ctx(), _paged_sc(), slots=3)
+
+
+def _assert_bitwise(results, baseline):
+    for i in range(len(baseline)):
+        np.testing.assert_array_equal(np.asarray(results[i]),
+                                      np.asarray(baseline[i]))
+
+
+# ---------------------------------------------------------------------------
+# Journal overhead path: journaled == unjournaled, audit clean
+# ---------------------------------------------------------------------------
+
+
+def test_journaled_serve_matches_unjournaled_bitwise(params, reqs,
+                                                     paged_baseline,
+                                                     tmp_path):
+    stats: dict = {}
+    res = serve_requests(CFG, params, reqs, _ctx(),
+                         _paged_sc(str(tmp_path)), slots=3, stats=stats)
+    _assert_bitwise(res, paged_baseline)
+    assert all(r["status"] == "ok" for r in stats["reports"].values())
+    # the journal records the full lifecycle and the pool audits clean
+    assert os.path.getsize(tmp_path / "serve.journal") > 0
+    assert glob.glob(str(tmp_path / "ckpt_*.npz")), \
+        "checkpoint_every=2 over 3 chunks must write at least one"
+    assert stats["pool_audit"]["live"] == 0
+
+
+def test_resume_of_a_finished_serve_reserves_nothing(params, reqs,
+                                                     paged_baseline,
+                                                     tmp_path):
+    sc = _paged_sc(str(tmp_path))
+    serve_requests(CFG, params, reqs, _ctx(), sc, slots=3)
+    stats: dict = {}
+    res = serve_requests(CFG, params, reqs, _ctx(), sc, slots=3,
+                         stats=stats, resume=True)
+    _assert_bitwise(res, paged_baseline)
+    rec = stats["recovery"]
+    assert rec["completed"] == len(reqs)
+    assert rec["replayed"] == rec["re_prefilled"] == 0
+    assert rec["verified"] == 0            # nothing re-served to verify
+    assert all(r["status"] == "ok" for r in stats["reports"].values())
+
+
+def test_resume_without_journal_raises_typed(params, reqs, tmp_path):
+    with pytest.raises(JournalError, match="nothing to resume"):
+        serve_requests(CFG, params, reqs, _ctx(), _paged_sc(str(tmp_path)),
+                       slots=3, resume=True)
+    with pytest.raises(RecoveryError, match="journal_dir"):
+        serve_requests(CFG, params, reqs, _ctx(), _paged_sc(None),
+                       slots=3, resume=True)
+
+
+# ---------------------------------------------------------------------------
+# Kill-and-recover, every crash class
+# ---------------------------------------------------------------------------
+
+
+def _crash_then_resume(params, reqs, jdir, spec):
+    sc = _paged_sc(jdir)
+    inj = FaultInjector(spec)
+    with pytest.raises(SimulatedCrash):
+        serve_requests(CFG, params, reqs, _ctx(), sc, slots=3,
+                       injector=inj)
+    assert inj.fired, "crash point never reached — geometry regressed"
+    stats: dict = {}
+    res = serve_requests(CFG, params, reqs, _ctx(), sc, slots=3,
+                         stats=stats, resume=True)
+    assert all(r["status"] == "ok" for r in stats["reports"].values())
+    assert stats["pool_audit"]["live"] == 0
+    return res, stats
+
+
+@pytest.mark.parametrize("kind", CRASH_CLASSES)
+def test_crash_class_killed_and_recovered_bitwise(params, reqs,
+                                                  paged_baseline,
+                                                  tmp_path, kind):
+    spec = FaultSpec(kind=kind, target_request=1, after_chunk=1)
+    res, stats = _crash_then_resume(params, reqs, str(tmp_path), spec)
+    _assert_bitwise(res, paged_baseline)
+    rec = stats["recovery"]
+    # every re-served request's output was CHECKED against its journaled
+    # token prefix — recovery is verified, not trusted
+    assert rec["verified"] >= 1, rec
+    assert rec["completed"] + rec["replayed"] + rec["re_prefilled"] >= 1
+
+
+def test_crash_after_admit_reprefills_from_prompt(params, reqs,
+                                                  paged_baseline, tmp_path):
+    """Death right after the admit record: no checkpoint exists yet, so
+    the admitted requests re-enter from their prompts."""
+    res, stats = _crash_then_resume(
+        params, reqs, str(tmp_path), FaultSpec(kind="crash_after_admit",
+                                               target_request=1))
+    _assert_bitwise(res, paged_baseline)
+    rec = stats["recovery"]
+    assert rec["replayed"] == 0 and rec["re_prefilled"] >= 1
+
+
+def test_crash_mid_decode_replays_from_checkpoint(params, reqs,
+                                                  paged_baseline, tmp_path):
+    """Death after chunk 1's record: the chunk-2 checkpoint is durable,
+    so residents resume from their checkpointed pages, not the prompt."""
+    res, stats = _crash_then_resume(
+        params, reqs, str(tmp_path), FaultSpec(kind="crash_mid_decode",
+                                               after_chunk=1))
+    _assert_bitwise(res, paged_baseline)
+    assert stats["recovery"]["replayed"] >= 1, stats["recovery"]
+
+
+def test_crash_during_checkpoint_ignores_orphan_npz(params, reqs,
+                                                    paged_baseline,
+                                                    tmp_path):
+    """The .npz hits disk but its journal record never commits: the
+    orphaned file must be ignored (the record is the commit point) and
+    recovery degrades to re-prefill."""
+    sc = _paged_sc(str(tmp_path))
+    inj = FaultInjector(FaultSpec(kind="crash_during_checkpoint"))
+    with pytest.raises(SimulatedCrash):
+        serve_requests(CFG, params, reqs, _ctx(), sc, slots=3,
+                       injector=inj)
+    orphans = glob.glob(str(tmp_path / "ckpt_*.npz"))
+    assert orphans, "crash fired before the npz was staged"
+    stats: dict = {}
+    res = serve_requests(CFG, params, reqs, _ctx(), sc, slots=3,
+                         stats=stats, resume=True)
+    _assert_bitwise(res, paged_baseline)
+    rec = stats["recovery"]
+    assert rec["replayed"] == 0 and rec["re_prefilled"] >= 1
+
+
+def test_journal_truncation_drops_torn_tail_and_recovers(params, reqs,
+                                                         paged_baseline,
+                                                         tmp_path):
+    res, stats = _crash_then_resume(
+        params, reqs, str(tmp_path), FaultSpec(kind="journal_truncation",
+                                               after_chunk=1, bits=20))
+    _assert_bitwise(res, paged_baseline)
+    assert stats["recovery"]["dropped_bytes"] > 0, stats["recovery"]
+
+
+def test_crash_resume_is_deterministic(params, reqs, tmp_path):
+    """Two independent crash+resume cycles with the same spec produce the
+    same recovery report shape and identical outputs."""
+    runs = []
+    for sub in ("a", "b"):
+        d = tmp_path / sub
+        res, stats = _crash_then_resume(
+            params, reqs, str(d), FaultSpec(kind="crash_mid_decode",
+                                            after_chunk=1))
+        runs.append((res, stats["recovery"]))
+    _assert_bitwise(runs[0][0], runs[1][0])
+    for key in ("completed", "replayed", "re_prefilled", "verified"):
+        assert runs[0][1][key] == runs[1][1][key]
+
+
+# ---------------------------------------------------------------------------
+# Whole-slot scheduler (contiguous cache): same contract, no checkpoints
+# ---------------------------------------------------------------------------
+
+
+def test_slot_scheduler_crash_and_resume_bitwise(params, reqs, tmp_path):
+    ctx = _ctx(impl="qdq", kv="bf16")
+    def sc(jdir=None):
+        return ServeConfig(max_new_tokens=BUDGET, decode_chunk=2,
+                           cache_capacity=CAP, kv_format="bf16",
+                           journal_dir=jdir)
+    baseline = serve_requests(CFG, params, reqs, ctx, sc(), slots=2)
+    inj = FaultInjector(FaultSpec(kind="crash_mid_decode", after_chunk=1))
+    with pytest.raises(SimulatedCrash):
+        serve_requests(CFG, params, reqs, ctx, sc(str(tmp_path)), slots=2,
+                       injector=inj)
+    assert inj.fired
+    stats: dict = {}
+    res = serve_requests(CFG, params, reqs, ctx, sc(str(tmp_path)),
+                         slots=2, stats=stats, resume=True)
+    _assert_bitwise(res, baseline)
+    rec = stats["recovery"]
+    assert rec["verified"] >= 1
+    assert rec["replayed"] == 0            # slot scheduler: no checkpoints
+    assert all(r["status"] == "ok" for r in stats["reports"].values())

@@ -32,3 +32,17 @@ def test_lint_checks_matrix_gate_names(tmp_path):
     bad.write_text("enforced as gate:`no_such_gate`\n")
     errors = check_docs.check_file(str(bad))
     assert len(errors) == 1 and "no_such_gate" in errors[0]
+
+
+def test_lint_checks_fault_class_names(tmp_path):
+    """Documented fault/crash classes must exist in
+    repro.runtime.faults.FAULT_CLASSES — a recovery matrix naming a
+    class the injector cannot fire fails."""
+    ok = tmp_path / "ok.md"
+    ok.write_text("killed at fault:`crash_mid_decode`, torn by "
+                  "fault:`journal_truncation`\n")
+    assert check_docs.check_file(str(ok)) == []
+    bad = tmp_path / "bad.md"
+    bad.write_text("killed at fault:`power_loss`\n")
+    errors = check_docs.check_file(str(bad))
+    assert len(errors) == 1 and "power_loss" in errors[0]

@@ -1,0 +1,400 @@
+"""Unit + property tests for the write-ahead journal and recovery plan.
+
+Fast tier: no model, no scheduler — just the journal codec, the torn-tail
+framing guarantee, checkpoint save/load fingerprinting, the replay fold,
+``recover``'s validation errors, and ``PagePool.audit``'s leak detection.
+The crash-the-scheduler-and-resume end-to-end paths live in
+tests/test_crash_recovery.py (faults marker); the randomized hypothesis
+variants of the codec/replay properties live in
+tests/test_journal_properties.py, with the deterministic versions kept
+here so the invariants run even where hypothesis is absent.
+"""
+import json
+import os
+import zlib
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.kvcache import PagePool
+from repro.runtime import journal as J
+from repro.runtime.guard import JournalError, RecoveryError
+
+# ---------------------------------------------------------------------------
+# Record framing
+# ---------------------------------------------------------------------------
+
+
+def _events(n=5):
+    evs = [{"ev": "start", "v": J.JOURNAL_VERSION, "n_requests": 2,
+            "budget": 8, "eos": None, "prompts": ["a" * 64, "b" * 64]}]
+    for i in range(n):
+        evs.append({"ev": "chunk", "idx": i,
+                    "emitted": {"0": [i, i + 1], "1": [7 * i]}})
+    evs.append({"ev": "done", "rid": 0, "status": "ok", "toks": [1, 2, 3]})
+    return evs
+
+
+def test_codec_round_trip():
+    blob = b"".join(J.encode_record(e) for e in _events())
+    out, dropped = J.decode_records(blob)
+    assert dropped == 0
+    assert out == _events()
+
+
+def test_decode_stops_at_first_bad_frame_never_misparses():
+    evs = _events(3)
+    blob = b"".join(J.encode_record(e) for e in evs)
+    # flip one payload byte mid-stream: crc catches it, everything from
+    # that record on is dropped — prefix still parses exactly
+    cut = len(J.encode_record(evs[0]) + J.encode_record(evs[1]))
+    bad = bytearray(blob)
+    bad[cut + J.MAGIC.__len__() + 8 + 2] ^= 0xFF
+    out, dropped = J.decode_records(bytes(bad))
+    assert out == evs[:2]
+    assert dropped == len(blob) - cut
+
+
+def test_every_truncation_point_yields_a_clean_prefix():
+    """Chop the stream at EVERY byte offset: the reader must return some
+    record prefix plus a dropped-byte count, and never throw — this is
+    the whole crash-mid-write contract."""
+    evs = _events(4)
+    frames = [J.encode_record(e) for e in evs]
+    blob = b"".join(frames)
+    bounds = [0]
+    for f in frames:
+        bounds.append(bounds[-1] + len(f))
+    for cut in range(len(blob) + 1):
+        out, dropped = J.decode_records(blob[:cut])
+        n_complete = sum(1 for b in bounds[1:] if b <= cut)
+        assert out == evs[:n_complete]
+        assert dropped == cut - bounds[n_complete]
+
+
+def test_unknown_event_kind_is_a_framing_error():
+    payload = json.dumps({"ev": "gremlin"}).encode()
+    frame = (J.MAGIC + len(payload).to_bytes(4, "little")
+             + zlib.crc32(payload).to_bytes(4, "little") + payload)
+    out, dropped = J.decode_records(frame)
+    assert out == [] and dropped == len(frame)
+
+
+def test_prompt_sha256_is_dtype_and_container_stable():
+    a = J.prompt_sha256([3, 1, 4, 1, 5])
+    b = J.prompt_sha256(np.asarray([3, 1, 4, 1, 5], np.int64))
+    c = J.prompt_sha256(jnp.asarray([3, 1, 4, 1, 5], jnp.int32))
+    assert a == b == c
+    assert a != J.prompt_sha256([3, 1, 4, 1, 6])
+
+
+# ---------------------------------------------------------------------------
+# Writer: staging, activation, torn tails
+# ---------------------------------------------------------------------------
+
+
+def _write_journal(tmp_path, evs):
+    j = J.RequestJournal(str(tmp_path))
+    for e in evs:
+        j.append(e["ev"], **{k: v for k, v in e.items() if k != "ev"})
+    j.activate()
+    j.close()
+    return j
+
+
+def test_journal_invisible_until_activate(tmp_path):
+    j = J.RequestJournal(str(tmp_path))
+    j.append("start", v=J.JOURNAL_VERSION, n_requests=0, budget=1,
+             eos=None, prompts=[])
+    j.commit()
+    with pytest.raises(JournalError, match="nothing to resume"):
+        J.read_journal(str(tmp_path))     # still staged at .tmp
+    j.activate()
+    evs, dropped = J.read_journal(str(tmp_path))
+    assert dropped == 0 and evs[0]["ev"] == "start"
+    j.close()
+
+
+def test_read_journal_drops_torn_tail(tmp_path):
+    j = _write_journal(tmp_path, _events(3))
+    torn = 5
+    with open(j.path, "r+b") as f:
+        f.truncate(os.path.getsize(j.path) - torn)
+    evs, dropped = J.read_journal(str(tmp_path))
+    assert evs == _events(3)[:-1]         # final record torn off
+    assert dropped == len(J.encode_record(_events(3)[-1])) - torn
+
+
+def test_truncate_tail_matches_real_truncation(tmp_path):
+    a, b = tmp_path / "a", tmp_path / "b"
+    ja = _write_journal(a, _events(3))
+    jb = J.RequestJournal(str(b))
+    for e in _events(3):
+        jb.append(e["ev"], **{k: v for k, v in e.items() if k != "ev"})
+    jb.activate()
+    jb.truncate_tail(9)
+    jb.close()
+    with open(ja.path, "r+b") as f:
+        f.truncate(os.path.getsize(ja.path) - 9)
+    assert open(ja.path, "rb").read() == open(jb.path, "rb").read()
+
+
+def test_read_journal_requires_valid_start(tmp_path):
+    with pytest.raises(JournalError, match="nothing to resume"):
+        J.read_journal(str(tmp_path))
+    path = os.path.join(str(tmp_path), J.JOURNAL_NAME)
+    with open(path, "wb") as f:
+        f.write(J.encode_record({"ev": "done", "rid": 0, "status": "ok",
+                                 "toks": []}))
+    with pytest.raises(JournalError, match="start record"):
+        J.read_journal(str(tmp_path))
+
+
+# ---------------------------------------------------------------------------
+# Checkpoints
+# ---------------------------------------------------------------------------
+
+
+def _fake_snapshot(rng, npages=2, ptok=4):
+    pages = {t: {"codes": rng.integers(0, 255, (npages, ptok, 8),
+                                       dtype=np.uint8),
+                 "meta": rng.integers(0, 255, (npages, ptok, 2),
+                                      dtype=np.uint8),
+                 "tail": jnp.asarray(
+                     rng.standard_normal((npages, ptok, 4)),
+                     jnp.bfloat16)}
+             for t in ("k", "v")}
+    return {"pages": pages, "token": 17, "toks": [4, 5, 6]}
+
+
+def test_checkpoint_round_trip_bitwise(tmp_path):
+    rng = np.random.default_rng(0)
+    residents = {0: _fake_snapshot(rng), 3: _fake_snapshot(rng)}
+    fname, digest = J.save_pool_checkpoint(str(tmp_path), 7, residents)
+    assert fname == "ckpt_00000007.npz"
+    record = {"ev": "checkpoint", "chunk": 7, "file": fname,
+              "sha256": digest,
+              "residents": {str(r): {"token": s["token"], "toks": s["toks"]}
+                            for r, s in residents.items()}}
+    out = J.load_pool_checkpoint(str(tmp_path), record)
+    assert set(out) == {0, 3}
+    for rid, snap in residents.items():
+        for t in ("k", "v"):
+            for key in ("codes", "meta", "tail"):
+                np.testing.assert_array_equal(
+                    np.asarray(out[rid][t][key]).view(np.uint8),
+                    np.asarray(snap["pages"][t][key]).view(np.uint8))
+
+
+def test_checkpoint_sha_mismatch_and_missing_degrade_to_none(tmp_path):
+    rng = np.random.default_rng(1)
+    fname, digest = J.save_pool_checkpoint(str(tmp_path), 2,
+                                           {1: _fake_snapshot(rng)})
+    rec = {"file": fname, "sha256": digest,
+           "residents": {"1": {"token": 17, "toks": [4, 5, 6]}}}
+    assert J.load_pool_checkpoint(str(tmp_path), rec) is not None
+    # bit-rot one byte: fingerprint must reject the whole file
+    path = os.path.join(str(tmp_path), fname)
+    data = bytearray(open(path, "rb").read())
+    data[len(data) // 2] ^= 0x01
+    open(path, "wb").write(bytes(data))
+    assert J.load_pool_checkpoint(str(tmp_path), rec) is None
+    os.remove(path)
+    assert J.load_pool_checkpoint(str(tmp_path), rec) is None
+    # a record citing a resident the npz does not hold is unusable too
+    fname2, digest2 = J.save_pool_checkpoint(str(tmp_path), 3,
+                                             {1: _fake_snapshot(rng)})
+    rec2 = {"file": fname2, "sha256": digest2,
+            "residents": {"1": {"token": 17, "toks": []},
+                          "9": {"token": 3, "toks": []}}}
+    assert J.load_pool_checkpoint(str(tmp_path), rec2) is None
+
+
+# ---------------------------------------------------------------------------
+# Replay fold + recover() validation
+# ---------------------------------------------------------------------------
+
+
+def _chunked(rid_toks, chunk=2):
+    """Split each rid's token stream into per-chunk emissions."""
+    n = max((len(t) for t in rid_toks.values()), default=0)
+    evs = []
+    for c0 in range(0, n, chunk):
+        em = {str(r): t[c0:c0 + chunk] for r, t in rid_toks.items()
+              if t[c0:c0 + chunk]}
+        if em:
+            evs.append({"ev": "chunk", "idx": c0 // chunk, "emitted": em})
+    return evs
+
+
+def test_replay_accumulates_and_admission_resets():
+    start = {"ev": "start", "v": 1, "n_requests": 2, "budget": 8,
+             "eos": None, "prompts": ["x", "y"]}
+    evs = [start,
+           {"ev": "admitted", "rid": 0, "src": "prefill", "toks": [10]},
+           {"ev": "admitted", "rid": 1, "src": "prefill", "toks": [20]}]
+    evs += _chunked({0: [11, 12, 13], 1: [21, 22, 23]})
+    evs += [{"ev": "preempted", "rid": 1},
+            # rid 1 re-admitted from scratch: journaled emission RESETS
+            {"ev": "admitted", "rid": 1, "src": "prefill",
+             "toks": [20, 21]},
+            {"ev": "done", "rid": 0, "status": "ok",
+             "toks": [10, 11, 12, 13]}]
+    emitted, terminal, in_flight, ckpt = J.replay(evs)
+    assert emitted[0] == [10, 11, 12, 13]
+    assert emitted[1] == [20, 21]          # reset, not [20,21,22,23,20,21]
+    assert set(terminal) == {0} and in_flight == {1}
+    assert ckpt is None
+
+
+def test_replay_any_prefix_is_a_prefix_of_full_replay():
+    """Replaying the first k events must yield, for every rid, a prefix
+    of the full replay's emission — the determinism recovery leans on."""
+    start = {"ev": "start", "v": 1, "n_requests": 3, "budget": 16,
+             "eos": None, "prompts": ["a", "b", "c"]}
+    evs = [start]
+    for rid in range(3):
+        evs.append({"ev": "admitted", "rid": rid, "src": "prefill",
+                    "toks": [100 + rid]})
+    evs += _chunked({r: [100 + r + 10 * i for i in range(1, 7)]
+                     for r in range(3)}, chunk=2)
+    full, _, _, _ = J.replay(evs)
+    for k in range(1, len(evs) + 1):
+        part, _, _, _ = J.replay(evs[:k])
+        for rid, toks in part.items():
+            assert toks == full[rid][: len(toks)], (k, rid)
+
+
+def test_expected_prefix_clamps_budget_and_eos():
+    plan = J.RecoveryPlan(meta={"budget": 4, "eos": 9})
+    plan.emitted[0] = [1, 2, 9, 3, 4, 5]
+    assert plan.expected_prefix(0) == [1, 2, 9]      # first eos wins
+    plan.emitted[1] = [1, 2, 3, 4, 5, 6]
+    assert plan.expected_prefix(1) == [1, 2, 3, 4]   # budget clamps
+    assert plan.expected_prefix(7) == []
+
+
+def _journal_for(tmp_path, prompts, *, budget=8, eos=None):
+    j = J.RequestJournal(str(tmp_path))
+    j.append("start", v=J.JOURNAL_VERSION, kind="paged",
+             n_requests=len(prompts), budget=budget, eos=eos, chunk=2,
+             prompts=[J.prompt_sha256(p) for p in prompts],
+             kv_pages=4, page_tokens=4)
+    j.activate()
+    return j
+
+
+def test_recover_validates_request_list_and_config(tmp_path):
+    prompts = [[1, 2, 3], [4, 5, 6]]
+    j = _journal_for(tmp_path, prompts)
+    j.append("admitted", rid=0, src="prefill", toks=[7])
+    j.append("done", rid=1, status="ok", toks=[8, 9])
+    j.commit()
+    j.close()
+    with pytest.raises(RecoveryError, match="covers 2 requests"):
+        J.recover(str(tmp_path), prompts[:1], budget=8, eos=None)
+    with pytest.raises(RecoveryError, match=r"id\(s\) \[1\]"):
+        J.recover(str(tmp_path), [prompts[0], [4, 5, 7]], budget=8,
+                  eos=None)
+    with pytest.raises(RecoveryError, match="budget=3"):
+        J.recover(str(tmp_path), prompts, budget=3, eos=None)
+    plan = J.recover(str(tmp_path), prompts, budget=8, eos=None)
+    assert plan.completed[1]["toks"] == [8, 9]
+    assert plan.re_prefilled == 1 and plan.replayed == 0
+    assert plan.report()["dropped_bytes"] == 0
+
+
+def test_recover_uses_checkpoint_and_degrades_without_it(tmp_path):
+    rng = np.random.default_rng(2)
+    prompts = [[1, 2, 3, 4]]
+    j = _journal_for(tmp_path, prompts)
+    j.append("admitted", rid=0, src="prefill", toks=[7])
+    snap = _fake_snapshot(rng)
+    fname, digest = J.save_pool_checkpoint(str(tmp_path), 1, {0: snap})
+    j.append("checkpoint", chunk=1, file=fname, sha256=digest,
+             residents={"0": {"token": snap["token"],
+                              "toks": [7, 8, 9]}})
+    j.commit()
+    j.close()
+    plan = J.recover(str(tmp_path), prompts, budget=8, eos=None)
+    assert plan.replayed == 1 and plan.re_prefilled == 0
+    assert plan.suspended[0]["toks"] == [7, 8, 9]
+    assert plan.suspended[0]["written"] is None
+    assert isinstance(plan.suspended[0]["crc32"], int)
+    # now lose the npz: same journal must degrade to re-prefill
+    os.remove(os.path.join(str(tmp_path), fname))
+    plan2 = J.recover(str(tmp_path), prompts, budget=8, eos=None)
+    assert plan2.replayed == 0 and plan2.re_prefilled == 1
+    assert 0 not in plan2.suspended
+
+
+def test_journal_residency_counts_bytes(tmp_path):
+    assert J.journal_residency(str(tmp_path / "missing")) == {
+        "journal_bytes": 0, "checkpoints": 0, "checkpoint_bytes": 0}
+    j = _journal_for(tmp_path, [[1, 2]])
+    j.close()
+    rng = np.random.default_rng(3)
+    J.save_pool_checkpoint(str(tmp_path), 1, {0: _fake_snapshot(rng)})
+    res = J.journal_residency(str(tmp_path))
+    assert res["journal_bytes"] == os.path.getsize(j.path)
+    assert res["checkpoints"] == 1 and res["checkpoint_bytes"] > 0
+
+
+# ---------------------------------------------------------------------------
+# PagePool.audit
+# ---------------------------------------------------------------------------
+
+
+def test_audit_passes_on_honest_lifecycles():
+    pool = PagePool(n_pages=6, page_tokens=4)
+    a, b = pool.alloc("ra"), pool.alloc("rb")
+    pool.register_full(a, (1, 2, 3, 4))
+    pool.retain(a)
+    counters = pool.audit(holders={"ra": [a], "rb": [b], "shared": [a]})
+    assert counters["live"] == 2 and counters["free"] == 3
+    pool.release(a)
+    pool.release(a)                        # hashed -> parks in LRU cache
+    pool.release(b)
+    counters = pool.audit(holders={})
+    assert counters == {"free": 4, "live": 0, "cached": 1, "hashed": 1,
+                        "partials": 0}
+
+
+def test_audit_catches_manufactured_leaks():
+    def fresh():
+        pool = PagePool(n_pages=5, page_tokens=4)
+        pool.alloc("r")
+        return pool
+
+    pool = fresh()
+    pool.free.remove(pool.free[-1])        # page in no structure
+    with pytest.raises(AssertionError, match="leaked pages"):
+        pool.audit()
+
+    pool = fresh()
+    pool.free.append(next(iter(pool.ref)))  # free AND live
+    with pytest.raises(AssertionError, match="tracked twice"):
+        pool.audit()
+
+    pool = fresh()
+    pid = next(iter(pool.ref))
+    pool.ref[pid] = 0                       # dead refcount
+    with pytest.raises(AssertionError, match="non-positive refcount"):
+        pool.audit()
+
+    pool = fresh()
+    pool.partials[4] = {"key": (), "toks": []}   # partial on a free page
+    with pytest.raises(AssertionError, match="partial registry"):
+        pool.audit()
+
+    pool = fresh()
+    pid = next(iter(pool.ref))
+    pool.key_of[pid] = (1,)                 # one-sided hash index
+    with pytest.raises(AssertionError, match="disagree on size"):
+        pool.audit()
+
+    pool = fresh()
+    pid = next(iter(pool.ref))
+    with pytest.raises(AssertionError, match="holder counts"):
+        pool.audit(holders={"r": [pid], "ghost": [pid]})

@@ -1,0 +1,99 @@
+"""Hypothesis property tests for the write-ahead journal.
+
+Randomized event streams, truncation points, and single-byte corruptions
+pin the three properties crash recovery rests on: the record codec
+round-trips byte-stably, a damaged stream decodes to an exact byte-prefix
+of itself (torn tails are dropped, never misparsed into bogus events),
+and replaying any prefix of a journal yields per-request emissions that
+are prefixes of the full replay — the determinism that lets a resumed
+serve verify itself bitwise. Deterministic ci profile, same importorskip
+guards as the other property suites; the deterministic unit variants
+live in tests/test_journal.py.
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
+
+from repro.runtime import journal as J
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=50, derandomize=True)
+hypothesis.settings.load_profile("ci")
+
+_token_lists = st.lists(st.integers(min_value=0, max_value=2 ** 31 - 1),
+                        max_size=6)
+_event_dicts = st.one_of(
+    st.builds(lambda r, t: {"ev": "admitted", "rid": r, "src": "prefill",
+                            "toks": t},
+              st.integers(0, 3), _token_lists),
+    st.builds(lambda i, em: {"ev": "chunk", "idx": i,
+                             "emitted": {str(r): t for r, t in em.items()
+                                         if t}},
+              st.integers(0, 99),
+              st.dictionaries(st.integers(0, 3), _token_lists, max_size=3)),
+    st.builds(lambda r, t: {"ev": "done", "rid": r, "status": "ok",
+                            "toks": t},
+              st.integers(0, 3), _token_lists),
+    st.builds(lambda r: {"ev": "preempted", "rid": r}, st.integers(0, 3)),
+)
+
+
+def _with_start(evs):
+    return [{"ev": "start", "v": 1, "n_requests": 0, "budget": 1,
+             "eos": None, "prompts": []}] + evs
+
+
+def _chunked(rid_toks, chunk):
+    n = max((len(t) for t in rid_toks.values()), default=0)
+    evs = []
+    for c0 in range(0, n, chunk):
+        em = {str(r): t[c0:c0 + chunk] for r, t in rid_toks.items()
+              if t[c0:c0 + chunk]}
+        if em:
+            evs.append({"ev": "chunk", "idx": c0 // chunk, "emitted": em})
+    return evs
+
+
+@hypothesis.given(st.lists(_event_dicts, max_size=12))
+def test_property_codec_round_trip(evs):
+    evs = _with_start(evs)
+    blob = b"".join(J.encode_record(e) for e in evs)
+    out, dropped = J.decode_records(blob)
+    assert dropped == 0 and out == evs
+
+
+@hypothesis.given(st.lists(_event_dicts, max_size=12),
+                  st.integers(min_value=0, max_value=400),
+                  st.data())
+def test_property_torn_tail_never_misparses(evs, cut_back, data):
+    blob = bytearray(b"".join(J.encode_record(e)
+                              for e in _with_start(evs)))
+    cut = max(0, len(blob) - cut_back)
+    blob = blob[:cut]
+    if blob:   # optionally also corrupt one surviving byte
+        i = data.draw(st.integers(0, len(blob) - 1))
+        blob[i] ^= data.draw(st.integers(0, 255))
+    out, dropped = J.decode_records(bytes(blob))
+    # whatever parsed is a byte-identical re-encoding of a stream prefix:
+    # the reader can drop data after damage, never invent or reorder it
+    reblob = b"".join(J.encode_record(e) for e in out)
+    assert bytes(blob[: len(reblob)]) == reblob
+    assert len(reblob) + dropped == len(blob)
+
+
+@hypothesis.given(st.dictionaries(st.integers(0, 3),
+                                  st.lists(st.integers(0, 9), min_size=1,
+                                           max_size=10), max_size=4),
+                  st.integers(min_value=1, max_value=4))
+def test_property_any_prefix_replay_is_deterministic(streams, chunk):
+    start = {"ev": "start", "v": 1, "n_requests": len(streams),
+             "budget": 32, "eos": None, "prompts": []}
+    evs = [start] + [{"ev": "admitted", "rid": r, "src": "prefill",
+                      "toks": t[:1]} for r, t in streams.items()]
+    evs += _chunked({r: t[1:] for r, t in streams.items()}, chunk=chunk)
+    full, _, _, _ = J.replay(evs)
+    for k in range(1, len(evs) + 1):
+        part, _, _, _ = J.replay(evs[:k])
+        for rid, toks in part.items():
+            assert toks == full[rid][: len(toks)]

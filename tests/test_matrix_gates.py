@@ -59,6 +59,12 @@ def _synthetic_record():
     for g in matrix.RATIO_GATES:
         by_name[g["baseline"]]["decode_step_ms"] = 1.0
         by_name[g["subject"]]["decode_step_ms"] = 0.95
+    # the crash+resume cell carries the recovery report the
+    # recovery_replay gate inspects
+    by_name[matrix.RECOVERY_CELL]["recovery"] = {
+        "crashed": True, "bitwise": True, "verified": 2, "replayed": 2,
+        "re_prefilled": 0, "completed": 0, "dropped_bytes": 0,
+        "recovery_ms": 1.5, "resume_ms": 40.0}
     return {
         "version": matrix.VERSION,
         "backend": "cpu",
@@ -174,6 +180,30 @@ def test_doctored_ratio_null_with_both_cells_fails(record):
 def test_doctored_missing_gate_fails(record):
     record["ratio_gates"] = record["ratio_gates"][1:]
     with pytest.raises(AssertionError, match="gate missing"):
+        matrix.check(record)
+
+
+def test_doctored_recovery_not_bitwise_fails(record):
+    cell = next(c for c in record["cells"]
+                if c["name"] == matrix.RECOVERY_CELL)
+    cell["recovery"]["bitwise"] = False
+    with pytest.raises(AssertionError, match="recovery_replay"):
+        matrix.check(record)
+
+
+def test_doctored_missing_recovery_report_fails(record):
+    cell = next(c for c in record["cells"]
+                if c["name"] == matrix.RECOVERY_CELL)
+    del cell["recovery"]
+    with pytest.raises(AssertionError, match="recovery_replay"):
+        matrix.check(record)
+
+
+def test_doctored_recovery_missing_timing_fails(record):
+    cell = next(c for c in record["cells"]
+                if c["name"] == matrix.RECOVERY_CELL)
+    del cell["recovery"]["recovery_ms"]
+    with pytest.raises(AssertionError, match="recovery_ms"):
         matrix.check(record)
 
 

@@ -177,6 +177,7 @@ def test_page_pool_alloc_release_scratch_reserved():
     pool.release(got[0])                         # unhashed -> frees
     assert pool.available() == 1
     assert pool.alloc(owner="b") == got[0]
+    pool.audit()
 
 
 def test_page_pool_refcount_and_cow_ownership():
@@ -186,6 +187,7 @@ def test_page_pool_refcount_and_cow_ownership():
     assert pool.ref[pid] == 2 and pool.owner[pid] == "a"
     pool.release(pid)                            # owner drops out
     assert pool.ref[pid] == 1                    # sharer keeps it live
+    pool.audit(holders={"sharer": [pid]})
 
 
 def test_page_pool_lru_cache_revive_and_evict():
@@ -206,6 +208,7 @@ def test_page_pool_lru_cache_revive_and_evict():
     got = pool.alloc(owner="x")
     assert got == a and pool.evictions == 1
     assert pool.lookup_full((1, 2)) is None
+    pool.audit()
 
 
 def test_page_pool_partial_registry_prefix_match():
@@ -219,6 +222,7 @@ def test_page_pool_partial_registry_prefix_match():
     # promoting the page to a hashed full drops it from the registry
     pool.register_full(pid, (7, 8, 1, 2, 3))
     assert pool.lookup_partial((7, 8), [1, 2]) is None
+    pool.audit(holders={"a": [pid]})
 
 
 def test_page_pool_register_full_first_writer_wins():
@@ -228,6 +232,7 @@ def test_page_pool_register_full_first_writer_wins():
     pool.register_full(b, (1,))                  # duplicate: stays unshared
     assert pool.lookup_full((1,)) == a
     assert b not in pool.key_of
+    pool.audit(holders={"x": [a], "y": [b]})
 
 
 # ---------------------------------------------------------------------------
@@ -261,6 +266,7 @@ def test_paged_scheduler_matches_solo_shared_prefix():
     res = serve_requests(CFG, params, reqs, ctx, sc, slots=3, stats=stats)
     assert stats["scheduler"] == "paged"
     assert stats["shared_page_hits"] >= 1        # the shared prefix page
+    assert stats["pool_audit"]["live"] == 0      # serve-end invariant audit
     for i, r in enumerate(reqs):
         np.testing.assert_array_equal(
             np.asarray(res[i]), np.asarray(_solo(params, r, ctx, P, cap,
@@ -314,6 +320,7 @@ def test_paged_scheduler_cow_divergence():
     res = serve_requests(CFG, params, reqs, ctx, sc, slots=2, stats=stats)
     # 2 full prefix pages + the live partial tail page
     assert stats["shared_page_hits"] >= 3
+    assert stats["pool_audit"]["live"] == 0
     for i, r in enumerate(reqs):
         np.testing.assert_array_equal(
             np.asarray(res[i]), np.asarray(_solo(params, r, ctx, P, cap,
@@ -336,6 +343,7 @@ def test_paged_scheduler_preemption_bitwise():
     stats: dict = {}
     res = serve_requests(CFG, params, reqs, ctx, sc, slots=2, stats=stats)
     assert stats["preemptions"] >= 1
+    assert stats["pool_audit"]["live"] == 0
     for i, r in enumerate(reqs):
         np.testing.assert_array_equal(
             np.asarray(res[i]), np.asarray(_solo(params, r, ctx, P, cap,

@@ -18,6 +18,7 @@ from repro.core.policy import (
     known_policy_spec,
 )
 from repro.core.qlinear import PackedW, QuantConfig, quantize_params_offline
+from repro.runtime.guard import ArtifactLayoutError
 from repro.models import lm
 from repro.models.common import ModelCtx
 from repro.runtime.serve_loop import (
@@ -301,7 +302,7 @@ def test_serving_artifact_roundtrip(tmp_path):
     policy = get_policy("sensitive-fallback", impl="packed")
     # packed trees may already be in the (irreversible) kernel layout —
     # the artifact writer must refuse them instead of corrupting the disk
-    with pytest.raises(AssertionError):
+    with pytest.raises(ArtifactLayoutError, match="already-packed"):
         save_serving_artifact(str(tmp_path),
                               prepare_params_for_serving(params, CFG, policy),
                               CFG, policy)

@@ -23,7 +23,12 @@ whose prose makes cross-module claims about layouts and test anchors) for
   * serve-status references (the ``status:`name``` spelling): the name
     must be declared in ``repro.runtime.guard.STATUS_NAMES`` — the
     failure-semantics docs promise per-request terminal statuses, and a
-    doc naming a status the scheduler never emits fails CI.
+    doc naming a status the scheduler never emits fails CI;
+  * fault-class references (the ``fault:`name``` spelling): the name
+    must be declared in ``repro.runtime.faults.FAULT_CLASSES`` — the
+    failure-semantics and crash-recovery docs enumerate the injectable
+    fault/crash classes, and a doc naming one the injector cannot fire
+    fails CI.
 
 Runs as a section of ``benchmarks/run.py`` and as the tier-1 test
 ``tests/test_docs.py``, so stale docs break CI instead of readers.
@@ -65,6 +70,10 @@ GATE_RE = re.compile(r"gate:`([A-Za-z0-9_]+)`")
 # per-request serve statuses: docs spell them status:`name` so the
 # failure-semantics vocabulary stays pinned to the scheduler's enum
 STATUS_RE = re.compile(r"status:`([A-Za-z0-9_]+)`")
+
+# injectable fault/crash classes: docs spell them fault:`name` so the
+# recovery-matrix vocabulary stays pinned to the injector's enum
+FAULT_RE = re.compile(r"fault:`([A-Za-z0-9_]+)`")
 
 
 def _policy_candidates(text: str) -> set:
@@ -182,6 +191,15 @@ def check_file(path: str, docstring_only: bool = False) -> list[str]:
                 errors.append(
                     f"{rel}: unknown serve status status:`{name}` (not in "
                     f"repro.runtime.guard.STATUS_NAMES)")
+    fault_refs = sorted(set(FAULT_RE.findall(text)))
+    if fault_refs:
+        from repro.runtime.faults import FAULT_CLASSES
+
+        for name in fault_refs:
+            if name not in FAULT_CLASSES:
+                errors.append(
+                    f"{rel}: unknown fault class fault:`{name}` (not in "
+                    f"repro.runtime.faults.FAULT_CLASSES)")
     return errors
 
 
