@@ -20,7 +20,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_arch
-from repro.core.higptq import higptq_quantize
+from repro.core.higptq import quantize_stacked
+from repro.core.metrics import agreement
 from repro.core.qlinear import QuantConfig
 from repro.data import SyntheticLMDataset
 from repro.models import lm
@@ -49,7 +50,7 @@ def _eval(cfg, params, fmt: str, data: SyntheticLMDataset, n_batches=4,
         accs.append(float(a))
         preds_out.append(pred)
         if ref_preds is not None:
-            agrees.append(float(jnp.mean(pred == ref_preds[i])))
+            agrees.append(agreement(pred, ref_preds[i]))
     return {
         "loss": float(np.mean(losses)),
         "acc": float(np.mean(accs)),
@@ -103,25 +104,16 @@ def _apply_higptq(cfg, params, data):
     h1s, h2s = _layer_calibration(cfg, params, data)
     n_samples = min(512, h1s.shape[1])
 
-    def q_weight(w_l, x_l):  # (K, ...) one layer, calib (S, K)
-        shape = w_l.shape
-        w2 = w_l.reshape(shape[0], -1).astype(jnp.float32)
-        out = higptq_quantize(w2, jnp.asarray(x_l[:n_samples]))
-        return out.reshape(shape).astype(w_l.dtype)
-
     blocks = jax.tree_util.tree_map(lambda v: v, params["blocks"])
     attn = dict(blocks["attn"])
     mlp = dict(blocks["mlp"])
-    L = h1s.shape[0]
     for key in ("wq", "wk", "wv"):
-        attn[key] = jnp.stack(
-            [q_weight(blocks["attn"][key][i], h1s[i]) for i in range(L)]
-        )
+        attn[key] = quantize_stacked(blocks["attn"][key], h1s,
+                                     n_samples=n_samples)
     for key in ("wg", "wu", "wi"):
         if key in mlp:
-            mlp[key] = jnp.stack(
-                [q_weight(blocks["mlp"][key][i], h2s[i]) for i in range(L)]
-            )
+            mlp[key] = quantize_stacked(blocks["mlp"][key], h2s,
+                                        n_samples=n_samples)
     # direct-cast the rest so the whole model is HiF4-quantized
     from repro.core.qlinear import quantize_params_offline
     rest = quantize_params_offline(

@@ -36,6 +36,11 @@ hif4->bf16 fallback, or a ratio regression):
   recovery_replay          the crash+resume cell recovered every request
                            bitwise-identical to its uninterrupted run and
                            recorded the recovery timings
+  searched_policy_frontier the calibration-searched policy (repro
+                           calibrate at the sensitive-fallback preset's
+                           byte budget) serves the searched cell at
+                           <= the preset's bytes AND <= its error on the
+                           same calibration set (record["calibration"])
 
 The two ratio gates moved here from ``benchmarks/serve_throughput.py``
 (which still RECORDS its ratios in BENCH_serve.json, but no longer
@@ -63,11 +68,46 @@ GATE_NAMES = frozenset({
     "cell_coverage", "dispatch_ok", "no_silent_fallback",
     "trajectory_regression", "packed_over_qdq_decode",
     "hif4_over_bf16_kv_decode", "guard_overhead", "journal_overhead",
-    "recovery_replay",
+    "recovery_replay", "searched_policy_frontier",
 })
 
 # the crash+resume cell recovery_replay inspects
 RECOVERY_CELL = "qwen-packed-hif4-recovery"
+
+# the calibration-searched policy cell searched_policy_frontier inspects:
+# `repro calibrate` is run at the CALIBRATION_BASELINE preset's measured
+# byte budget, the emitted policy lands at SEARCHED_POLICY, and the cell
+# serves it through the normal --policy <file> path
+CALIBRATION_CELL = "qwen-packed-hif4-searched"
+CALIBRATION_BASELINE = "sensitive-fallback"
+SEARCHED_POLICY = os.path.join(os.path.dirname(__file__),
+                               "searched_policy.json")
+
+
+def build_calibration(log=print) -> dict:
+    """Run the calibrator for the searched cell: emit SEARCHED_POLICY at
+    the baseline preset's byte budget and return the gate summary that
+    lands in record["calibration"]."""
+    from repro.calibrate import calibrate
+
+    s = calibrate("qwen1.5-0.5b", reduced=True,
+                  target_bpv=CALIBRATION_BASELINE, kv_format="hif4",
+                  out=SEARCHED_POLICY, log=log)
+    fb = s["baselines"][CALIBRATION_BASELINE]
+    return {
+        "cell": CALIBRATION_CELL,
+        "policy": os.path.basename(SEARCHED_POLICY),
+        "arch": s["arch"],
+        "target": CALIBRATION_BASELINE,
+        "budget_met": s["feasible"],
+        "n_sites": s["n_sites"],
+        "searched": {"total_bytes": s["total_bytes"],
+                     "total_error": round(s["total_error"], 3),
+                     "bpv": s["achieved_bpv"]},
+        "baseline": {"total_bytes": fb["total_bytes"],
+                     "total_error": round(fb["total_error"], 3),
+                     "bpv": fb["achieved_bpv"]},
+    }
 
 # value = baseline decode_step_ms / subject decode_step_ms; the subject
 # must hold >= min_ratio of the baseline's decode rate. Both sides of
@@ -173,6 +213,17 @@ def _cells() -> tuple:
         impl="packed", kv_format="hif4", paged=True, journaled=True,
         recovery=True, decode_chunk=2, rel_tol=6.0,
         expect=_expect("dense", "packed", "hif4", paged=True)))
+    # the calibration-searched policy on the hot dense cell: the emitted
+    # file is regenerated by build_calibration() before this cell runs
+    # (searched_policy_frontier gate). No matmul expectation: which sites
+    # the search packs is DATA — plan.base (the attention-site config)
+    # legitimately lands on bf16 when the probe measures wq/wk/wv as the
+    # sensitive sites, while the mlp matmuls still serve PackedW fused.
+    cells.append(Scenario(
+        name=CALIBRATION_CELL, arch="qwen1.5-0.5b", impl="packed",
+        kv_format="hif4", policy=SEARCHED_POLICY,
+        expect=("kv:hif4", "kv:no-fallback",
+                "attn:fused_decode_attention")))
     # the guarded twin of the hot dense cell (guard_overhead gate subject)
     cells.append(Scenario(
         name="qwen-packed-hif4-guarded", arch="qwen1.5-0.5b", impl="packed",
@@ -303,6 +354,36 @@ def check(record: dict, *, min_cells: int = 30) -> None:
             f"recovery_replay gate: recovery report missing `{field}`: "
             f"{rec}")
 
+    # gate: searched_policy_frontier — the calibration-searched policy
+    # must Pareto-match the hand-written fallback preset: <= its bytes at
+    # <= its error on the same calibration set, and the cell must have
+    # actually served the searched file through the --policy path
+    cal = record.get("calibration")
+    assert cal, ("searched_policy_frontier gate: record has no "
+                 "`calibration` section")
+    cc = by_name.get(CALIBRATION_CELL)
+    assert cc is not None, (
+        f"searched_policy_frontier gate: cell {CALIBRATION_CELL} missing "
+        f"from matrix")
+    assert str(cc.get("policy", "")).endswith(".json"), (
+        f"searched_policy_frontier gate: cell {CALIBRATION_CELL} did not "
+        f"serve a policy FILE: {cc.get('policy')!r}")
+    assert cal.get("budget_met") is True, (
+        f"searched_policy_frontier gate: search missed the "
+        f"{cal.get('target')!r} byte budget: {cal}")
+    sr, fb = cal.get("searched"), cal.get("baseline")
+    assert sr and fb, (
+        f"searched_policy_frontier gate: calibration section incomplete: "
+        f"{cal}")
+    assert sr["total_bytes"] <= fb["total_bytes"], (
+        f"searched_policy_frontier gate: searched policy resident bytes "
+        f"{sr['total_bytes']} > {cal['target']} baseline "
+        f"{fb['total_bytes']}")
+    assert sr["total_error"] <= fb["total_error"], (
+        f"searched_policy_frontier gate: searched policy calibration "
+        f"error {sr['total_error']} > {cal['target']} baseline "
+        f"{fb['total_error']} at <= its bytes")
+
 
 def compare(stored: dict, fresh_cells: list) -> list:
     """gate: trajectory_regression — fresh measurements vs the stored
@@ -354,6 +435,16 @@ def main(argv=None):
     print(f"[matrix] backend={jax.default_backend()} "
           f"stream bandwidth {mem_bw / 2**30:.1f} GiB/s, "
           f"{len(cells)} cells")
+    calibration = None
+    if any(c.name == CALIBRATION_CELL for c in cells):
+        # the searched cell serves a file the calibrator emits: (re)build
+        # it now so the cell always serves THIS run's search
+        calibration = build_calibration()
+        print(f"[matrix] calibration: searched "
+              f"{calibration['searched']['total_bytes']} B / err "
+              f"{calibration['searched']['total_error']} vs "
+              f"{calibration['target']} {calibration['baseline']['total_bytes']} "
+              f"B / err {calibration['baseline']['total_error']}")
     gate_pairs = tuple((g["baseline"], g["subject"]) for g in RATIO_GATES)
     results = run_scenarios(cells, repeats=args.repeats,
                             gate_pairs=gate_pairs)
@@ -386,6 +477,20 @@ def main(argv=None):
         "ratio_gates": compute_ratio_gates({c["name"]: c for c in results}),
         "cells": results,
     }
+    if calibration is not None:
+        record["calibration"] = calibration
+        assert calibration["budget_met"], (
+            "searched_policy_frontier gate: search missed the "
+            f"{calibration['target']!r} byte budget")
+        assert (calibration["searched"]["total_bytes"]
+                <= calibration["baseline"]["total_bytes"]), calibration
+        assert (calibration["searched"]["total_error"]
+                <= calibration["baseline"]["total_error"]), calibration
+        print(f"[gate] searched_policy_frontier: "
+              f"{calibration['searched']['total_bytes']} B <= "
+              f"{calibration['baseline']['total_bytes']} B, err "
+              f"{calibration['searched']['total_error']} <= "
+              f"{calibration['baseline']['total_error']}")
     for g in record["ratio_gates"]:
         if g["value"] is not None:
             print(f"[gate] {g['name']}: {g['value']}x (min {g['min_ratio']}x)")

@@ -10,10 +10,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.formats import get_format
-from repro.core.metrics import mse
+from repro.core.metrics import QDQ_FORMATS, qdq_error
 
-FORMATS = ("hif4", "nvfp4", "nvfp4_pts", "mxfp4")
+FORMATS = QDQ_FORMATS
 
 
 N_PAPER = 18          # paper sweep: x in [0, 17]
@@ -28,7 +27,7 @@ def run(n: int = 1024, seed: int = 0) -> dict:
         m = jax.random.normal(jax.random.fold_in(key, x), (n, n), jnp.float32)
         m = m * sigma
         for f in FORMATS:
-            table[f].append(float(mse(m, get_format(f).qdq(m))))
+            table[f].append(qdq_error(m, f, metric="mse"))
     # plateau = paper-range points where NVFP4 is within 15% of its median
     # ("excluding NVFP4's fluctuation", §III.A)
     nv = [table["nvfp4"][i] / table["hif4"][i] for i in range(N_PAPER)]

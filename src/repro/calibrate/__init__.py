@@ -1,0 +1,45 @@
+"""Calibration subsystem: sensitivity-driven automatic QuantPolicy search.
+
+Turns a small calibration activation set into a searched
+:class:`repro.core.policy.QuantPolicy` on the accuracy-vs-bytes frontier,
+in three layers (see docs/EXECUTION.md §Calibration):
+
+probe   (:mod:`repro.calibrate.probe`)  — one bf16 forward over the
+        calibration batches with the per-site activation tap installed
+        (``repro.core.tap``), then per-site scores: quantization error
+        per format (hif4 / nvfp4 / mxfp4 / bf16-fallback, HiF4 rounded
+        offline with HiGPTQ), byte residency per format, and the site's
+        roofline latency contribution.
+search  (:mod:`repro.calibrate.search`) — greedy marginal-utility sweep
+        over error-per-byte-saved: given a target bytes-per-value budget,
+        assign each site the cheapest format whose marginal error fits;
+        the full Pareto curve is part of the result.
+emit    (:mod:`repro.calibrate.emit`)   — a valid QuantPolicy JSON
+        (provenance-stamped, loads via ``repro.core.policy.get_policy``
+        and rides inside serving artifacts with zero extra wiring) plus a
+        ``calibration_report.json`` recording every per-site score.
+
+CLI: ``python -m repro calibrate --arch <a> --target-bpv 0.7 --out
+policy.json`` (``repro.launch.calibrate``).
+"""
+from repro.calibrate.emit import emit_policy, emit_report
+from repro.calibrate.probe import CalibrationResult, probe_sites
+from repro.calibrate.search import (
+    FormatOption,
+    FrontierResult,
+    SiteScore,
+    frontier_search,
+)
+from repro.calibrate.run import calibrate
+
+__all__ = [
+    "CalibrationResult",
+    "FormatOption",
+    "FrontierResult",
+    "SiteScore",
+    "calibrate",
+    "emit_policy",
+    "emit_report",
+    "frontier_search",
+    "probe_sites",
+]

@@ -65,6 +65,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import hif4, kvcache
+from repro.core import tap as site_tap
 from repro.core.qlinear import (
     NO_QUANT,
     PackedW,
@@ -140,6 +141,10 @@ def matmul(
     accumulate f32 and cast once at the end.
     """
     cfg = ectx.quant
+    # calibration probe: record this contraction's activation operand under
+    # the site path ModelCtx.site_quant marked (no-op without an installed
+    # tap — see repro.core.tap)
+    site_tap.consume_pending(x, contract_x)
     if isinstance(w, PackedW):
         if _fused_packed_ok(cfg, x, contract_x, w):
             return _fused_packed_matmul(x, w, ectx)
@@ -166,6 +171,7 @@ def qdq_einsum(eq: str, a: jnp.ndarray, w: jnp.ndarray, ectx: EngineCtx,
     ``impl`` — documented in the docs/EXECUTION.md matrix.
     """
     cfg = ectx.quant
+    site_tap.consume_pending(a, a_axis)
     if cfg.enabled:
         a = quantize_activation(a, cfg, axis=a_axis)
         w = quantize_weight(w, cfg, axis=w_axis)

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 
 from repro.core import hif4
 from repro.core import rounding as R
+from repro.core.metrics import rel_output_error
 
 GROUP = hif4.GROUP_SIZE
 
@@ -91,10 +92,33 @@ def higptq_quantize(
     return out.astype(w.dtype)
 
 
+def quantize_stacked(
+    w_stacked: jnp.ndarray,   # (L, K, ...) stacked block weight
+    x_layers,                 # per-layer calib: (L, n, K) or [x_l (n, K)]
+    *,
+    n_samples: int = 512,
+    damp: float = 0.01,
+) -> jnp.ndarray:
+    """HiGPTQ over a stacked block weight, one layer at a time with that
+    layer's own calibration rows. Shared by the Tables III-V proxy
+    (``benchmarks/llm_accuracy.py``) and the calibration probe
+    (``repro.calibrate.probe``) so the per-layer flatten/round/restack
+    dance exists once. Trailing output dims are flattened to N and
+    restored."""
+    L = w_stacked.shape[0]
+    out = []
+    for i in range(L):
+        w_l = w_stacked[i]
+        shape = w_l.shape
+        w2 = jnp.asarray(w_l, jnp.float32).reshape(shape[0], -1)
+        x_l = jnp.asarray(x_layers[i][:n_samples])
+        out.append(higptq_quantize(w2, x_l, damp=damp)
+                   .reshape(shape).astype(w_stacked.dtype))
+    return jnp.stack(out)
+
+
 def layer_output_error(w_ref: jnp.ndarray, w_q: jnp.ndarray,
                        x: jnp.ndarray) -> float:
-    """||X (W - W_q)||_F / ||X W||_F — the metric GPTQ minimizes."""
-    x = x.astype(jnp.float32)
-    num = jnp.linalg.norm(x @ (w_ref.astype(jnp.float32) - w_q.astype(jnp.float32)))
-    den = jnp.linalg.norm(x @ w_ref.astype(jnp.float32))
-    return float(num / jnp.maximum(den, 1e-30))
+    """||X (W - W_q)||_F / ||X W||_F — the metric GPTQ minimizes (shared
+    spelling: ``repro.core.metrics.rel_output_error``)."""
+    return rel_output_error(w_ref, w_q, x)

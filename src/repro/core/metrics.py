@@ -1,7 +1,20 @@
-"""Error metrics used across the experiment suite."""
+"""Error metrics used across the experiment suite.
+
+One shared surface for the per-format quantization-error scores: the
+Fig. 3 Gaussian sweep (``benchmarks/quant_error.py``), the tiny-LM
+accuracy proxy (``benchmarks/llm_accuracy.py``) and the calibration
+probe (``repro.calibrate.probe``) all import from here instead of
+carrying their own MSE/SQNR/output-error spellings.
+"""
 from __future__ import annotations
 
+from typing import Optional, Sequence
+
 import jax.numpy as jnp
+
+# the cross-format comparison set the paper sweeps (Fig. 3) and the
+# calibrator scores per site
+QDQ_FORMATS = ("hif4", "nvfp4", "nvfp4_pts", "mxfp4")
 
 
 def mse(x: jnp.ndarray, x_hat: jnp.ndarray) -> jnp.ndarray:
@@ -19,3 +32,47 @@ def sqnr_db(x: jnp.ndarray, x_hat: jnp.ndarray) -> jnp.ndarray:
 
 def max_abs_err(x: jnp.ndarray, x_hat: jnp.ndarray) -> jnp.ndarray:
     return jnp.max(jnp.abs(x.astype(jnp.float32) - x_hat.astype(jnp.float32)))
+
+
+METRICS = {"mse": mse, "rel_mse": rel_mse, "sqnr_db": sqnr_db,
+           "max_abs_err": max_abs_err}
+
+
+def qdq_error(x: jnp.ndarray, fmt: str, metric: str = "mse",
+              axis: int = -1) -> float:
+    """Direct-cast error of quantizing ``x`` to ``fmt`` (grouped along
+    ``axis``), under one of the named :data:`METRICS`. ``fmt='none'``
+    scores exactly zero error (except sqnr_db, which saturates)."""
+    if fmt in (None, "none", "bf16"):
+        return float(METRICS[metric](x, x))
+    from repro.core.formats import get_format
+
+    return float(METRICS[metric](x, get_format(fmt).qdq(x, axis=axis)))
+
+
+def format_error_table(x: jnp.ndarray,
+                       formats: Sequence[str] = QDQ_FORMATS,
+                       metric: str = "mse", axis: int = -1) -> dict:
+    """``{fmt: error}`` over the comparison set — the Fig. 3 inner loop
+    and the calibrator's per-site score row share this helper."""
+    return {f: qdq_error(x, f, metric=metric, axis=axis) for f in formats}
+
+
+def rel_output_error(w_ref: jnp.ndarray, w_q: jnp.ndarray,
+                     x: jnp.ndarray) -> float:
+    """``||X (W - W_q)||_F / ||X W||_F`` — the layer-output error GPTQ
+    minimizes, and the per-site score the calibration frontier ranks by.
+    ``w`` is (K, N) contraction-major, ``x`` is (n_samples, K)."""
+    x = x.astype(jnp.float32)
+    num = jnp.linalg.norm(
+        x @ (w_ref.astype(jnp.float32) - w_q.astype(jnp.float32)))
+    den = jnp.linalg.norm(x @ w_ref.astype(jnp.float32))
+    return float(num / jnp.maximum(den, 1e-30))
+
+
+def agreement(preds: jnp.ndarray, ref_preds: Optional[jnp.ndarray]) -> float:
+    """Fraction of predictions agreeing with a reference run (1.0 when no
+    reference is supplied — the bf16 row agrees with itself)."""
+    if ref_preds is None:
+        return 1.0
+    return float(jnp.mean(preds == ref_preds))

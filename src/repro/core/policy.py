@@ -212,11 +212,29 @@ class QuantPlan:
 
 @dataclasses.dataclass(frozen=True)
 class QuantPolicy:
-    """Ordered per-site quantization rules + the cache-global KV format."""
+    """Ordered per-site quantization rules + the cache-global KV format.
+
+    ``provenance`` records WHERE a policy came from when it was not
+    hand-written — the calibration emitter (``repro.calibrate``) stamps
+    the search that produced it (arch, calibration set, target budget,
+    achieved bytes/value) so a searched policy file is auditable and the
+    serving artifact it rides in says how its placement was chosen. It is
+    stored as a canonical JSON string (policies are frozen/hashable and
+    ride into jit cache keys; a dict field would break that) — read it
+    via :meth:`provenance_dict`, attach via :meth:`with_provenance`.
+    """
 
     rules: tuple = ()  # tuple[QuantRule, ...]
     kv: KVCacheConfig = KVCacheConfig()
     name: str = "custom"
+    provenance: Optional[str] = None
+
+    def with_provenance(self, meta: dict) -> "QuantPolicy":
+        return dataclasses.replace(
+            self, provenance=json.dumps(meta, sort_keys=True))
+
+    def provenance_dict(self) -> Optional[dict]:
+        return None if self.provenance is None else json.loads(self.provenance)
 
     @classmethod
     def uniform(cls, cfg: QuantConfig, name: Optional[str] = None
@@ -324,6 +342,12 @@ class QuantPolicy:
 
     # -- serialization ------------------------------------------------------
 
+    # every top-level key a policy JSON may carry; from_json_dict rejects
+    # anything else loudly (a typo'd "rulse" must not silently yield the
+    # default policy)
+    JSON_KEYS = frozenset({"name", "kv_format", "rules", "provenance"})
+    _RULE_JSON_KEYS = frozenset({"pattern", "fmt", "impl", "weights_only"})
+
     def to_json_dict(self) -> dict:
         rules = []
         for r in self.rules:
@@ -335,19 +359,38 @@ class QuantPolicy:
             if r.weights_only is not None:
                 d["weights_only"] = r.weights_only
             rules.append(d)
-        return {"name": self.name, "kv_format": self.kv.kv_format,
-                "rules": rules}
+        out = {"name": self.name, "kv_format": self.kv.kv_format,
+               "rules": rules}
+        if self.provenance is not None:
+            out["provenance"] = json.loads(self.provenance)
+        return out
 
     @classmethod
     def from_json_dict(cls, d: dict) -> "QuantPolicy":
-        rules = tuple(
-            QuantRule(pattern=r["pattern"], fmt=r.get("fmt"),
-                      impl=r.get("impl"),
-                      weights_only=r.get("weights_only"))
-            for r in d["rules"]
-        )
-        return cls(rules=rules, kv=KVCacheConfig(d.get("kv_format", "bf16")),
-                   name=d.get("name", "custom"))
+        unknown = set(d) - cls.JSON_KEYS
+        if unknown:
+            raise ValueError(
+                f"policy JSON has unknown top-level key(s) "
+                f"{sorted(unknown)} (expected a subset of "
+                f"{sorted(cls.JSON_KEYS)}) — a typo here would otherwise "
+                f"silently yield the default policy")
+        rules = []
+        for r in d.get("rules", ()):
+            bad = set(r) - cls._RULE_JSON_KEYS
+            if bad:
+                raise ValueError(
+                    f"policy rule {r.get('pattern', r)!r} has unknown "
+                    f"key(s) {sorted(bad)} (expected a subset of "
+                    f"{sorted(cls._RULE_JSON_KEYS)})")
+            rules.append(QuantRule(pattern=r["pattern"], fmt=r.get("fmt"),
+                                   impl=r.get("impl"),
+                                   weights_only=r.get("weights_only")))
+        prov = d.get("provenance")
+        return cls(rules=tuple(rules),
+                   kv=KVCacheConfig(d.get("kv_format", "bf16")),
+                   name=d.get("name", "custom"),
+                   provenance=None if prov is None
+                   else json.dumps(prov, sort_keys=True))
 
 
 def _leaf_key(k) -> str:

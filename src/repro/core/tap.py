@@ -1,0 +1,122 @@
+"""Per-site activation tap: capture the inputs quantized matmuls consume.
+
+The calibration probe (``repro.calibrate.probe``) needs, for every
+quantization site the policy governs, the REAL activation rows that
+site's contraction reads — GPTQ Hessians and output-error scores are
+only meaningful for the layer's true input distribution. Rather than
+re-implementing each family's forward with capture plumbing (the route
+``benchmarks/llm_accuracy.py`` took for the dense transformer), the tap
+rides the existing per-site config path:
+
+* :meth:`repro.models.common.ModelCtx.site_quant` MARKS the tap with the
+  resolved site path (it is evaluated as an argument of the very dense()/
+  qbmm call whose input we want);
+* the engine funnel (``repro.core.engine.matmul`` / ``qdq_einsum``)
+  CONSUMES the pending mark and records the activation operand, flattened
+  to ``(rows, K)`` along the contraction axis.
+
+Because every model-side linear goes through the funnel, the same two
+hooks cover dense, MoE (batched-expert einsums), and Mamba projections
+without touching a single call site.
+
+Capture is host-side and CONCRETE-ONLY: the probe runs its forward under
+``jax.disable_jit()`` so ``lax.scan`` executes eagerly and the stacked
+block sites record one entry per layer, in layer order (entry ``b*L + l``
+of a site's record list is batch ``b``, layer ``l``). A tap reached by a
+tracer raises instead of silently recording nothing. Expected contraction
+widths (``expect_k``) guard against mis-attribution from a stale mark: a
+``site_quant`` call with no following matmul (e.g. a dispatch probe)
+leaves a pending path that the next funnel entry would otherwise adopt.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+import numpy as np
+
+_ACTIVE: Optional["ActivationTap"] = None
+
+
+class ActivationTap:
+    """Accumulates per-site activation rows during an eager forward.
+
+    ``expect_k`` maps site path -> contraction width K; records whose
+    flattened row width disagrees are dropped (stale-mark guard).
+    ``max_rows`` caps the rows kept per record (deterministic stride
+    subsample) so long prompts don't balloon host memory.
+    """
+
+    def __init__(self, expect_k: Optional[dict] = None, max_rows: int = 512):
+        self.expect_k = dict(expect_k or {})
+        self.max_rows = max_rows
+        self.records: dict = {}      # path -> [np.ndarray (rows, K), ...]
+        self._pending: Optional[str] = None
+
+    # -- mark/consume handshake (trace-order, eager-only capture) ----------
+
+    def mark(self, path: str) -> None:
+        self._pending = path
+
+    def consume(self, x, contract_axis: int) -> None:
+        path, self._pending = self._pending, None
+        if path is None:
+            return
+        if isinstance(x, jax.core.Tracer):
+            raise RuntimeError(
+                "ActivationTap reached by a tracer — run the probe forward "
+                "under jax.disable_jit() (capture is host-side and eager)")
+        rows = np.moveaxis(np.asarray(x, np.float32), contract_axis, -1)
+        rows = rows.reshape(-1, rows.shape[-1])
+        want = self.expect_k.get(path)
+        if want is not None and rows.shape[1] != want:
+            return                     # stale mark: widths disagree, drop
+        if rows.shape[0] > self.max_rows:
+            stride = -(-rows.shape[0] // self.max_rows)
+            rows = rows[::stride]
+        self.records.setdefault(path, []).append(rows)
+
+    # -- probe-side accessors ---------------------------------------------
+
+    def paths(self) -> list:
+        return sorted(self.records)
+
+    def rows(self, path: str, layer: Optional[int] = None,
+             n_layers: int = 1) -> np.ndarray:
+        """Pooled ``(n, K)`` rows for ``path``. Stacked sites record one
+        entry per layer per forward (layer-major within a forward, see
+        module docstring); ``layer``/``n_layers`` select one layer's
+        entries, ``layer=None`` pools all of them."""
+        recs = self.records[path]
+        if layer is not None:
+            recs = recs[layer::n_layers]
+        return np.concatenate(recs, axis=0)
+
+
+def active() -> Optional[ActivationTap]:
+    return _ACTIVE
+
+
+def mark_site(path: str) -> None:
+    """no-op unless a tap is installed (the ModelCtx.site_quant hook)."""
+    if _ACTIVE is not None:
+        _ACTIVE.mark(path)
+
+
+def consume_pending(x, contract_axis: int) -> None:
+    """no-op unless a tap is installed (the engine-funnel hook)."""
+    if _ACTIVE is not None:
+        _ACTIVE.consume(x, contract_axis)
+
+
+@contextlib.contextmanager
+def capture(t: ActivationTap):
+    """Install ``t`` for the duration of a probe forward (not reentrant)."""
+    global _ACTIVE
+    assert _ACTIVE is None, "an ActivationTap is already installed"
+    _ACTIVE = t
+    try:
+        yield t
+    finally:
+        _ACTIVE = None

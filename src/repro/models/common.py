@@ -8,6 +8,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import engine
+from repro.core import tap as site_tap
 from repro.core.policy import QuantPlan, uniform_site_config
 from repro.core.qlinear import NO_QUANT, QuantConfig
 from repro.sharding.rules import NO_SHARD, ShardCtx
@@ -63,6 +64,10 @@ class ModelCtx:
         """The QuantConfig the linear layer at ``site`` executes under
         (``site`` is relative to :attr:`scope`, e.g. "attn.wq")."""
         path = f"{self.scope}.{site}" if self.scope else site
+        # calibration probe: mark the activation tap with the site path the
+        # next engine contraction executes under (no-op without a tap —
+        # see repro.core.tap)
+        site_tap.mark_site(path)
         if self.plan is not None:
             return self.plan.at(path)
         return uniform_site_config(self.quant, path)

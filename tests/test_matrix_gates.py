@@ -72,6 +72,20 @@ def _synthetic_record():
         "repeats": 7,
         "ratio_gates": matrix.compute_ratio_gates(by_name),
         "cells": cells,
+        # the searched-policy cell's calibration summary the
+        # searched_policy_frontier gate inspects (build_calibration output)
+        "calibration": {
+            "cell": matrix.CALIBRATION_CELL,
+            "policy": matrix.SEARCHED_POLICY,
+            "arch": "qwen1.5-0.5b",
+            "target": matrix.CALIBRATION_BASELINE,
+            "budget_met": True,
+            "n_sites": 7,
+            "searched": {"total_bytes": 325632, "total_error": 11517.0,
+                         "bpv": 0.9937},
+            "baseline": {"total_bytes": 325632, "total_error": 13626.0,
+                         "bpv": 0.9937},
+        },
     }
 
 
@@ -204,6 +218,25 @@ def test_doctored_recovery_missing_timing_fails(record):
                 if c["name"] == matrix.RECOVERY_CELL)
     del cell["recovery"]["recovery_ms"]
     with pytest.raises(AssertionError, match="recovery_ms"):
+        matrix.check(record)
+
+
+def test_doctored_missing_calibration_section_fails(record):
+    del record["calibration"]
+    with pytest.raises(AssertionError, match="searched_policy_frontier"):
+        matrix.check(record)
+
+
+def test_doctored_calibration_over_budget_fails(record):
+    record["calibration"]["budget_met"] = False
+    with pytest.raises(AssertionError, match="searched_policy_frontier"):
+        matrix.check(record)
+
+
+def test_doctored_searched_worse_than_baseline_fails(record):
+    record["calibration"]["searched"]["total_error"] = (
+        record["calibration"]["baseline"]["total_error"] + 1.0)
+    with pytest.raises(AssertionError, match="searched_policy_frontier"):
         matrix.check(record)
 
 
